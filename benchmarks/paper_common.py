@@ -1,0 +1,48 @@
+"""Shared benchmark plumbing: datasets, thresholds, timing, CSV rows.
+
+Scale: SISAP-size runs take hours on this 1-core container; default sizes
+are reduced (documented in every row) — set REPRO_BENCH_FULL=1 for the
+paper-size datasets.  All *relative* paper claims are scale-stable (verified
+at two scales in tests/test_paper_claims.py).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import tree
+from repro.data import metricsets
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# name -> (n_points, n_queries, selectivity for t0)
+# Paper regime: t0 returns ~1 hit/query (0.001% colors; 1-per-million
+# euc10).  At reduced scale the selectivity is rescaled to keep ~1-2
+# hits/query, i.e. the same search-difficulty regime.
+SIZES = {
+    "colors": (112_682 if FULL else 20_000, 200, 1e-5 if FULL else 1e-4),
+    "nasa": (40_150 if FULL else 12_000, 200, 1e-5 if FULL else 1.5e-4),
+    "euc10": (100_000 if FULL else 20_000, 200, 1e-6 if FULL else 5e-5),
+}
+
+
+def load_space(name: str, seed: int = 0):
+    n, nq, sel = SIZES[name]
+    gen = metricsets.DATASETS[name][0]
+    data = gen(n, seed=seed)
+    db, q = metricsets.split_queries(data, 0.10, seed=seed + 1, max_queries=nq)
+    t = metricsets.calibrate_threshold("l2", db, sel, seed=seed)
+    return db, q, t
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0
+
+
+def row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,83 @@
+"""Paper §3 scatter-plot experiments (Fig. 4-7).
+
+(a) Fig. 5: 500 random queries over 8-d Euclidean space, threshold 0.145
+    (the paper's ~1-per-million radius): count queries that FAIL to exclude
+    the opposing semispace.  Paper: 160/500 fail under four-point vs 421/500
+    under hyperbolic.
+(b) Fig. 6-7: pivot-separation sensitivity — exclusion probability with the
+    most-separated vs least-separated of 1,000 sampled pivot pairs.  Paper:
+    four-point stays ~constant (0.66 vs "fairly constant"), hyperbolic
+    collapses to ~0 for close pivots.
+(c) the planar lower-bound property itself, measured: max violation over
+    random pairs must be <= 0 (+eps) for supermetric distances.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_common import row
+from repro.core import projection
+from repro.core.npdist import pairwise_np
+
+
+def _fail_counts(data, p1, p2, t):
+    delta = pairwise_np("l2", p1[None], p2[None])[0, 0]
+    d1 = pairwise_np("l2", data, p1[None])[:, 0]
+    d2 = pairwise_np("l2", data, p2[None])[:, 0]
+    hyper_fail = np.abs(d1 - d2) <= 2 * t
+    hilb_fail = np.abs(d1**2 - d2**2) / max(delta, 1e-12) <= 2 * t
+    return int(hyper_fail.sum()), int(hilb_fail.sum())
+
+
+def run(seed: int = 0) -> list[str]:
+    rng = np.random.default_rng(seed)
+    rows = []
+
+    # (a) Fig. 5 setting
+    pts = rng.random((502, 8))
+    p1, p2, queries = pts[0], pts[1], pts[2:]
+    t = 0.145
+    hyp, hil = _fail_counts(queries, p1, p2, t)
+    rows.append(row(
+        "scatter/fig5_exclusion_failures", 0.0,
+        f"hyperbolic_fail={hyp}/500;fourpoint_fail={hil}/500;"
+        f"paper=421_vs_160;t={t}",
+    ))
+
+    # (b) Fig. 6-7: pivot separation sensitivity
+    data = rng.random((5000, 8))
+    a = rng.integers(0, 5000, 1000)
+    b = rng.integers(0, 5000, 1000)
+    seps = np.array([
+        pairwise_np("l2", data[a[i]][None], data[b[i]][None])[0, 0]
+        for i in range(1000)
+    ])
+    for tag, i in (("far", int(np.argmax(seps))), ("close", int(np.argmin(seps)))):
+        p1, p2 = data[a[i]], data[b[i]]
+        hyp, hil = _fail_counts(data, p1, p2, t)
+        rows.append(row(
+            f"scatter/separation_{tag}", 0.0,
+            f"p_exclude_fourpoint={1 - hil / 5000:.3f};"
+            f"p_exclude_hyperbolic={1 - hyp / 5000:.3f};sep={seps[i]:.3f}",
+        ))
+
+    # (c) lower-bound validity (the §3 theorem, measured)
+    for metric in ("l2", "cosine", "jsd"):
+        x = rng.random((300, 12)) + 1e-3
+        if metric == "jsd":
+            x /= x.sum(axis=1, keepdims=True)
+        p1, p2, pts2 = x[0], x[1], x[2:]
+        delta = pairwise_np(metric, p1[None], p2[None])[0, 0]
+        d1 = pairwise_np(metric, pts2, p1[None])[:, 0]
+        d2 = pairwise_np(metric, pts2, p2[None])[:, 0]
+        px, py = np.asarray(projection.project(d1, d2, delta))
+        true = pairwise_np(metric, pts2, pts2)
+        planar = np.sqrt((px[:, None] - px[None, :]) ** 2
+                         + (py[:, None] - py[None, :]) ** 2)
+        rows.append(row(
+            f"scatter/lower_bound_{metric}", 0.0,
+            f"max_violation={float(np.max(planar - true)):.2e};"
+            f"mean_tightness={float(np.mean(planar / np.maximum(true, 1e-9))):.3f}",
+        ))
+    return rows

@@ -1,0 +1,48 @@
+"""Controlled unbalancing — the paper's §6 FUTURE WORK, implemented.
+
+"it should be possible to construct a controlled unbalancing which will
+outperform the randomly unbalanced index structure" (§6).  We sweep the
+split quantile q of the LRT/median trees: q=0.5 is the paper's balanced
+tree; q != 0.5 deterministically skews every node.  The sweep tests the
+paper's conjecture against the serendipitously-unbalanced 'closer' tree.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_common import load_space, row, timed
+from repro.core import lrt
+
+
+def run(datasets=("colors", "nasa"), seed: int = 0) -> list[str]:
+    rows = []
+    for ds in datasets:
+        db, q, t = load_space(ds, seed=seed)
+        results = {}
+        for quant in (0.3, 0.4, 0.5, 0.6, 0.7):
+            tr = lrt.build_monotone_tree(
+                "lrt", "far", "l2", db, seed=seed + 3, split_quantile=quant
+            )
+            (hits, counter), dt = timed(
+                lrt.range_search_monotone, tr, q, t, "hilbert"
+            )
+            results[quant] = counter.mean
+            rows.append(row(
+                f"unbalance/{ds}/lrt_q{quant}", dt / len(q) * 1e6,
+                f"dists_per_query={counter.mean:.1f};depth={tr.max_depth}",
+            ))
+        tr = lrt.build_monotone_tree("closer", "far", "l2", db, seed=seed + 3)
+        (_, counter), dt = timed(lrt.range_search_monotone, tr, q, t, "hilbert")
+        rows.append(row(
+            f"unbalance/{ds}/closer_random_skew", dt / len(q) * 1e6,
+            f"dists_per_query={counter.mean:.1f};depth={tr.max_depth}",
+        ))
+        best_q = min(results, key=results.get)
+        rows.append(row(
+            f"unbalance/{ds}/summary", 0.0,
+            f"best_q={best_q};best={results[best_q]:.1f};"
+            f"balanced={results[0.5]:.1f};random_skew={counter.mean:.1f};"
+            f"paper_conjecture_holds={results[best_q] < counter.mean}",
+        ))
+    return rows

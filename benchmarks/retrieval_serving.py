@@ -1,0 +1,56 @@
+"""End-to-end retrieval serving: two-tower model -> supermetric index ->
+exact top-k / range queries (the paper's technique as a production serving
+feature; see serve/retrieval.py).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.paper_common import row
+from repro.configs.registry import get_arch
+from repro.core.npdist import pairwise_np
+from repro.serve.retrieval import RetrievalServer
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def run(seed: int = 0) -> list[str]:
+    corpus_n = 1_000_000 if FULL else 30_000
+    nq, k = 128, 10
+    bundle = get_arch("two-tower-retrieval")
+    model, cfg, _ = bundle.make_reduced()
+    params = model.init_params(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    item_ids = rng.integers(0, cfg.vocab, size=(corpus_n, cfg.n_item_fields))
+    user_ids = rng.integers(0, cfg.vocab, size=(nq, cfg.n_user_fields))
+    corpus = np.asarray(model.item_embed(params, item_ids))
+    users = np.asarray(model.user_embed(params, user_ids))
+
+    t0 = time.time()
+    server = RetrievalServer(corpus, n_pivots=16, n_pairs=24)
+    build_s = time.time() - t0
+
+    t0 = time.time()
+    top = server.top_k(users, k)
+    dt = time.time() - t0
+
+    # exactness: compare against brute force on a query subsample
+    sub = min(32, nq)
+    d = pairwise_np("l2", users[:sub], server.corpus)
+    ok = 0
+    for i in range(sub):
+        want = set(np.argsort(d[i])[:k].tolist())
+        ok += len(want & set(np.asarray(top[i]).tolist()))
+    recall = ok / (sub * k)
+
+    s = server.stats
+    return [row(
+        "retrieval/two_tower_topk", dt / nq * 1e6,
+        f"recall_at_{k}={recall:.4f};dists_per_query={s.dists_per_query:.0f};"
+        f"corpus={corpus_n};pruned={100 * s.saving:.1f}%;build_s={build_s:.1f}",
+    )]

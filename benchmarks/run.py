@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure + the beyond-paper
+engines.  Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run trees lrt  # subset
+    REPRO_BENCH_FULL=1 ... for paper-size datasets (hours on 1 CPU core)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bss_engine,
+        paper_lrt,
+        paper_scatter,
+        paper_trees,
+        paper_unbalance,
+        retrieval_serving,
+        roofline,
+    )
+
+    suites = {
+        "scatter": paper_scatter.run,     # Fig. 4-7
+        "trees": paper_trees.run,         # Fig. 12-13
+        "lrt": paper_lrt.run,             # Fig. 15-16 (§5)
+        "unbalance": paper_unbalance.run,  # §6 future work, implemented
+        "bss": bss_engine.run,            # beyond-paper TPU engine
+        "retrieval": retrieval_serving.run,  # serving integration
+        "roofline": roofline.run,         # dry-run derived terms
+    }
+    pick = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in pick:
+        t0 = time.time()
+        try:
+            for r in suites[name]():
+                print(r, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"# suite {name} finished in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

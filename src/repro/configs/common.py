@@ -1,0 +1,298 @@
+"""Config substrate: architecture bundles and dry-run cells.
+
+An ArchBundle knows how to produce, for every assigned input shape:
+  * ShapeDtypeStruct input trees (no allocation — dry-run contract),
+  * input PartitionSpecs for a given mesh,
+  * the step function to lower (train_step / prefill / decode / serve),
+and how to build a REDUCED version of itself for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel.sharding import dp_axes
+
+SKIP_PURE_FULL_ATTENTION = (
+    "long_500k requires sub-quadratic attention; this arch is pure full "
+    "attention (assignment rule: skip + note in DESIGN.md)"
+)
+
+
+@dataclasses.dataclass
+class Cell:
+    shape_name: str
+    kind: str  # train | prefill | decode | serve
+    # inputs() -> pytree of ShapeDtypeStruct (the *batch*, not params)
+    inputs: Callable[[], Any]
+    # input_partition(mesh) -> matching pytree of PartitionSpec
+    input_partition: Callable[[Mesh], Any]
+    skip: str | None = None
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchBundle:
+    name: str
+    family: str  # lm | gnn | recsys
+    cfg: Any
+    model: Any
+    cells: dict[str, Cell]
+    # reduced-config smoke artifacts
+    make_reduced: Callable[[], tuple[Any, Any, Callable]]
+    # (model, cfg, batch_fn(rng) -> concrete reduced batch)
+    # per-cell model override (GNN heads differ per dataset shape)
+    cell_model: Callable[[str], Any] | None = None
+
+    def model_for(self, cell_name: str):
+        if self.cell_model is not None:
+            return self.cell_model(cell_name)
+        return self.model
+
+    def loss_fn(self, model=None):
+        return loss_for(self.family, model if model is not None else self.model)
+
+
+def loss_for(family: str, model) -> Callable:
+    if family == "recsys":
+        from repro.models import recsys as R
+
+        if model.cfg.kind == "two_tower":
+            return model.loss_fn
+        return lambda p, b: R.bce_loss(model, p, b)
+    return model.loss_fn
+
+
+# --------------------------------------------------------------------- LM
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def lm_cells(cfg, model, *, pure_full_attention: bool) -> dict[str, Cell]:
+    cells = {}
+    for shape_name, s in LM_SHAPES.items():
+        kind, seq, batch = s["kind"], s["seq"], s["batch"]
+        skip = None
+        if shape_name == "long_500k" and pure_full_attention:
+            skip = SKIP_PURE_FULL_ATTENTION
+
+        if kind == "train":
+
+            def inputs(seq=seq, batch=batch):
+                return {"tokens": jax.ShapeDtypeStruct((batch, seq + 1), jnp.int32)}
+
+            def ipart(mesh):
+                return {"tokens": P(dp_axes(mesh), None)}
+
+        elif kind == "prefill":
+
+            def inputs(seq=seq, batch=batch):
+                return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+
+            def ipart(mesh):
+                return {"tokens": P(dp_axes(mesh), None)}
+
+        else:  # decode: batch + cache handled by the launcher
+
+            def inputs(seq=seq, batch=batch):
+                return {
+                    "token": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                }
+
+            def ipart(mesh, batch=batch):
+                tok = P(dp_axes(mesh), None) if batch > 1 else P(None, None)
+                return {"token": tok, "pos": P()}
+
+        cells[shape_name] = Cell(shape_name, kind, inputs, ipart, skip=skip)
+    return cells
+
+
+def lm_reduced(cfg_cls, model_cls, **overrides):
+    """Tiny same-family config + synthetic batch for CPU smoke."""
+
+    def make():
+        cfg = cfg_cls(**overrides)
+        model = model_cls(cfg)
+
+        def batch_fn(rng):
+            return {
+                "tokens": jax.random.randint(rng, (2, 33), 0, cfg.vocab)
+            }
+
+        return model, cfg, batch_fn
+
+    return make
+
+
+# --------------------------------------------------------------------- GNN
+
+def _pad512(x: int) -> int:
+    return -(-x // 512) * 512
+
+
+GNN_SHAPES = {
+    # exact assignment numbers, padded to a multiple of 512 so node/edge
+    # arrays shard evenly on both production meshes (padding is masked out
+    # via label_mask / degree-0 nodes — standard pipeline practice).
+    "full_graph_sm": dict(n=2708, e=10556, f=1433, classes=7),
+    "minibatch_lg": dict(
+        n=1024 + 1024 * 15 + 1024 * 15 * 10, e=1024 * 15 + 1024 * 15 * 10,
+        f=602, classes=41,
+        note="reddit-scale sampled subgraph: 1,024 seeds, fanout 15-10 "
+             "(232,965 nodes / 114,615,892 edges in the full graph)",
+    ),
+    "ogb_products": dict(n=2_449_029, e=61_859_140, f=100, classes=47),
+    "molecule": dict(
+        n=30 * 128, e=64 * 128, f=16, classes=2,
+        graphs=128, note="128 small graphs batched block-diagonally",
+    ),
+}
+
+
+GNN_EDGE_BLOCKS = 512  # dst-partitioned edge layout: one row per node block
+
+
+def gnn_cells(cfg) -> dict[str, Cell]:
+    """PNA shape set (see configs/pna.py for the exact numbers).
+
+    Edges use the dst-partitioned layout (S=512 blocks x E_loc, 5% skew
+    slack) — see PNAModel._forward_partitioned for why."""
+    cells = {}
+    for name, s in GNN_SHAPES.items():
+        e_loc = -(-int(s["e"] * 1.05 // GNN_EDGE_BLOCKS) // 8) * 8 + 8
+
+        def inputs(s=s, e_loc=e_loc):
+            n = _pad512(s["n"])
+            eshape = (GNN_EDGE_BLOCKS, e_loc)
+            d = {
+                "x": jax.ShapeDtypeStruct((n, s["f"]), jnp.float32),
+                "edge_src": jax.ShapeDtypeStruct(eshape, jnp.int32),
+                "edge_dst_local": jax.ShapeDtypeStruct(eshape, jnp.int32),
+                "edge_valid": jax.ShapeDtypeStruct(eshape, jnp.bool_),
+            }
+            if "graphs" in s:
+                d["graph_id"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+                d["labels"] = jax.ShapeDtypeStruct((s["graphs"],), jnp.int32)
+            else:
+                d["labels"] = jax.ShapeDtypeStruct((n,), jnp.int32)
+                d["label_mask"] = jax.ShapeDtypeStruct((n,), jnp.float32)
+            return d
+
+        def ipart(mesh, s=s):
+            all_ax = dp_axes(mesh) + ("model",)
+            nodes = P(all_ax)
+            edges = P(all_ax, None)
+            d = {
+                "x": P(all_ax, None),
+                "edge_src": edges,
+                "edge_dst_local": edges,
+                "edge_valid": edges,
+            }
+            if "graphs" in s:
+                d["graph_id"] = nodes
+                d["labels"] = P(None)
+            else:
+                d["labels"] = nodes
+                d["label_mask"] = nodes
+            return d
+
+        cells[name] = Cell(name, "train", inputs, ipart, note=s.get("note", ""))
+    return cells
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    out = 1
+    for a in axes:
+        out *= mesh.shape[a]
+    return out
+
+
+# ------------------------------------------------------------------ recsys
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="serve", batch=1, candidates=1_000_000),
+}
+
+
+def recsys_batch_sds(cfg, batch: int, candidates: int | None = None, train=False):
+    """ShapeDtypeStruct batch for each recsys model kind."""
+    k = cfg.kind
+    d = {}
+    if k == "wide_deep":
+        b = candidates or batch
+        d["sparse_ids"] = jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32)
+    elif k == "din":
+        b = candidates or batch
+        d["hist_ids"] = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.int32)
+        d["hist_valid"] = jax.ShapeDtypeStruct((b, cfg.hist_len), jnp.bool_)
+        d["target_id"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+    elif k == "two_tower":
+        d["user_ids"] = jax.ShapeDtypeStruct((batch, cfg.n_user_fields), jnp.int32)
+        if candidates:
+            d["candidates"] = jax.ShapeDtypeStruct(
+                (candidates, cfg.embed_dim), jnp.float32
+            )
+        else:
+            d["item_ids"] = jax.ShapeDtypeStruct((batch, cfg.n_item_fields), jnp.int32)
+    elif k == "dlrm":
+        b = candidates or batch
+        d["dense"] = jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32)
+        d["sparse_ids"] = jax.ShapeDtypeStruct((b, cfg.n_sparse), jnp.int32)
+    else:
+        raise ValueError(k)
+    if train and k != "two_tower":
+        b = candidates or batch
+        d["label"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+    return d
+
+
+def recsys_cells(cfg) -> dict[str, Cell]:
+    cells = {}
+    for name, s in RECSYS_SHAPES.items():
+        cand = s.get("candidates")
+
+        def inputs(s=s, cand=cand):
+            return recsys_batch_sds(cfg, s["batch"], cand, train=s["kind"] == "train")
+
+        def ipart(mesh, s=s, cand=cand):
+            dp = dp_axes(mesh)
+            eff = cand or s["batch"]
+            row = P(dp) if eff % _axsize(mesh, dp) == 0 else P(None)
+            sds = recsys_batch_sds(cfg, s["batch"], cand, train=s["kind"] == "train")
+            out = {}
+            for key, sd in sds.items():
+                if key == "candidates":
+                    # FEATURE-dim sharding: row gathers (incl. the pruned
+                    # variant's dynamic block gather) stay local; the dot
+                    # becomes a partial contraction + tiny all-reduce.
+                    # Row sharding instead makes GSPMD all-gather the whole
+                    # 1 GB table for the dynamic gather (measured).
+                    out[key] = P(None, "model")
+                elif key == "user_ids" and cand:
+                    out[key] = P(None, None)  # batch=1
+                else:
+                    out[key] = P(*(tuple(row) + (None,) * (len(sd.shape) - 1)))
+            return out
+
+        note = ""
+        if cand and cfg.kind != "two_tower":
+            note = (
+                "retrieval_cand for a CTR model = bulk-score 1M candidate rows "
+                "for one user (user features broadcast into each row)"
+            )
+        cells[name] = Cell(name, s["kind"], inputs, ipart, note=note)
+    return cells

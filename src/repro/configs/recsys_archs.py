@@ -1,0 +1,91 @@
+"""The four assigned recsys architectures — exact assignment configs.
+
+    wide-deep           n_sparse=40 embed_dim=32 mlp=1024-512-256
+                        interaction=concat            [arXiv:1606.07792]
+    din                 embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+                        interaction=target-attn       [arXiv:1706.06978]
+    two-tower-retrieval embed_dim=256 tower_mlp=1024-512-256 interaction=dot
+                        sampled-softmax               [RecSys'19 (YouTube)]
+    dlrm-rm2            n_dense=13 n_sparse=26 embed_dim=64
+                        bot_mlp=13-512-256-64 top_mlp=512-512-256-1
+                        interaction=dot               [arXiv:1906.00091]
+
+Vocabulary sizes are not pinned by the assignment; we use the 10^6-row
+regime from the public DLRM/Criteo literature (kernel_taxonomy §D.6) —
+documented here so the roofline numbers are reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import common
+from repro.models import recsys as R
+
+WIDE_DEEP = R.RecsysConfig(
+    name="wide-deep", kind="wide_deep", n_sparse=40, embed_dim=32,
+    mlp=(1024, 512, 256), vocab=1_000_000,
+)
+DIN = R.RecsysConfig(
+    name="din", kind="din", embed_dim=18, hist_len=100,
+    attn_mlp=(80, 40), mlp=(200, 80), vocab=1_000_000,
+)
+TWO_TOWER = R.RecsysConfig(
+    name="two-tower-retrieval", kind="two_tower", embed_dim=256,
+    tower_mlp=(1024, 512, 256), n_user_fields=8, n_item_fields=4,
+    vocab=1_000_000,
+)
+DLRM = R.RecsysConfig(
+    name="dlrm-rm2", kind="dlrm", n_dense=13, n_sparse=26, embed_dim=64,
+    bot_mlp=(512, 256, 64), mlp=(512, 512, 256), vocab=1_000_000,
+)
+
+_MODEL_CLS = {
+    "wide_deep": R.WideDeepModel,
+    "din": R.DINModel,
+    "two_tower": R.TwoTowerModel,
+    "dlrm": R.DLRMModel,
+}
+
+
+def _make_reduced_fn(cfg):
+    def make():
+        small = dataclasses.replace(
+            cfg, name=cfg.name + "-smoke", vocab=997, dtype=jnp.float32
+        )
+        model = _MODEL_CLS[cfg.kind](small)
+
+        def batch_fn(rng):
+            sds = common.recsys_batch_sds(small, batch=16, train=True)
+            rngs = jax.random.split(rng, len(sds))
+            out = {}
+            for k_rng, (key, sd) in zip(rngs, sds.items()):
+                if sd.dtype == jnp.int32:
+                    out[key] = jax.random.randint(k_rng, sd.shape, 0, small.vocab)
+                elif sd.dtype == jnp.bool_:
+                    out[key] = jnp.ones(sd.shape, jnp.bool_)
+                else:
+                    out[key] = jax.random.uniform(k_rng, sd.shape, jnp.float32)
+            return out
+
+        return model, small, batch_fn
+
+    return make
+
+
+def bundles() -> dict:
+    out = {}
+    for cfg in (WIDE_DEEP, DIN, TWO_TOWER, DLRM):
+        model = _MODEL_CLS[cfg.kind](cfg)
+        out[cfg.name] = common.ArchBundle(
+            name=cfg.name,
+            family="recsys",
+            cfg=cfg,
+            model=model,
+            cells=common.recsys_cells(cfg),
+            make_reduced=_make_reduced_fn(cfg),
+        )
+    return out

@@ -1,0 +1,42 @@
+"""Architecture registry: ``--arch <id>`` resolution for all launchers.
+
+Per-arch modules (one file per assigned architecture, exact configs inside):
+    configs/phi3_5_moe.py  configs/kimi_k2.py  configs/gemma2_9b.py
+    configs/deepseek_coder_33b.py  configs/llama3_2_1b.py
+    configs/pna.py
+    configs/wide_deep.py  configs/din.py  configs/two_tower.py  configs/dlrm_rm2.py
+plus the paper's own workload: configs/supermetric.py (metric-search corpus).
+"""
+
+from __future__ import annotations
+
+from repro.configs import lm_archs, pna, recsys_archs
+from repro.configs.common import ArchBundle
+
+_REGISTRY: dict[str, ArchBundle] | None = None
+
+
+def registry() -> dict[str, ArchBundle]:
+    global _REGISTRY
+    if _REGISTRY is None:
+        _REGISTRY = {}
+        _REGISTRY.update(lm_archs.bundles())
+        _REGISTRY.update(pna.bundles())
+        _REGISTRY.update(recsys_archs.bundles())
+    return _REGISTRY
+
+
+def get_arch(name: str) -> ArchBundle:
+    reg = registry()
+    if name not in reg:
+        raise KeyError(f"unknown arch {name!r}; have: {sorted(reg)}")
+    return reg[name]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """Every (arch, shape) pair — the 40-cell dry-run matrix."""
+    out = []
+    for name, b in registry().items():
+        for cell in b.cells:
+            out.append((name, cell))
+    return out

@@ -1,0 +1,14 @@
+"""Supermetric search core — the paper's contribution as a composable library.
+
+Layers:
+  distances   metrics + four-point classification (jnp, batched)
+  npdist      host-side twins used by tree build / distance-counted replay
+  projection  tetrahedral planar projection + lower bound (paper §3)
+  exclusion   Hyperbolic vs Hilbert rules; general planar partitions
+  refpoints   pivot selection (random / FFT / maxsep / outlier)
+  tree        12 hyperplane partition-tree variants (paper §4)
+  lrt         monotone binary trees incl. the Linear Regression Tree (§5)
+  flat_index  Blocked Supermetric Scan — TPU-native engine (DESIGN.md §2)
+"""
+
+from repro.core import distances, exclusion, flat_index, lrt, projection, refpoints, tree  # noqa: F401

@@ -1,0 +1,126 @@
+"""Exclusion rules: Hyperbolic (triangle-inequality) vs Hilbert (four-point),
+plus the fully general *linear planar partition* family (paper §3.2-3.4).
+
+Conventions
+-----------
+A binary partition at a tree node is described by a **signed margin**
+function ``m(point) -> R``: points with ``m < split`` go left, ``m >= split``
+go right.  At query time the engine computes ``m(q)`` and uses a *sound
+separation bound* ``sep(q)`` such that
+
+    sep(q) > t   and  q on the right  ==>  no solution on the left
+    (symmetrically for the other side)
+
+For **Hilbert** rules the margin is a geometric coordinate in the projected
+plane, and ``sep = |m(q) - split|`` is sound because planar distances lower-
+bound true distances (four-point property).  Any unit-direction linear
+functional of the plane works — x-split, y-split, PCA axis, regression axis.
+
+For **Hyperbolic** rules (no four-point property assumed) the only sound
+bound for the closer-of-two-pivots partition is
+``sep = |d(q,p1) - d(q,p2)| / 2`` (condition ``|d1-d2| > 2t``).
+
+Cover-radius ("ball") exclusion is independent of both and always sound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import projection
+
+__all__ = [
+    "HYPERBOLIC",
+    "HILBERT",
+    "PlanarPartition",
+    "hyperbolic_margin",
+    "hilbert_margin",
+    "hyperplane_exclusion_mask",
+]
+
+HYPERBOLIC = "hyperbolic"
+HILBERT = "hilbert"
+
+
+def hyperbolic_margin(d1: jnp.ndarray, d2: jnp.ndarray) -> jnp.ndarray:
+    """Signed triangle-inequality margin for the closer-pivot partition.
+
+    ``(d1 - d2)/2``: negative => closer to p1 (left).  A query may exclude
+    the opposite side iff |margin| > t.  (paper: |d(q,p1)-d(q,p2)| > 2t)
+    """
+    return 0.5 * (jnp.asarray(d1, jnp.float32) - jnp.asarray(d2, jnp.float32))
+
+
+def hilbert_margin(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> jnp.ndarray:
+    """Signed four-point margin: the planar X coordinate
+    ``(d1^2 - d2^2) / (2 d(p1,p2))``.  Same sign convention; exclusion of the
+    opposite side iff |margin| > t (paper: (d1^2-d2^2)/delta > 2t)."""
+    return projection.project_x(d1, d2, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanarPartition:
+    """A linear partition of the projected plane (general Hilbert-style rule).
+
+    margin(point) = nx * r_x + ny * r_y   where (r_x, r_y) = rotate(proj(s))
+
+    ``(nx, ny)`` must be a unit vector (so the margin is a true planar
+    coordinate and |margin(q) - split| lower-bounds the planar — hence true —
+    distance from q to the partition boundary).
+
+    Instances cover the paper's menagerie:
+      * x-split (Hilbert/GHT):      nx=1, ny=0, theta=0, h=0
+      * y-split ("height"):         nx=0, ny=1
+      * LRT:  rotate by theta around (h, 0), then x-split at median
+      * PCA axis split: theta = principal direction angle
+    """
+
+    theta: float = 0.0
+    h: float = 0.0
+    nx: float = 1.0
+    ny: float = 0.0
+    split: float = 0.0
+
+    def margin(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        rx, ry = projection.rotate(x, y, self.theta, self.h)
+        return self.nx * rx + self.ny * ry - self.split
+
+    def separation(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+        return jnp.abs(self.margin(x, y))
+
+
+def hyperplane_exclusion_mask(
+    dq: jnp.ndarray,
+    ref_dists: jnp.ndarray,
+    t: float,
+    mechanism: str,
+) -> jnp.ndarray:
+    """Pairwise hyperplane exclusion over an n-ary node (paper Alg. 2).
+
+    Args:
+      dq:        (..., k) distances from query/queries to the k reference
+                 points of a node.
+      ref_dists: (k, k) pairwise distances among the reference points
+                 (only used by Hilbert; computed at build time).
+      t:         query threshold.
+      mechanism: HYPERBOLIC or HILBERT.
+
+    Returns:
+      (..., k) boolean mask, True where child x can be EXCLUDED: exists y
+      with  d(q,px) - d(q,py) > 2t          (hyperbolic)
+      or    (d(q,px)^2 - d(q,py)^2)/d(px,py) > 2t   (Hilbert).
+    """
+    dx = dq[..., :, None]  # (..., k, 1) candidate-to-exclude x
+    dy = dq[..., None, :]  # (..., 1, k) witness y
+    if mechanism == HYPERBOLIC:
+        crit = dx - dy > 2.0 * t
+    elif mechanism == HILBERT:
+        delta = jnp.maximum(ref_dists, 1e-12)  # (k, k)
+        crit = (dx * dx - dy * dy) / delta > 2.0 * t
+    else:
+        raise ValueError(f"unknown mechanism {mechanism!r}")
+    k = dq.shape[-1]
+    off_diag = ~jnp.eye(k, dtype=bool)
+    return jnp.any(crit & off_diag, axis=-1)

@@ -1,0 +1,107 @@
+"""Tetrahedral projection onto a plane (paper §3) — the core geometric tool.
+
+Given two pivots ``p1, p2`` with inter-pivot distance ``delta`` and a point
+``s`` with measured distances ``d1 = d(s, p1)``, ``d2 = d(s, p2)``, the point
+projects to the apex of the triangle with base
+``p1 = (-delta/2, 0), p2 = (+delta/2, 0)``:
+
+    x = (d1^2 - d2^2) / (2 * delta)
+    y = sqrt(max(d1^2 - (x + delta/2)^2, 0))          (upper half-plane)
+
+**Lower-bound theorem (paper §3, Fig. 3/4).**  If the space has the
+four-point property then for any two points ``s, u``
+
+    l2( proj(s), proj(u) ) <= d(s, u)
+
+so any partition of the plane yields a sound exclusion rule: a query farther
+than ``t`` (in the plane) from a region cannot have solutions inside it.
+Hilbert exclusion is the special case of the vertical line ``x = 0``.
+
+All functions are batched/jit-friendly; shapes broadcast over leading dims.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "project",
+    "project_x",
+    "rotate",
+    "planar_lower_bound",
+    "point_to_interval",
+    "point_to_box",
+]
+
+
+def project(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Planar apex coordinates for distances (d1, d2) w.r.t. pivot gap delta.
+
+    Broadcasts over any leading shape.  Degenerate triangles (numerical noise
+    making d1 + d2 < delta) are clamped onto the X-axis, which keeps the
+    lower-bound property (clamping can only *reduce* planar distances).
+    """
+    d1 = jnp.asarray(d1, jnp.float32)
+    d2 = jnp.asarray(d2, jnp.float32)
+    delta = jnp.maximum(jnp.asarray(delta, jnp.float32), 1e-12)
+    x = (d1 * d1 - d2 * d2) / (2.0 * delta)
+    y_sq = d1 * d1 - (x + delta / 2.0) ** 2
+    y = jnp.sqrt(jnp.maximum(y_sq, 0.0))
+    return x, y
+
+
+def project_x(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> jnp.ndarray:
+    """X coordinate only — this is the Hilbert-exclusion quantity
+    ``(d1^2 - d2^2) / (2 delta)`` (signed distance to the separating
+    hyperplane's planar image)."""
+    d1 = jnp.asarray(d1, jnp.float32)
+    d2 = jnp.asarray(d2, jnp.float32)
+    delta = jnp.maximum(jnp.asarray(delta, jnp.float32), 1e-12)
+    return (d1 * d1 - d2 * d2) / (2.0 * delta)
+
+
+def rotate(x: jnp.ndarray, y: jnp.ndarray, theta, h) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Rotate planar points by ``-theta``-style LRT transform around the
+    X-intercept ``(h, 0)`` (paper Eq. 2-3):
+
+        r_x = (x - h) cos(theta) + y sin(theta)
+        r_y = -(x - h) sin(theta) + y cos(theta)
+
+    Note: the paper prints the rotation with the signs producing a rotation
+    by ``-theta``; what matters for correctness is that it is a *rigid*
+    transform (distance-preserving), so the lower-bound property survives.
+    """
+    c = jnp.cos(jnp.asarray(theta, jnp.float32))
+    s = jnp.sin(jnp.asarray(theta, jnp.float32))
+    xs = jnp.asarray(x, jnp.float32) - jnp.asarray(h, jnp.float32)
+    y = jnp.asarray(y, jnp.float32)
+    return xs * c + y * s, -xs * s + y * c
+
+
+def planar_lower_bound(
+    x1: jnp.ndarray, y1: jnp.ndarray, x2: jnp.ndarray, y2: jnp.ndarray
+) -> jnp.ndarray:
+    """l2 distance in the plane == lower bound on true distance (supermetric)."""
+    return jnp.sqrt((x1 - x2) ** 2 + (y1 - y2) ** 2)
+
+
+def point_to_interval(v: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    """Distance from scalar coordinate(s) to interval(s) [lo, hi] (0 inside)."""
+    return jnp.maximum(jnp.maximum(lo - v, v - hi), 0.0)
+
+
+def point_to_box(
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    box: jnp.ndarray,
+) -> jnp.ndarray:
+    """Planar distance from point(s) to axis-aligned box(es).
+
+    ``box[..., :] = (x_lo, x_hi, y_lo, y_hi)``.  Broadcasts.  Because the
+    planar metric lower-bounds the true metric, this is a sound lower bound
+    on the distance from the query to EVERY point whose projection lies in
+    the box — the Blocked Supermetric Scan's pruning primitive.
+    """
+    dx = point_to_interval(x, box[..., 0], box[..., 1])
+    dy = point_to_interval(y, box[..., 2], box[..., 3])
+    return jnp.sqrt(dx * dx + dy * dy)

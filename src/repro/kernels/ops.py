@@ -1,0 +1,69 @@
+"""Public jit'd entry points for the Pallas kernels, with automatic
+interpret-mode fallback off-TPU and shape-padding handled inside.
+
+``bss_lower_bounds_fused`` wires the kernels into the BSS index: one fused
+projection+bounding kernel, then (optionally) the masked pairwise kernel over
+survivors — the full TPU query path of DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_dist import (
+    masked_pairwise_l2_kernel_call,
+    pairwise_l2_kernel_call,
+)
+from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
+
+__all__ = [
+    "pairwise_l2",
+    "masked_pairwise_l2",
+    "planar_lower_bound",
+    "bss_query_fused",
+]
+
+pairwise_l2 = pairwise_l2_kernel_call
+masked_pairwise_l2 = masked_pairwise_l2_kernel_call
+planar_lower_bound = planar_lower_bound_kernel_call
+
+
+def bss_query_fused(
+    queries: jnp.ndarray,
+    pivots: jnp.ndarray,
+    pair_idx: jnp.ndarray,
+    deltas: jnp.ndarray,
+    boxes: jnp.ndarray,
+    data: jnp.ndarray,
+    t: float,
+    *,
+    block: int = 128,
+    bq: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full TPU-native BSS range query (dense masked form).
+
+    Returns (dist, tile_mask): dist (Q, N) with +inf where tiles were pruned,
+    tile_mask (Qtiles, B) the per-tile survival matrix.  Exact: every true
+    hit (d <= t) is guaranteed live by the four-point lower bound.
+    """
+    dqp = pairwise_l2_kernel_call(queries, pivots, interpret=interpret)  # (Q, P)
+    d1 = dqp[:, pair_idx[:, 0]]
+    d2 = dqp[:, pair_idx[:, 1]]
+    lb = planar_lower_bound_kernel_call(
+        d1, d2, deltas, boxes, bq=bq, interpret=interpret
+    )  # (Q, B)
+    qtiles = -(-queries.shape[0] // bq)
+    lb_pad = jnp.pad(lb, ((0, qtiles * bq - lb.shape[0]), (0, 0)), constant_values=jnp.inf)
+    tile_mask = (
+        lb_pad.reshape(qtiles, bq, -1).min(axis=1) <= t
+    )  # a tile survives if ANY of its queries does
+    dist = masked_pairwise_l2_kernel_call(
+        queries, data, tile_mask, bm=bq, bn=block, interpret=interpret
+    )
+    return dist, tile_mask
+
+from repro.kernels.jsd_dist import pairwise_jsd_kernel_call  # noqa: E402
+
+pairwise_jsd = pairwise_jsd_kernel_call
+__all__.append("pairwise_jsd")

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_l2_ref(x: jnp.ndarray, y: jnp.ndarray, squared: bool = False) -> jnp.ndarray:
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    sq = (
+        jnp.sum(x * x, axis=1)[:, None]
+        + jnp.sum(y * y, axis=1)[None, :]
+        - 2.0 * (x @ y.T)
+    )
+    sq = jnp.maximum(sq, 0.0)
+    return sq if squared else jnp.sqrt(sq)
+
+
+def masked_pairwise_l2_ref(
+    x: jnp.ndarray, y: jnp.ndarray, tile_mask: jnp.ndarray, bm: int, bn: int,
+    squared: bool = False,
+) -> jnp.ndarray:
+    d = pairwise_l2_ref(x, y, squared=squared)
+    mrep = jnp.repeat(jnp.repeat(tile_mask != 0, bm, axis=0), bn, axis=1)
+    mrep = mrep[: d.shape[0], : d.shape[1]]
+    return jnp.where(mrep, d, jnp.inf)
+
+
+def planar_lower_bound_ref(
+    d1: jnp.ndarray, d2: jnp.ndarray, deltas: jnp.ndarray, boxes: jnp.ndarray
+) -> jnp.ndarray:
+    d1 = d1.astype(jnp.float32)
+    d2 = d2.astype(jnp.float32)
+    delta = jnp.maximum(deltas.astype(jnp.float32)[None, :], 1e-12)
+    qx = (d1 * d1 - d2 * d2) / (2.0 * delta)
+    qy = jnp.sqrt(jnp.maximum(d1 * d1 - (qx + delta / 2.0) ** 2, 0.0))
+    qxe = qx[:, None, :]
+    qye = qy[:, None, :]
+    bx = boxes[None]
+    dx = jnp.maximum(jnp.maximum(bx[..., 0] - qxe, qxe - bx[..., 1]), 0.0)
+    dy = jnp.maximum(jnp.maximum(bx[..., 2] - qye, qye - bx[..., 3]), 0.0)
+    return jnp.max(jnp.sqrt(dx * dx + dy * dy), axis=-1)
+
+
+def pairwise_jsd_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    _EPS = 1e-12
+
+    def xlogx(v):
+        return jnp.where(v > _EPS, v * jnp.log(jnp.maximum(v, _EPS)), 0.0)
+
+    x = x.astype(jnp.float32)[:, None, :]
+    y = y.astype(jnp.float32)[None, :, :]
+    m = 0.5 * (x + y)
+    js = jnp.sum(0.5 * xlogx(x) + 0.5 * xlogx(y) - xlogx(m), axis=-1)
+    return jnp.sqrt(jnp.maximum(js, 0.0) / jnp.log(2.0))

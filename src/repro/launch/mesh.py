@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (device count is locked on first backend init, and only
+launch/dryrun.py is allowed to fake 512 host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds the 2-pod leading axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_local_mesh(model_parallel: int = 1):
+    """Mesh over whatever devices exist (tests / single-host runs / elastic
+    restarts: the mesh is derived from the LIVE device list)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

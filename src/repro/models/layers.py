@@ -1,0 +1,303 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full / sliding
+window / softcapped), SwiGLU MLP, and a sort-based (dropless-style) MoE with
+capacity bound — all pure jnp, pjit-shardable, scan-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "gqa_attention",
+    "swiglu",
+    "moe_block",
+    "softcap",
+]
+
+NEG_INF = -2.0e38
+
+
+def _axprod(axes) -> int:
+    """Product of mesh-axis sizes for the current abstract mesh (1 if none)."""
+    from jax.sharding import get_abstract_mesh
+
+    m = get_abstract_mesh()
+    if m is None or m.empty:
+        return 1
+    out = 1
+    for a in axes:
+        out *= dict(zip(m.axis_names, m.axis_sizes))[a]
+    return out
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0
+) -> jnp.ndarray:
+    """Rotary embedding.  x: (..., S, n, d_head), positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # (B, S, H, Dh)
+    k: jnp.ndarray,  # (B, T, KV, Dh)
+    v: jnp.ndarray,  # (B, T, KV, Dh)
+    q_positions: jnp.ndarray,  # (B, S) int32
+    kv_positions: jnp.ndarray,  # (B, T) int32
+    kv_valid: jnp.ndarray | None = None,  # (B, T) bool — cache occupancy
+    window: int | None = None,  # sliding window (local attention)
+    attn_softcap: float | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Causal grouped-query attention; supports decode (S=1, long T) and
+    train/prefill (S == T).  Softmax in fp32; outputs in q.dtype."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    scale = scale if scale is not None else dh**-0.5
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = softcap(scores, attn_softcap)
+    mask = q_positions[:, :, None] >= kv_positions[:, None, :]
+    if window is not None:
+        mask &= (q_positions[:, :, None] - kv_positions[:, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", probs.astype(v.dtype), v,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def gqa_attention_quantized(
+    q: jnp.ndarray,          # (B, S, H, Dh)
+    k_q: jnp.ndarray,        # (B, T, KV, Dh) int8
+    k_scale: jnp.ndarray,    # (B, T, KV) fp32, absmax/127 per (pos, head)
+    v_q: jnp.ndarray,
+    v_scale: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    kv_valid: jnp.ndarray | None = None,
+    window=None,
+    attn_softcap: float | None = None,
+) -> jnp.ndarray:
+    """Attention against an int8-quantised KV cache (KIVI-style per-token,
+    per-head scales).  The scales factor OUT of the dh contraction, so they
+    are applied to the score matrix / folded into the probabilities — the
+    dequantised cache is never materialised:
+
+        scores = (q . k_q) * k_scale[t]
+        out    = (probs * v_scale[t]) . v_q
+    """
+    b, s, h, dh = q.shape
+    kvh = k_q.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k_q.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ) * (dh**-0.5)
+    scores = scores * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    scores = softcap(scores, attn_softcap)
+    mask = q_positions[:, :, None] >= kv_positions[:, None, :]
+    if window is not None:
+        mask &= (q_positions[:, :, None] - kv_positions[:, None, :]) < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    probs = probs * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum(
+        "bkgst,btkd->bskgd", probs.astype(q.dtype), v_q.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, s, h, dh).astype(q.dtype)
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(B, S, KV, Dh) -> int8 values + (B, S, KV) fp32 scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def gqa_attention_qchunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    q_positions: jnp.ndarray,
+    kv_positions: jnp.ndarray,
+    kv_valid: jnp.ndarray | None = None,
+    window=None,
+    attn_softcap: float | None = None,
+    chunk: int = 2048,
+) -> jnp.ndarray:
+    """Query-chunked attention for long prefill: lax.scan over query chunks
+    bounds the live score tensor to (B, H, chunk, T) — the flash-attention
+    memory fix restated at the XLA level (each chunk's softmax is complete
+    because keys are fully resident; no online rescaling needed)."""
+    b, s, h, dh = q.shape
+    if s % chunk or s <= chunk:
+        return gqa_attention(
+            q, k, v, q_positions, kv_positions, kv_valid, window, attn_softcap
+        )
+    n = s // chunk
+    qc = q.reshape(b, n, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = q_positions.reshape(b, n, chunk).transpose(1, 0, 2)
+
+    def body(_, xs):
+        qi, pi = xs
+        o = gqa_attention(
+            qi, k, v, pi, kv_positions, kv_valid, window, attn_softcap
+        )
+        return None, o
+
+    _, outs = jax.lax.scan(body, None, (qc, pc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEDims:
+    n_experts: int
+    top_k: int
+    capacity: int  # per-expert token capacity (global, per microbatch)
+    expert_axis: str | None = None  # mesh axis for expert parallelism
+    token_axes: tuple | None = None  # mesh axes of the flattened token dim
+
+
+def moe_block(
+    x: jnp.ndarray,  # (B, S, D)
+    router_w: jnp.ndarray,  # (D, E)
+    w_gate: jnp.ndarray,  # (E, D, F)
+    w_up: jnp.ndarray,  # (E, D, F)
+    w_down: jnp.ndarray,  # (E, F, D)
+    dims: MoEDims,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort-based token->expert dispatch (MaxText/MegaBlocks-style permute):
+
+      route -> top-k -> flatten (token, expert) pairs -> sort by expert ->
+      rank-in-expert -> scatter into an (E, C, D) buffer (drop beyond C) ->
+      batched expert GEMMs -> gather back -> weighted combine.
+
+    Avoids the O(T*E*C) one-hot dispatch tensor entirely: all intermediates
+    are O(T*k) or O(E*C*D).  Capacity C bounds worst-case skew; with
+    C = 1.25 * T*k/E drops are rare and training-neutral.
+
+    Returns (output (B,S,D), aux_load_balance_loss scalar).
+    """
+    b, s, d = x.shape
+    e, k, cap = dims.n_experts, dims.top_k, dims.capacity
+    tokens = x.reshape(-1, d)
+    t = tokens.shape[0]
+
+    logits = (tokens.astype(jnp.float32) @ router_w.astype(jnp.float32))  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(axis=-1, keepdims=True), 1e-9)
+
+    # aux loss (Switch-style load balancing)
+    density = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * e
+
+    from jax.sharding import PartitionSpec as _P
+
+    from repro.parallel.sharding import maybe_constrain
+
+    flat_e = top_e.reshape(-1)  # (T*k,)
+    flat_p = top_p.reshape(-1)
+    order = jnp.argsort(flat_e)  # stable
+    se = flat_e[order]
+    first = jnp.searchsorted(se, jnp.arange(e), side="left")  # (E,)
+    pos = jnp.arange(t * k) - first[se]
+    tok_of = order // k
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)  # cap row == drop bin
+
+    def _dispatch_spec():
+        # Measured on kimi-k2 (EXPERIMENTS.md §Perf): expert-axis rows is
+        # the only layout GSPMD partitions sanely.  Rows over token axes or
+        # (expert+token) axes both collapse into full all-gathers
+        # (159-171 GB/layer/device vs 31 GB here).
+        return _P(dims.expert_axis or tuple(dims.token_axes), None)
+
+    gathered = tokens[tok_of]  # (T*k, D)
+    if dims.token_axes is not None or dims.expert_axis is not None:
+        # Without a constraint GSPMD REPLICATES this (T*k, D) gather output
+        # on every device — at kimi-k2 prefill scale ~120 GB/chip.
+        gathered = maybe_constrain(gathered, _dispatch_spec())
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[se, slot].add(
+        jnp.where(keep[:, None], gathered, 0).astype(x.dtype),
+        mode="drop",
+    )
+    if dims.expert_axis is not None:
+        # expert parallelism: the scatter above is the token all-to-all
+        buf = jax.lax.with_sharding_constraint(
+            buf, _P(dims.expert_axis, None, None)
+        )
+    # expert GEMMs emit x.dtype (bf16): the MXU still accumulates fp32
+    # internally, but cross-shard PARTIAL sums (the d_model contraction is
+    # FSDP-sharded -> XLA all-reduces activation partials) travel at half
+    # the bytes.  Measured on kimi-k2: 17.8 -> ~9 GiB/layer/mb/device.
+    h = jax.nn.silu(
+        jnp.einsum("ecd,edf->ecf", buf, w_gate, preferred_element_type=x.dtype)
+    ) * jnp.einsum("ecd,edf->ecf", buf, w_up, preferred_element_type=x.dtype)
+    out_buf = jnp.einsum(
+        "ecf,efd->ecd", h.astype(x.dtype), w_down,
+        preferred_element_type=x.dtype,
+    ).astype(x.dtype)
+
+    back = out_buf[se, slot]  # (T*k, D) gather from expert space
+    if dims.token_axes is not None or dims.expert_axis is not None:
+        back = maybe_constrain(back, _dispatch_spec())
+    vals = back * jnp.where(keep, flat_p[order], 0.0)[:, None].astype(x.dtype)
+    combined = jnp.zeros((t, d), x.dtype).at[tok_of].add(vals)
+    if dims.token_axes is not None:
+        combined = maybe_constrain(combined, _P(tuple(dims.token_axes), None))
+    return combined.reshape(b, s, d), aux

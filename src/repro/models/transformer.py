@@ -1,0 +1,605 @@
+"""Decoder-only LM: dense (llama-style) and MoE variants, GQA, RoPE, optional
+local/global alternating attention with logit soft-capping (gemma2-style).
+
+Layers are *stacked* (leading L dim) and executed with ``lax.scan`` — one
+compiled layer body regardless of depth (critical for 61-layer × 512-device
+dry-run compiles) — with optional remat.
+
+The same parameter pytree serves train (teacher-forced step) and serve
+(single-token decode against a KV cache).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import layers
+from repro.parallel.sharding import (
+    divisible_or_none,
+    dp_axes,
+    fsdp_axes,
+    maybe_constrain,
+)
+
+__all__ = ["LMConfig", "LMModel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_capacity_factor: float = 1.25
+    n_shared_experts: int = 0
+    # gemma2-style features
+    sliding_window: int | None = None
+    local_global_alternate: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    scale_embed: bool = False
+    post_norms: bool = False
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # distribution
+    optimizer: str = "adamw"  # "adamw" | "adafactor"
+    grad_accum_dtype: str = "float32"  # "bfloat16" halves accumulator HBM
+    microbatches: int = 1
+    seq_shard_activations: bool = False
+    # FSDP execution mode: True = all-gather each layer's weights at use
+    # (weight-stationary, ZeRO-3 style: 2.1 GB/layer gather for kimi);
+    # False lets XLA contract against the sharded d_model dim, which
+    # ALL-REDUCES the (E, C, d_ff) activation partials instead — measured
+    # 17.8 GiB/layer/microbatch/device on kimi-k2.  See EXPERIMENTS.md §Perf.
+    unshard_weights_at_use: bool = False
+    expert_axis: str | None = None  # mesh axis for MoE expert parallelism
+    attn_q_chunk: int | None = None  # query chunking for long prefill
+    # KV-cache precision for decode: "bf16" | "int8" (KIVI-style per-token
+    # per-head scales; halves long-context cache HBM, scales factor out of
+    # the attention contraction so the cache is never dequantised in full).
+    kv_cache_dtype: str = "bf16"
+    # Unroll layers into straight-line HLO instead of lax.scan.  Used by the
+    # dry-run cost probes: XLA's HloCostAnalysis counts while-loop bodies
+    # ONCE (no trip-count multiply), so FLOP/collective extraction needs
+    # loop-free probes (see launch/dryrun.py).
+    unroll_layers: bool = False
+    # Mesh axes over which the batch dim of activations is pinned.  GSPMD's
+    # gather partitioning replicates the embedding-lookup output (and thus
+    # the whole residual stream) without this constraint.  None = no mesh.
+    batch_axes: tuple | None = None
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def n_params(self) -> int:
+        d, dh = self.d_model, self.dh
+        attn = d * self.n_heads * dh * 2 + d * self.n_kv_heads * dh * 2
+        if self.is_moe:
+            mlp = self.moe_experts * 3 * d * self.d_ff + d * self.moe_experts
+            mlp += self.n_shared_experts * 3 * d * self.d_ff
+        else:
+            mlp = 3 * d * self.d_ff
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: top-k + shared experts only)."""
+        if not self.is_moe:
+            return self.n_params()
+        d = self.d_model
+        attn = d * self.n_heads * self.dh * 2 + d * self.n_kv_heads * self.dh * 2
+        mlp = (self.moe_top_k + self.n_shared_experts) * 3 * d * self.d_ff
+        mlp += d * self.moe_experts  # router
+        per_layer = attn + mlp + 2 * d
+        return self.n_layers * per_layer + 2 * self.vocab * d
+
+
+def _scaled(key, shape, dtype, fan_in):
+    return (jax.random.normal(key, shape, jnp.float32) / math.sqrt(fan_in)).astype(dtype)
+
+
+class LMModel:
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ params
+
+    def param_shapes(self) -> dict:
+        c = self.cfg
+        d, dh, L = c.d_model, c.dh, c.n_layers
+        f32, dt = jnp.float32, c.dtype
+        sh = {
+            "embed": ((c.vocab, d), dt),
+            "unembed": ((c.vocab, d), dt),
+            "final_norm": ((d,), f32),
+            "attn_norm": ((L, d), f32),
+            "mlp_norm": ((L, d), f32),
+            "wq": ((L, d, c.n_heads * dh), dt),
+            "wk": ((L, d, c.n_kv_heads * dh), dt),
+            "wv": ((L, d, c.n_kv_heads * dh), dt),
+            "wo": ((L, c.n_heads * dh, d), dt),
+        }
+        if c.post_norms:
+            sh["attn_post_norm"] = ((L, d), f32)
+            sh["mlp_post_norm"] = ((L, d), f32)
+        if c.is_moe:
+            sh["router"] = ((L, d, c.moe_experts), f32)
+            sh["moe_gate"] = ((L, c.moe_experts, d, c.d_ff), dt)
+            sh["moe_up"] = ((L, c.moe_experts, d, c.d_ff), dt)
+            sh["moe_down"] = ((L, c.moe_experts, c.d_ff, d), dt)
+            if c.n_shared_experts:
+                fs = c.n_shared_experts * c.d_ff
+                sh["shared_gate"] = ((L, d, fs), dt)
+                sh["shared_up"] = ((L, d, fs), dt)
+                sh["shared_down"] = ((L, fs, d), dt)
+        else:
+            sh["w_gate"] = ((L, d, c.d_ff), dt)
+            sh["w_up"] = ((L, d, c.d_ff), dt)
+            sh["w_down"] = ((L, c.d_ff, d), dt)
+        return sh
+
+    def abstract_params(self) -> dict:
+        return {
+            k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in self.param_shapes().items()
+        }
+
+    def init_params(self, rng) -> dict:
+        c = self.cfg
+        out = {}
+        keys = jax.random.split(rng, len(self.param_shapes()))
+        for k_rng, (name, (shape, dt)) in zip(keys, self.param_shapes().items()):
+            if "norm" in name:
+                out[name] = jnp.zeros(shape, dt)
+            else:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                out[name] = _scaled(k_rng, shape, dt, fan_in)
+        return out
+
+    def param_specs(self, mesh: Mesh) -> dict:
+        """FSDP over data axes (input dim) + TP over model axis (output dim)."""
+        c = self.cfg
+        fs = fsdp_axes(mesh)
+        d_ok = lambda dim: divisible_or_none(dim, mesh, fs)  # noqa: E731
+        m_ok = lambda dim: ("model" if dim % mesh.shape["model"] == 0 else None)  # noqa: E731
+        dh = c.dh
+        specs = {
+            # embed is GATHERED (not matmul'd): vocab-sharded only — sharding
+            # d_model too makes GSPMD's gather partitioning fall back to
+            # replication of the output.
+            "embed": P(m_ok(c.vocab), None),
+            "unembed": P(m_ok(c.vocab), d_ok(c.d_model)),
+            "final_norm": P(None),
+            "attn_norm": P(None, None),
+            "mlp_norm": P(None, None),
+            "wq": P(None, d_ok(c.d_model), m_ok(c.n_heads * dh)),
+            "wk": P(None, d_ok(c.d_model), m_ok(c.n_kv_heads * dh)),
+            "wv": P(None, d_ok(c.d_model), m_ok(c.n_kv_heads * dh)),
+            "wo": P(None, m_ok(c.n_heads * dh), d_ok(c.d_model)),
+        }
+        if c.post_norms:
+            specs["attn_post_norm"] = P(None, None)
+            specs["mlp_post_norm"] = P(None, None)
+        if c.is_moe:
+            e_ax = "model" if c.moe_experts % mesh.shape["model"] == 0 else None
+            specs["router"] = P(None, d_ok(c.d_model), None)
+            specs["moe_gate"] = P(None, e_ax, d_ok(c.d_model), None)
+            specs["moe_up"] = P(None, e_ax, d_ok(c.d_model), None)
+            specs["moe_down"] = P(None, e_ax, None, d_ok(c.d_model))
+            if c.n_shared_experts:
+                fs_dim = c.n_shared_experts * c.d_ff
+                specs["shared_gate"] = P(None, d_ok(c.d_model), m_ok(fs_dim))
+                specs["shared_up"] = P(None, d_ok(c.d_model), m_ok(fs_dim))
+                specs["shared_down"] = P(None, m_ok(fs_dim), d_ok(c.d_model))
+        else:
+            specs["w_gate"] = P(None, d_ok(c.d_model), m_ok(c.d_ff))
+            specs["w_up"] = P(None, d_ok(c.d_model), m_ok(c.d_ff))
+            specs["w_down"] = P(None, m_ok(c.d_ff), d_ok(c.d_model))
+        return specs
+
+    # ------------------------------------------------------------------ layers
+
+    def _layer_params(self, params: dict) -> tuple[dict, list[str]]:
+        keys = [k for k in params if params[k].ndim >= 2 and k not in (
+            "embed", "unembed") and k != "final_norm"]
+        return {k: params[k] for k in keys}, keys
+
+    def _is_local_flags(self) -> jnp.ndarray:
+        c = self.cfg
+        if c.local_global_alternate:
+            return jnp.arange(c.n_layers) % 2 == 0  # even layers local
+        return jnp.zeros(c.n_layers, dtype=bool)
+
+    def _block(self, x, lp, is_local, q_pos, kv_pos, k_cache=None, v_cache=None,
+               kv_valid=None, cache_slot=None, k_scale=None, v_scale=None):
+        """One transformer layer.  Returns (x, new_k, new_v) — where new_k /
+        new_v are (values, scales) tuples when the cache is int8-quantised.
+
+        Train/prefill: caches are None — K/V come from this segment.
+        Decode: k_cache/v_cache hold the past; new K/V are written at
+        ``cache_slot`` (and returned for the scan to re-stack).
+        """
+        c = self.cfg
+        b = x.shape[0]
+        dh = c.dh
+
+        if c.unshard_weights_at_use and c.batch_axes is not None:
+            unshard = {
+                "wq": P(None, "model"), "wk": P(None, "model"),
+                "wv": P(None, "model"), "wo": P("model", None),
+                "w_gate": P(None, "model"), "w_up": P(None, "model"),
+                "w_down": P("model", None),
+                "moe_gate": P("model", None, None),
+                "moe_up": P("model", None, None),
+                "moe_down": P("model", None, None),
+                "shared_gate": P(None, "model"),
+                "shared_up": P(None, "model"),
+                "shared_down": P("model", None),
+                "router": P(None, None),
+            }
+            lp = {
+                k: (maybe_constrain(v, unshard[k]) if k in unshard else v)
+                for k, v in lp.items()
+            }
+
+        h = layers.rms_norm(x, lp["attn_norm"])
+        q = (h @ lp["wq"]).reshape(b, -1, c.n_heads, dh)
+        k = (h @ lp["wk"]).reshape(b, -1, c.n_kv_heads, dh)
+        v = (h @ lp["wv"]).reshape(b, -1, c.n_kv_heads, dh)
+        q = layers.rope(q, q_pos, c.rope_theta)
+        k = layers.rope(k, q_pos, c.rope_theta)
+
+        quantized = k_cache is not None and k_cache.dtype == jnp.int8
+        if quantized:
+            kq_new, ks_new = layers.quantize_kv(k)
+            vq_new, vs_new = layers.quantize_kv(v)
+            dus = jax.lax.dynamic_update_slice_in_dim
+            nk = dus(k_cache, kq_new, cache_slot, axis=1)
+            nks = dus(k_scale, ks_new, cache_slot, axis=1)
+            nv = dus(v_cache, vq_new, cache_slot, axis=1)
+            nvs = dus(v_scale, vs_new, cache_slot, axis=1)
+            new_k, new_v = (nk, nks), (nv, nvs)
+            att_k, att_v, att_kv_pos, att_valid = nk, nv, kv_pos, kv_valid
+        elif k_cache is not None:
+            new_k = jax.lax.dynamic_update_slice_in_dim(
+                k_cache, k.astype(k_cache.dtype), cache_slot, axis=1
+            )
+            new_v = jax.lax.dynamic_update_slice_in_dim(
+                v_cache, v.astype(v_cache.dtype), cache_slot, axis=1
+            )
+            att_k, att_v, att_kv_pos, att_valid = new_k, new_v, kv_pos, kv_valid
+        else:
+            new_k, new_v = k, v  # prefill: the segment IS the cache content
+            att_k, att_v, att_kv_pos, att_valid = k, v, kv_pos, None
+
+        if c.local_global_alternate and c.sliding_window:
+            # per-layer traced window: local layers use the sliding window,
+            # global layers an effectively-infinite one (single attention
+            # call — the mask comparison broadcasts the traced scalar).
+            eff_window = jnp.where(
+                is_local, jnp.int32(c.sliding_window), jnp.int32(2**30)
+            )
+        else:
+            eff_window = c.sliding_window
+        if quantized:
+            o = layers.gqa_attention_quantized(
+                q, new_k[0], new_k[1], new_v[0], new_v[1],
+                q_pos, att_kv_pos, att_valid,
+                window=eff_window, attn_softcap=c.attn_softcap,
+            )
+        elif c.attn_q_chunk:
+            o = layers.gqa_attention_qchunked(
+                q, att_k, att_v, q_pos, att_kv_pos, att_valid,
+                window=eff_window, attn_softcap=c.attn_softcap,
+                chunk=c.attn_q_chunk,
+            )
+        else:
+            o = layers.gqa_attention(
+                q, att_k, att_v, q_pos, att_kv_pos, att_valid,
+                window=eff_window, attn_softcap=c.attn_softcap,
+            )
+        o = o.reshape(b, -1, c.n_heads * dh) @ lp["wo"]
+        if c.post_norms:
+            o = layers.rms_norm(o, lp["attn_post_norm"])
+        x = x + o
+
+        h = layers.rms_norm(x, lp["mlp_norm"])
+        if c.is_moe:
+            cap = self._capacity(h.shape[0] * h.shape[1])
+            mo, _aux = layers.moe_block(
+                h, lp["router"], lp["moe_gate"], lp["moe_up"], lp["moe_down"],
+                layers.MoEDims(
+                    c.moe_experts, c.moe_top_k, cap, c.expert_axis,
+                    token_axes=c.batch_axes,
+                ),
+            )
+            if c.n_shared_experts:
+                mo = mo + layers.swiglu(
+                    h, lp["shared_gate"], lp["shared_up"], lp["shared_down"]
+                )
+        else:
+            mo = layers.swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+        if c.post_norms:
+            mo = layers.rms_norm(mo, lp["mlp_post_norm"])
+        return x + mo, new_k, new_v
+
+    def _capacity(self, n_tokens: int) -> int:
+        c = self.cfg
+        per = n_tokens * c.moe_top_k / c.moe_experts
+        cap = int(math.ceil(per * c.moe_capacity_factor))
+        cap = max(8, min(cap, n_tokens))
+        if cap >= 64:
+            cap = -(-cap // 64) * 64  # data-axis-shardable capacity dim
+        return cap
+
+    # ----------------------------------------------------------------- forward
+
+    def _constrain_resid(self, x):
+        """Pin the residual stream's sharding.  Without this, GSPMD's gather
+        partitioning of the embedding lookup replicates the whole stream.
+        seq_shard_activations additionally spreads the sequence dim over the
+        model axis (sequence parallelism: stash memory / norm work /16)."""
+        c = self.cfg
+        if c.batch_axes is None:
+            return x
+        if c.seq_shard_activations:
+            return maybe_constrain(x, P(tuple(c.batch_axes), "model", None))
+        return maybe_constrain(x, P(tuple(c.batch_axes), None, None))
+
+    def forward(self, params: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+        """Teacher-forced logits: tokens (B, S) -> (B, S, vocab)."""
+        c = self.cfg
+        b, s = tokens.shape
+        x = self._constrain_resid(params["embed"][tokens].astype(c.dtype))
+        if c.scale_embed:
+            x = x * math.sqrt(c.d_model)
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        lp_all, keys = self._layer_params(params)
+        is_local = self._is_local_flags()
+
+        def body(x, scanned):
+            lp, loc = scanned
+            y, _, _ = self._block(x, lp, loc, pos, pos)
+            return self._constrain_resid(y), None
+
+        if c.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        if c.unroll_layers:
+            for i in range(c.n_layers):
+                x, _ = body(x, (jax.tree.map(lambda a: a[i], lp_all), is_local[i]))
+        else:
+            x, _ = jax.lax.scan(body, x, (lp_all, is_local))
+        x = layers.rms_norm(x, params["final_norm"])
+        logits = x.astype(jnp.float32) @ params["unembed"].T.astype(jnp.float32)
+        return layers.softcap(logits, c.final_softcap)
+
+    def prefill(self, params: dict, tokens: jnp.ndarray,
+                chunk: int | None = None) -> tuple[jnp.ndarray, dict]:
+        """Prefill: run the full prompt, return (last-token logits (B, vocab),
+        KV cache (L, B, S, KV, Dh)).  Only the final position's logits are
+        computed — materialising (B, S, vocab) at 32K context is pure waste.
+
+        ``chunk``: Sarathi-style chunked prefill — an outer scan feeds
+        ``chunk``-token segments through the whole stack, growing the cache
+        as the carry.  Bounds live activations (and the MoE dispatch buffer)
+        to one segment; mandatory at MoE-trillion scale.
+        """
+        c = self.cfg
+        b, s = tokens.shape
+        x = self._constrain_resid(params["embed"][tokens].astype(c.dtype))
+        if c.scale_embed:
+            x = x * math.sqrt(c.d_model)
+        lp_all, _ = self._layer_params(params)
+        is_local = self._is_local_flags()
+
+        if chunk and s > chunk and s % chunk == 0:
+            nseg = s // chunk
+            xs = x.reshape(b, nseg, chunk, c.d_model).transpose(1, 0, 2, 3)
+            kv_pos = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (b, s)
+            )
+            cache0 = {
+                "k": jnp.zeros((c.n_layers, b, s, c.n_kv_heads, self.dh_pad()),
+                               c.dtype),
+                "v": jnp.zeros((c.n_layers, b, s, c.n_kv_heads, self.dh_pad()),
+                               c.dtype),
+            }
+            cache0 = jax.tree.map(self._constrain_cache, cache0)
+
+            def seg_body(cache, seg):
+                xi, seg_idx = seg
+                offset = seg_idx * chunk
+                q_pos = offset + jnp.broadcast_to(
+                    jnp.arange(chunk, dtype=jnp.int32)[None, :], (b, chunk)
+                )
+
+                def layer_body(xc, scanned):
+                    lp, loc, kc, vc = scanned
+                    y, nk, nv = self._block(
+                        xc, lp, loc, q_pos, kv_pos,
+                        k_cache=kc, v_cache=vc, kv_valid=None,
+                        cache_slot=offset,
+                    )
+                    return self._constrain_resid(y), (nk, nv)
+
+                xi, (nk, nv) = jax.lax.scan(
+                    layer_body, xi, (lp_all, is_local, cache["k"], cache["v"])
+                )
+                nk = self._constrain_cache(nk)
+                nv = self._constrain_cache(nv)
+                return {"k": nk, "v": nv}, xi[:, -1:]
+
+            cache, last_h = jax.lax.scan(
+                seg_body, cache0, (xs, jnp.arange(nseg, dtype=jnp.int32))
+            )
+            x_last = last_h[-1]
+        else:
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+            def body(x, scanned):
+                lp, loc = scanned
+                y, k, v = self._block(x, lp, loc, pos, pos)
+                return self._constrain_resid(y), (k, v)
+
+            if c.remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            if c.unroll_layers:
+                kvs = []
+                for i in range(c.n_layers):
+                    x, kv = body(
+                        x, (jax.tree.map(lambda a: a[i], lp_all), is_local[i])
+                    )
+                    kvs.append(kv)
+                ks = jnp.stack([k for k, _ in kvs])
+                vs = jnp.stack([v for _, v in kvs])
+            else:
+                x, (ks, vs) = jax.lax.scan(body, x, (lp_all, is_local))
+            cache = {"k": ks, "v": vs}
+            x_last = x[:, -1:]
+
+        x_last = layers.rms_norm(x_last, params["final_norm"])
+        logits = x_last[:, 0].astype(jnp.float32) @ params["unembed"].T.astype(
+            jnp.float32
+        )
+        return layers.softcap(logits, c.final_softcap), cache
+
+    def dh_pad(self) -> int:
+        return self.cfg.dh
+
+    def _constrain_cache(self, kv):
+        c = self.cfg
+        if c.batch_axes is None:
+            return kv
+        # (L, B, S, KV, Dh) or (B, S, KV, Dh): seq-shard over model
+        lead = (None,) if kv.ndim == 5 else ()
+        return maybe_constrain(
+            kv, P(*lead, tuple(c.batch_axes), "model", None, None)
+        )
+
+    def loss_fn(self, params: dict, batch: dict) -> jnp.ndarray:
+        """batch: tokens (B, S+1) int32.  Mean next-token cross-entropy."""
+        tokens = batch["tokens"]
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        logits = self.forward(params, inp)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    # ------------------------------------------------------------------ decode
+
+    def init_cache_shapes(self, batch: int, max_seq: int) -> dict:
+        c = self.cfg
+        shape = (c.n_layers, batch, max_seq, c.n_kv_heads, c.dh)
+        if c.kv_cache_dtype == "int8":
+            sshape = (c.n_layers, batch, max_seq, c.n_kv_heads)
+            return {
+                "k": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "v": jax.ShapeDtypeStruct(shape, jnp.int8),
+                "k_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+                "v_scale": jax.ShapeDtypeStruct(sshape, jnp.float32),
+            }
+        return {
+            "k": jax.ShapeDtypeStruct(shape, c.dtype),
+            "v": jax.ShapeDtypeStruct(shape, c.dtype),
+        }
+
+    def cache_specs(self, mesh: Mesh, batch: int) -> dict:
+        dp = dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh.shape[a]
+        bdim = dp if batch % dp_size == 0 else None  # batch=1: replicate
+        spec = P(None, bdim, "model", None, None)  # seq-sharded KV
+        out = {"k": spec, "v": spec}
+        if self.cfg.kv_cache_dtype == "int8":
+            out["k_scale"] = P(None, bdim, "model", None)
+            out["v_scale"] = P(None, bdim, "model", None)
+        return out
+
+    def decode_step(self, params: dict, cache: dict, token: jnp.ndarray,
+                    pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+        """One-token decode: token (B, 1) int32, pos scalar int32 (current
+        length).  Returns (logits (B, vocab), new cache)."""
+        c = self.cfg
+        b = token.shape[0]
+        max_seq = cache["k"].shape[2]
+        x = params["embed"][token].astype(c.dtype)
+        if c.batch_axes is not None:
+            x = maybe_constrain(x, P(tuple(c.batch_axes), None, None))
+        if c.scale_embed:
+            x = x * math.sqrt(c.d_model)
+        q_pos = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(max_seq, dtype=jnp.int32)[None, :], (b, max_seq)
+        )
+        kv_valid = kv_pos <= pos  # includes the slot being written
+        lp_all, _ = self._layer_params(params)
+        is_local = self._is_local_flags()
+
+        quantized = cache["k"].dtype == jnp.int8
+
+        def body(x, scanned):
+            lp, loc, kc, vc, ks, vs = scanned
+            y, nk, nv = self._block(
+                x, lp, loc, q_pos, kv_pos,
+                k_cache=kc, v_cache=vc, kv_valid=kv_valid, cache_slot=pos,
+                k_scale=ks, v_scale=vs,
+            )
+            return y, (nk, nv)
+
+        dummy = (
+            jnp.zeros((c.n_layers, b, 0), jnp.float32)
+            if not quantized else None
+        )
+        scales = (
+            (cache["k_scale"], cache["v_scale"]) if quantized
+            else (dummy, dummy)
+        )
+        if c.unroll_layers:
+            nks, nvs = [], []
+            for i in range(c.n_layers):
+                x, (k_i, v_i) = body(
+                    x,
+                    (jax.tree.map(lambda a: a[i], lp_all), is_local[i],
+                     cache["k"][i], cache["v"][i],
+                     scales[0][i], scales[1][i]),
+                )
+                nks.append(k_i)
+                nvs.append(v_i)
+            nk = jax.tree.map(lambda *xs: jnp.stack(xs), *nks)
+            nv = jax.tree.map(lambda *xs: jnp.stack(xs), *nvs)
+        else:
+            x, (nk, nv) = jax.lax.scan(
+                body, x,
+                (lp_all, is_local, cache["k"], cache["v"], scales[0], scales[1]),
+            )
+        x = layers.rms_norm(x, params["final_norm"])
+        logits = x[:, 0].astype(jnp.float32) @ params["unembed"].T.astype(jnp.float32)
+        logits = layers.softcap(logits, c.final_softcap)
+        if quantized:
+            new_cache = {"k": nk[0], "k_scale": nk[1],
+                         "v": nv[0], "v_scale": nv[1]}
+        else:
+            new_cache = {"k": nk, "v": nv}
+        return logits, new_cache
+
+

@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    adafactor,
+    cosine_schedule,
+    clip_by_global_norm,
+    make_optimizer,
+)
+from repro.optim.compression import int8_error_feedback  # noqa: F401

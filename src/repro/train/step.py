@@ -1,0 +1,86 @@
+"""Train-step factory: microbatch gradient accumulation + optimizer apply.
+
+``make_train_step`` returns a pure function
+    (state, batch) -> (state, metrics)
+suitable for ``jax.jit`` with in/out shardings and donation.  Microbatching
+runs as a ``lax.scan`` over leading-dim splits of the batch — activation
+memory scales with the microbatch, gradients accumulate in fp32.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import Optimizer, int8_error_feedback
+
+__all__ = ["make_train_step", "init_state"]
+
+
+def init_state(params, optimizer: Optimizer, compression: bool = False) -> dict:
+    state = {"params": params, "opt": optimizer.init(params), "step": jnp.zeros((), jnp.int32)}
+    if compression:
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], jnp.ndarray],
+    optimizer: Optimizer,
+    microbatches: int = 1,
+    compression: bool = False,
+    accum_dtype=jnp.float32,
+):
+    """``accum_dtype``: gradient-accumulation precision.  fp32 is the safe
+    default; bf16 halves the accumulator HBM (8 GB/chip for a 1T model on
+    512 chips) at ~3 effective mantissa bits over 8 microbatches — the
+    Adafactor update clip absorbs the noise (kimi-k2 recipe)."""
+    def split_mb(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        return jax.tree.map(r, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            mbs = split_mb(batch)
+
+            def body(acc, mb):
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(
+                    lambda a, x: a + x.astype(accum_dtype), acc_g, g
+                )
+                return (acc_l + l, acc_g), None
+
+            zero = (
+                jnp.zeros((), jnp.float32),
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params),
+            )
+            (loss_sum, grads), _ = jax.lax.scan(body, zero, mbs)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        new_state = dict(state)
+        if compression:
+            grads, new_state["residual"] = int8_error_feedback(
+                grads, state["residual"]
+            )
+        new_params, new_opt = optimizer.update(grads, state["opt"], params)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = {"loss": loss}
+        return new_state, metrics
+
+    return train_step

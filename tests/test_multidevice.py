@@ -1,0 +1,68 @@
+"""Multi-device behaviours that need more than one XLA device: run in a
+subprocess with ``--xla_force_host_platform_device_count=4`` (kept OUT of
+this process — smoke tests must see 1 device, per the dry-run contract)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.checkpoint.manager import CheckpointManager
+
+    auto = (jax.sharding.AxisType.Auto,)
+
+    # --- elastic reshard: save under a (2,2) mesh, restore under (4,) ---
+    mesh_a = jax.make_mesh((2, 2), ("data", "model"), axis_types=auto * 2)
+    w = jnp.arange(64.0).reshape(8, 8)
+    w_a = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
+    mgr = CheckpointManager(sys.argv[1])
+    mgr.save(1, {"w": w_a})
+
+    mesh_b = jax.make_mesh((4,), ("data",), axis_types=auto)
+    restored, _ = mgr.restore(
+        {"w": w}, shardings={"w": NamedSharding(mesh_b, P("data", None))}
+    )
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(w))
+    assert restored["w"].sharding.spec == P("data", None)
+
+    # --- sharded train step runs on the 4-device mesh ---
+    from repro.configs import common
+    from repro.configs.registry import registry
+    from repro.optim import adamw
+    from repro.train.step import init_state, make_train_step
+
+    model, cfg, batch_fn = registry()["llama3.2-1b"].make_reduced()
+    import dataclasses
+    model = type(model)(dataclasses.replace(cfg, batch_axes=("data",)))
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = batch_fn(jax.random.PRNGKey(1))
+    with jax.set_mesh(mesh_b):
+        params = jax.device_put(
+            params, NamedSharding(mesh_b, P()))
+        batch = jax.device_put(
+            batch, {"tokens": NamedSharding(mesh_b, P(None, None))})
+        step = jax.jit(make_train_step(
+            common.loss_for("lm", model), adamw(lr=1e-3)), donate_argnums=(0,))
+        state = init_state(params, adamw(lr=1e-3))
+        state, metrics = step(state, batch)
+        assert np.isfinite(float(metrics["loss"]))
+    print("MULTIDEVICE_OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_reshard_and_sharded_step(tmp_path):
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(tmp_path / "ckpt")],
+        capture_output=True, text=True, timeout=600, cwd=".",
+    )
+    assert "MULTIDEVICE_OK" in out.stdout, out.stdout + "\n" + out.stderr

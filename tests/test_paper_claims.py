@@ -1,0 +1,114 @@
+"""Paper-claim validation (fast versions of the benchmark suites).
+
+These encode the VALIDATABLE claims of Connor et al. 2017 against our
+surrogate data at test scale:
+
+  C1 (Fig. 5): four-point exclusion fails for far fewer queries than
+      hyperbolic exclusion.
+  C2 (§3.3, Fig. 6-7): four-point exclusion power is ~invariant to pivot
+      separation; hyperbolic collapses for close pivots.
+  C3 (§4.3): Hilbert beats hyperbolic on every tree structure, typically by
+      40-60% at low thresholds.
+  C4 (§4.3): exclusion-count variance across structures is far lower under
+      Hilbert ("putting huge resources into building expensive structures
+      may be far less worthwhile").
+  C5 (§5): LRT (balanced) <= balanced monotone tree on clustered data.
+  C6 (§3/§5): planar lower bound is never violated for supermetrics.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import lrt, tree
+from repro.core.npdist import pairwise_np
+from repro.data import metricsets
+
+
+@pytest.fixture(scope="module")
+def space():
+    data = metricsets.colors_surrogate(6000, dim=48, seed=5)
+    db, q = metricsets.split_queries(data, 0.08, seed=6, max_queries=60)
+    t = metricsets.calibrate_threshold("l2", db, 2e-4)
+    return db, q, t
+
+
+def test_c1_c2_exclusion_power():
+    rng = np.random.default_rng(0)
+    data = rng.random((3000, 8))
+    t = 0.145
+    a = rng.integers(0, 3000, 500)
+    b = rng.integers(0, 3000, 500)
+    seps = np.array([
+        pairwise_np("l2", data[a[i]][None], data[b[i]][None])[0, 0]
+        for i in range(500)
+    ])
+    far, close = int(np.argmax(seps)), int(np.argmin(seps))
+
+    def powers(i):
+        p1, p2 = data[a[i]], data[b[i]]
+        delta = seps[i]
+        d1 = pairwise_np("l2", data, p1[None])[:, 0]
+        d2 = pairwise_np("l2", data, p2[None])[:, 0]
+        hyp = np.mean(np.abs(d1 - d2) > 2 * t)
+        hil = np.mean(np.abs(d1**2 - d2**2) / max(delta, 1e-12) > 2 * t)
+        return hyp, hil
+
+    hyp_far, hil_far = powers(far)
+    hyp_close, hil_close = powers(close)
+    # C1: four-point excludes more in every setting
+    assert hil_far >= hyp_far
+    assert hil_close >= hyp_close
+    # C2: four-point ~invariant (<15% relative change), hyperbolic collapses
+    assert abs(hil_far - hil_close) / max(hil_far, 1e-9) < 0.15
+    assert hyp_close < 0.2 * hyp_far + 1e-9
+
+
+def test_c3_c4_hilbert_dominates_all_structures(space):
+    db, q, t, = space
+    hyp_means, hil_means = [], []
+    for variant in ["hpt_fft_log", "hpt_random_binary", "sat_distal_fixed",
+                    "sat_global_log"]:
+        tr = tree.build_tree(variant, "l2", db, seed=2)
+        _, c_hyp = tree.range_search(tr, q, t, "hyperbolic")
+        _, c_hil = tree.range_search(tr, q, t, "hilbert")
+        hyp_means.append(c_hyp.mean)
+        hil_means.append(c_hil.mean)
+        assert c_hil.mean <= c_hyp.mean
+    hyp_means = np.array(hyp_means)
+    hil_means = np.array(hil_means)
+    # C3 magnitude: paper reports ~half the distances at low thresholds
+    assert np.mean(hil_means / hyp_means) < 0.85
+    # C4: relative spread across structures smaller under Hilbert
+    cv = lambda v: np.std(v) / np.mean(v)  # noqa: E731
+    assert cv(hil_means) <= cv(hyp_means) + 0.05
+
+
+def test_c5_lrt_beats_balanced_monotone(space):
+    db, q, t = space
+    means = {}
+    for part in ("median_x", "lrt"):
+        vals = []
+        for select in ("rand", "far"):
+            tr = lrt.build_monotone_tree(part, select, "l2", db, seed=4)
+            _, counter = lrt.range_search_monotone(tr, q, t, "hilbert")
+            vals.append(counter.mean)
+        means[part] = min(vals)
+    assert means["lrt"] <= means["median_x"] * 1.05, means
+
+
+def test_c6_no_lower_bound_violation(space):
+    db, _, _ = space
+    rng = np.random.default_rng(1)
+    idx = rng.choice(len(db), 200, replace=False)
+    pts = db[idx]
+    p1, p2 = pts[0], pts[1]
+    delta = pairwise_np("l2", p1[None], p2[None])[0, 0]
+    from repro.core import projection
+
+    d1 = pairwise_np("l2", pts[2:], p1[None])[:, 0]
+    d2 = pairwise_np("l2", pts[2:], p2[None])[:, 0]
+    px, py = np.asarray(projection.project(d1, d2, delta))
+    true = pairwise_np("l2", pts[2:], pts[2:])
+    planar = np.sqrt((px[:, None] - px[None, :]) ** 2
+                     + (py[:, None] - py[None, :]) ** 2)
+    assert np.max(planar - true) <= 1e-6

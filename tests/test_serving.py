@@ -1,0 +1,57 @@
+"""Retrieval serving: exactness and pruning of the supermetric server."""
+
+import numpy as np
+import pytest
+
+from repro.core.npdist import pairwise_np
+from repro.serve.retrieval import RetrievalServer, score_to_distance
+
+
+@pytest.fixture(scope="module")
+def server_and_corpus():
+    rng = np.random.default_rng(0)
+    # clustered corpus (normalised rows -> cosine-equivalent geometry)
+    centres = rng.normal(size=(20, 32))
+    corpus = (centres[rng.integers(0, 20, 5000)]
+              + 0.15 * rng.normal(size=(5000, 32)))
+    server = RetrievalServer(corpus, n_pivots=12, n_pairs=16, block=64)
+    return server, corpus
+
+
+def test_top_k_exact(server_and_corpus):
+    server, _ = server_and_corpus
+    rng = np.random.default_rng(1)
+    q = rng.normal(size=(16, 32))
+    top = server.top_k(q, k=5)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    d = pairwise_np("l2", qn, server.corpus)
+    for i in range(len(q)):
+        want = set(np.argsort(d[i])[:5].tolist())
+        assert set(np.asarray(top[i]).tolist()) == want
+
+
+def test_range_query_exact_and_prunes(server_and_corpus):
+    from repro.serve.retrieval import ServeStats
+
+    server, _ = server_and_corpus
+    server.stats = ServeStats()  # module-scoped fixture: isolate the tally
+    rng = np.random.default_rng(2)
+    q = rng.normal(size=(32, 32))
+    min_score = 0.8
+    hits = server.range_query(q, min_score)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    d = pairwise_np("l2", qn, server.corpus)
+    t = score_to_distance(np.asarray(min_score))
+    for i in range(len(q)):
+        want = set(np.nonzero(d[i] <= t)[0].tolist())
+        assert set(hits[i]) == want
+    assert server.stats.saving > 0.3, "expected >30% distance pruning"
+
+
+def test_score_distance_duality():
+    s = np.linspace(-1, 1, 101)
+    d = score_to_distance(s)
+    # monotone decreasing: higher score == smaller distance
+    assert np.all(np.diff(d) <= 1e-9)
+    np.testing.assert_allclose(d[-1], 0.0, atol=1e-6)
+    np.testing.assert_allclose(d[0], 2.0, atol=1e-6)

@@ -1,0 +1,174 @@
+"""Exactness + paper-claim tests for all search structures."""
+
+import numpy as np
+import pytest
+
+from repro.core import flat_index, lrt, tree
+from repro.core.exclusion import HILBERT, HYPERBOLIC
+from repro.data import metricsets
+
+
+@pytest.fixture(scope="module")
+def small_space():
+    data = metricsets.euc10(1500, seed=1)
+    db, q = metricsets.split_queries(data, 0.05, seed=2)
+    q = q[:25]
+    t = metricsets.calibrate_threshold("l2", db, 2e-3)
+    truth = tree.exhaustive_search("l2", db, q, t)
+    return db, q, t, truth
+
+
+@pytest.fixture(scope="module")
+def clustered_space():
+    data = metricsets.colors_surrogate(1200, dim=24, seed=3)
+    db, q = metricsets.split_queries(data, 0.05, seed=4)
+    q = q[:20]
+    t = metricsets.calibrate_threshold("l2", db, 5e-3)
+    truth = tree.exhaustive_search("l2", db, q, t)
+    return db, q, t, truth
+
+
+def _same(res, truth):
+    return all(sorted(r) == sorted(g) for r, g in zip(res, truth))
+
+
+@pytest.mark.parametrize("variant", tree.TREE_VARIANTS)
+@pytest.mark.parametrize("mech", [HYPERBOLIC, HILBERT])
+def test_partition_tree_exact(small_space, variant, mech):
+    db, q, t, truth = small_space
+    tr = tree.build_tree(variant, "l2", db, seed=7)
+    res, _ = tree.range_search(tr, q, t, mech)
+    assert _same(res, truth)
+
+
+@pytest.mark.parametrize("variant", ["hpt_fft_log", "sat_pure", "hpt_random_binary"])
+def test_hilbert_never_worse(small_space, variant):
+    """Paper §4.3: 'supermetric exclusion always gives better performance'."""
+    db, q, t, truth = small_space
+    tr = tree.build_tree(variant, "l2", db, seed=11)
+    _, c_hyp = tree.range_search(tr, q, t, HYPERBOLIC)
+    _, c_hil = tree.range_search(tr, q, t, HILBERT)
+    assert c_hil.mean <= c_hyp.mean + 1e-9
+    # and per-query (same tree, strictly more exclusion opportunities)
+    assert np.all(c_hil.per_query <= c_hyp.per_query)
+
+
+@pytest.mark.parametrize("partition", lrt.PARTITIONS)
+@pytest.mark.parametrize("select", ["rand", "far"])
+def test_monotone_trees_exact(clustered_space, partition, select):
+    db, q, t, truth = clustered_space
+    tr = lrt.build_monotone_tree(partition, select, "l2", db, seed=5)
+    res, _ = lrt.range_search_monotone(tr, q, t, HILBERT)
+    assert _same(res, truth)
+
+
+def test_monotone_closer_hyperbolic_exact(clustered_space):
+    db, q, t, truth = clustered_space
+    tr = lrt.build_monotone_tree("closer", "far", "l2", db, seed=5)
+    res, _ = lrt.range_search_monotone(tr, q, t, HYPERBOLIC)
+    assert _same(res, truth)
+
+
+def test_hyperbolic_rejected_for_planar_partitions(clustered_space):
+    db, q, t, _ = clustered_space
+    tr = lrt.build_monotone_tree("lrt", "rand", "l2", db, seed=5)
+    with pytest.raises(ValueError):
+        lrt.range_search_monotone(tr, q, t, HYPERBOLIC)
+
+
+def test_balanced_trees_are_balanced(clustered_space):
+    db, *_ = clustered_space
+    for part in ["median_x", "lrt", "pca"]:
+        tr = lrt.build_monotone_tree(part, "rand", "l2", db, seed=6)
+        assert tr.max_depth <= int(np.ceil(np.log2(len(db)))) + 3, (
+            part,
+            tr.max_depth,
+        )
+
+
+@pytest.mark.parametrize("metric", ["l2", "cosine", "jsd"])
+def test_bss_exact_all_supermetrics(metric):
+    rng = np.random.default_rng(8)
+    data = rng.random((900, 16)) + 1e-3
+    if metric == "jsd":
+        data /= data.sum(axis=1, keepdims=True)
+    db, q = data[:800], data[800:820]
+    t = metricsets.calibrate_threshold(metric, db, 5e-3)
+    truth = tree.exhaustive_search(metric, db, q, t)
+    idx = flat_index.build_bss(metric, db, n_pivots=10, n_pairs=12, block=64, seed=9)
+    res, stats = flat_index.bss_query(idx, q, t)
+    assert _same(res, truth)
+    assert 0.0 <= stats["block_exclusion_rate"] <= 1.0
+
+
+def test_bss_lower_bound_sound():
+    """No true hit may live in an excluded block — exactness invariant."""
+    rng = np.random.default_rng(10)
+    db = rng.random((640, 12))
+    q = rng.random((40, 12))
+    idx = flat_index.build_bss("l2", db, n_pivots=8, n_pairs=10, block=64, seed=1)
+    lb = flat_index.bss_lower_bounds(idx, q)
+    from repro.core.npdist import pairwise_np
+
+    d = pairwise_np("l2", q, idx.data)  # permuted order
+    d = np.where(idx.valid[None, :], d, np.inf)
+    per_block_min = d.reshape(len(q), idx.n_blocks, idx.block).min(axis=2)
+    assert np.all(lb <= per_block_min + 1e-4), "LB exceeded a true block distance"
+
+
+def test_sat_centre_witness_soundness(small_space):
+    """Capped SAT variants must NOT use the centre witness (unsound);
+    covered implicitly by exactness, but assert the flag plumbing too."""
+    db, q, t, truth = small_space
+    for variant in ["sat_distal_fixed", "sat_global_log"]:
+        tr = tree.build_tree(variant, "l2", db, seed=3)
+        # walk: every node's centre_dists must be NaN (witness disabled)
+        stack = [tr.root]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, tree._Node):
+                assert np.all(np.isnan(n.centre_dists)) or n is tr.root
+                stack.extend(c for c in n.children if c is not None)
+
+
+# ---------------------------------------------------------------- hypothesis
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(100, 400),
+    st.integers(4, 20),
+    st.floats(0.05, 0.8),
+    st.integers(0, 10_000),
+)
+def test_bss_exactness_property(n, dim, t_frac, seed):
+    """Property: for ANY corpus/dim/threshold, BSS == exhaustive search."""
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, dim))
+    q = rng.random((8, dim))
+    from repro.core.npdist import pairwise_np
+
+    t = float(np.quantile(pairwise_np("l2", q, db), t_frac)) * 0.3
+    idx = flat_index.build_bss("l2", db, n_pivots=min(8, n), n_pairs=10,
+                               block=32, seed=seed % 97)
+    res, _ = flat_index.bss_query(idx, q, t)
+    truth = tree.exhaustive_search("l2", db, q, t)
+    assert all(sorted(a) == sorted(b) for a, b in zip(res, truth))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(150, 500), st.integers(0, 10_000))
+def test_hilbert_dominates_property(n, seed):
+    """Property: Hilbert never evaluates more distances than hyperbolic,
+    for any data/threshold (same tree)."""
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, 8))
+    q = rng.random((10, 8))
+    t = 0.2
+    tr = tree.build_tree("hpt_random_fixed", "l2", db, seed=seed % 89)
+    _, c_hyp = tree.range_search(tr, q, t, HYPERBOLIC)
+    _, c_hil = tree.range_search(tr, q, t, HILBERT)
+    assert np.all(c_hil.per_query <= c_hyp.per_query)
