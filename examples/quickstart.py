@@ -29,12 +29,22 @@ truth = tree.exhaustive_search("l2", db, queries, t)
 assert all(sorted(a) == sorted(b) for a, b in zip(results, truth))
 print("exactness: verified against exhaustive search")
 
-# 4. the TPU-native engine (MXU-tile-aligned block pruning)
+# 4. the TPU-native engine (MXU-tile-aligned block pruning): fused batched
+#    path (one jitted pass) checked against its numpy oracle
 idx = flat_index.build_bss("l2", db, n_pivots=16, n_pairs=24, block=128)
-hits, stats = flat_index.bss_query(idx, queries, t)
+hits, stats = flat_index.bss_query_batched(idx, queries, t)
+oracle_hits, _ = flat_index.bss_query(idx, queries, t)
+assert hits == oracle_hits
 assert all(sorted(a) == sorted(b) for a, b in zip(hits, truth))
 print(
-    f"BSS engine: {stats['dists_per_query']:.0f} distances/query, "
+    f"BSS engine (fused): {stats['dists_per_query']:.0f} distances/query, "
     f"{100 * stats['block_exclusion_rate']:.1f}% of 128-point blocks pruned "
-    f"(exact results)"
+    f"(exact results, == numpy oracle)"
+)
+
+# 5. batched exact kNN on the same index (radius-deepening rounds)
+knn_idx, knn_dist, kstats = flat_index.bss_knn_batched(idx, queries, k=5)
+print(
+    f"BSS kNN: top-5 for {len(queries)} queries in {kstats['rounds']} "
+    f"jitted rounds, {kstats['dists_per_query']:.0f} distances/query"
 )

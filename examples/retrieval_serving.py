@@ -72,7 +72,7 @@ def main() -> None:
         for i in range(16)
     )
     print(f"top-{args.k} x {args.queries} queries in {dt:.2f}s "
-          f"({dt / args.queries * 1e3:.1f} ms/query on 1 CPU core)")
+          f"({dt / args.queries * 1e3:.1f} ms/query, fused batched engine)")
     print(f"recall@{args.k} (exactness check) = {hit / (16 * args.k):.3f}")
     s = server.stats
     print(f"distances/query = {s.dists_per_query:.0f} / {args.corpus} "

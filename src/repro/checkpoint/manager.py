@@ -52,7 +52,9 @@ def _from_storable(arr: np.ndarray, logical: str) -> np.ndarray:
 
 
 def _flatten_with_paths(tree: Any):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists on jax >= 0.4.38; the
+    # tree_util spelling works on every version this repo supports.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

@@ -21,6 +21,41 @@ Every step is dense, batched and masked: pruning whole 128-point blocks is
 exactly the granularity at which a TPU can actually skip work.  Exactness is
 preserved (no approximation anywhere) — this is still the paper's *exact*
 search, reorganised.
+
+Query engine architecture
+-------------------------
+
+Two query paths share one index:
+
+* **Fused batched path** (``bss_query_batched`` / ``bss_knn_batched``) — the
+  production engine.  The whole query runs inside a single jitted function:
+  query→pivot distances, the planar lower bound over every (query, block)
+  pair, a (query-tile × block) survival mask, and exact distances for the
+  surviving cells only.  On TPU the lower bound and the masked exact phase
+  are the Pallas kernels (``planar_lower_bound_kernel_call`` and
+  ``masked_pairwise_l2_kernel_call``); off-TPU the same jitted graph routes
+  through pure-jnp math so XLA still fuses it (``backend="auto"`` picks per
+  ``jax.default_backend()``; tests force ``"pallas"`` + ``interpret=True``
+  to exercise the kernel wiring everywhere).  The jnp exact phase is
+  adaptive in survivor density: sparse survivors gather only the alive
+  (query, block) cells; dense survivors run one GEMM with the hit test
+  fused into its output traversal (squared-domain for l2, no distance
+  matrix materialised) — both return compact hits, so nothing O(Q·N)
+  crosses back to the host.  kNN is the range reduction run as *batched
+  radius deepening*: one jitted round over all queries per iteration, with
+  each query's kth-nearest-so-far distance tightening its radius (and
+  therefore the survival mask) for the next round, and ``jax.lax.top_k``
+  extracting candidates.
+
+* **Numpy oracle path** (``bss_query``) — the original per-block host loop,
+  kept verbatim as the correctness oracle: it shares the index build and the
+  lower-bound definition but evaluates the exact phase in float64 numpy.
+  The test suite asserts the fused path reproduces its hit lists exactly;
+  it is also the baseline the benchmarks measure the fused path against.
+
+``BSSIndex`` stores the build products as host numpy arrays (cheap to
+pickle, friendly to the oracle) and mirrors them into device arrays on
+first use (``index.device``) so repeated queries pay no host→device copies.
 """
 
 from __future__ import annotations
@@ -28,6 +63,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +73,33 @@ from repro.core import projection
 from repro.core.distances import METRICS, Metric
 from repro.core.npdist import pairwise_np
 from repro.core.refpoints import select_fft
+from repro.kernels.pairwise_dist import (
+    masked_pairwise_l2_kernel_call,
+    pairwise_l2_kernel_call,
+)
+from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
 
-__all__ = ["BSSIndex", "build_bss", "bss_query", "bss_lower_bounds"]
+__all__ = [
+    "BSSIndex",
+    "build_bss",
+    "bss_query",
+    "bss_query_batched",
+    "bss_knn_batched",
+    "bss_lower_bounds",
+]
+
+_DEFAULT_BQ = 128  # query-tile size: matches the Pallas kernels' row tiling
+
+
+class BSSDeviceArrays(NamedTuple):
+    """Device-resident mirror of the index, built once per index."""
+
+    data: jnp.ndarray    # (n_pad, dim)
+    pivots: jnp.ndarray  # (P, dim)
+    pairs: jnp.ndarray   # (M, 2)
+    deltas: jnp.ndarray  # (M,)
+    boxes: jnp.ndarray   # (n_blocks, M, 4)
+    valid: jnp.ndarray   # (n_pad,) bool
 
 
 @dataclasses.dataclass
@@ -52,14 +113,34 @@ class BSSIndex:
     deltas: np.ndarray        # (M,)
     boxes: np.ndarray         # (n_blocks, M, 4) = x_lo, x_hi, y_lo, y_hi
     block: int
+    _device: BSSDeviceArrays | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def n_blocks(self) -> int:
         return self.boxes.shape[0]
 
     @property
+    def n_valid(self) -> int:
+        return int(self.valid.sum())
+
+    @property
     def metric(self) -> Metric:
         return METRICS[self.metric_name]
+
+    @property
+    def device(self) -> BSSDeviceArrays:
+        if self._device is None:
+            self._device = BSSDeviceArrays(
+                data=jnp.asarray(self.data, jnp.float32),
+                pivots=jnp.asarray(self.pivots, jnp.float32),
+                pairs=jnp.asarray(self.pairs, jnp.int32),
+                deltas=jnp.asarray(self.deltas, jnp.float32),
+                boxes=jnp.asarray(self.boxes, jnp.float32),
+                valid=jnp.asarray(self.valid),
+            )
+        return self._device
 
 
 def _project_all(dp: np.ndarray, pairs: np.ndarray, deltas: np.ndarray):
@@ -161,15 +242,15 @@ def _lower_bounds_jit(
     deltas: jnp.ndarray,
     boxes: jnp.ndarray,
 ) -> jnp.ndarray:
-    """(Q, n_blocks) sound lower bound on d(q, any point in block)."""
-    metric = METRICS[metric_name]
-    dqp = metric.pairwise(queries, pivots)  # (Q, P)
-    d1 = dqp[:, pairs[:, 0]]
-    d2 = dqp[:, pairs[:, 1]]
-    qx, qy = projection.project(d1, d2, deltas[None, :])  # (Q, M)
-    # (Q, 1, M) vs boxes (1, B, M, 4) -> per-plane bound, max over planes.
-    lb = projection.point_to_box(qx[:, None, :], qy[:, None, :], boxes[None])
-    return jnp.max(lb, axis=-1)  # (Q, B)
+    """(Q, n_blocks) sound lower bound on d(q, any point in block).
+
+    Thin jit wrapper over the shared bound math in ``_fused_lower_bounds``
+    (jnp branch) — one definition serves the oracle, the stats helpers and
+    the fused engine alike."""
+    return _fused_lower_bounds(
+        metric_name, queries, pivots, pairs, deltas, boxes,
+        backend="jnp", bq=_DEFAULT_BQ, interpret=None,
+    )
 
 
 def bss_lower_bounds(index: BSSIndex, queries: np.ndarray) -> np.ndarray:
@@ -188,9 +269,11 @@ def bss_lower_bounds(index: BSSIndex, queries: np.ndarray) -> np.ndarray:
 def bss_query(
     index: BSSIndex, queries: np.ndarray, t: float
 ) -> tuple[list[list[int]], dict]:
-    """Exact range search.  Returns per-query hit lists (original indices)
-    and stats including the paper's figure of merit (distances/query:
-    P pivot distances + 128 per surviving block)."""
+    """Exact range search — the NUMPY ORACLE path (see module docstring).
+
+    Returns per-query hit lists (original indices) and stats including the
+    paper's figure of merit (distances/query: P pivot distances + 128 per
+    surviving block)."""
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     lb = bss_lower_bounds(index, queries)  # (Q, B)
@@ -219,3 +302,550 @@ def bss_query(
         "n_blocks": int(index.n_blocks),
     }
     return results, stats
+
+
+# ---------------------------------------------------------------------------
+# Fused batched engine
+# ---------------------------------------------------------------------------
+
+
+def _tile_survival(alive: jnp.ndarray, bq: int) -> jnp.ndarray:
+    """(Q, B) per-query survival -> (ceil(Q/bq), B) tile survival: a tile
+    lives when ANY of its queries does (jnp ops — usable in and out of jit;
+    host callers wrap the result in np.asarray)."""
+    qtiles = -(-alive.shape[0] // bq)
+    alive_pad = jnp.pad(
+        alive, ((0, qtiles * bq - alive.shape[0]), (0, 0)),
+        constant_values=False,
+    )
+    return alive_pad.reshape(qtiles, bq, -1).any(axis=1)
+
+
+def _resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"backend must be auto|pallas|jnp, got {backend!r}")
+    return backend
+
+
+def _fused_lower_bounds(
+    metric_name: str,
+    queries: jnp.ndarray,
+    dev_pivots: jnp.ndarray,
+    dev_pairs: jnp.ndarray,
+    dev_deltas: jnp.ndarray,
+    dev_boxes: jnp.ndarray,
+    *,
+    backend: str,
+    bq: int,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    """(Q, B) planar lower bounds, through the Pallas kernel or pure jnp."""
+    metric = METRICS[metric_name]
+    if backend == "pallas" and metric_name == "l2":
+        dqp = pairwise_l2_kernel_call(queries, dev_pivots, interpret=interpret)
+    else:
+        dqp = metric.pairwise(queries, dev_pivots)  # (Q, P)
+    d1 = dqp[:, dev_pairs[:, 0]]
+    d2 = dqp[:, dev_pairs[:, 1]]
+    if backend == "pallas":
+        return planar_lower_bound_kernel_call(
+            d1, d2, dev_deltas, dev_boxes, bq=bq, interpret=interpret
+        )
+    qx, qy = projection.project(d1, d2, dev_deltas[None, :])  # (Q, M)
+    # (Q, 1, M) vs boxes (1, B, M, 4) -> per-plane bound, max over planes.
+    lb = projection.point_to_box(qx[:, None, :], qy[:, None, :], dev_boxes[None])
+    return jnp.max(lb, axis=-1)  # (Q, B)
+
+
+def _masked_exact_dists(
+    metric_name: str,
+    queries: jnp.ndarray,
+    dev_data: jnp.ndarray,
+    dev_valid: jnp.ndarray,
+    tile_mask: jnp.ndarray,
+    *,
+    backend: str,
+    block: int,
+    bq: int,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    """(Q, n_pad) exact distances for surviving (query-tile × block) cells;
+    +inf everywhere the mask (or padding) excluded.
+
+    Known limitation of the jnp branch: the dense pairwise is computed and
+    then masked, so XLA does not skip the excluded tiles' arithmetic the
+    way the Pallas kernel does on TPU — acceptable for the kNN rounds at
+    current scales; a cell-gather realisation (as in the range path) is
+    the upgrade when kNN serving needs to scale off-TPU."""
+    if backend == "pallas" and metric_name == "l2":
+        dist = masked_pairwise_l2_kernel_call(
+            queries, dev_data, tile_mask, bm=bq, bn=block, interpret=interpret
+        )
+    else:
+        # Same masked semantics through XLA: dense metric distances with the
+        # survival mask applied.  (The Pallas masked kernel is l2-only; the
+        # other supermetrics go through their jnp pairwise.)
+        metric = METRICS[metric_name]
+        dense = metric.pairwise(queries, dev_data)  # (Q, n_pad)
+        mrep = jnp.repeat(
+            jnp.repeat(tile_mask, bq, axis=0)[: queries.shape[0]],
+            block,
+            axis=1,
+        )[:, : dev_data.shape[0]]
+        dist = jnp.where(mrep, dense, jnp.inf)
+    return jnp.where(dev_valid[None, :], dist, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("metric_name", "block", "cap"))
+def _cells_exact_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data: jnp.ndarray,
+    valid: jnp.ndarray,
+    qidx: jnp.ndarray,
+    bidx: jnp.ndarray,
+    cell_valid: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    block: int,
+    cap: int,
+):
+    """Exact phase over an explicit alive-cell list — the XLA realisation of
+    the masked Pallas kernel's tile skipping: only the C surviving
+    (query, block) cells are gathered and evaluated, and hits leave the
+    device as a fixed-capacity compact list instead of a dense (Q, N)
+    matrix.  Returns (hit_q (cap,), hit_pos (cap,), n_hits); entries past
+    n_hits are -1.  Row-major over (cell, offset) with cells sorted by
+    (query, block), so per-query hits come out in ascending position order —
+    the oracle's order."""
+    dim = data.shape[-1]
+    blocks = data.reshape(-1, block, dim)
+    gathered = blocks[bidx]  # (C, block, dim)
+    qs = queries[qidx]  # (C, dim)
+    metric = METRICS[metric_name]
+    d = jax.vmap(lambda a, b: metric.pairwise(a[None], b)[0])(qs, gathered)
+    pvalid = valid.reshape(-1, block)[bidx]  # (C, block)
+    hit = (d <= t) & pvalid & cell_valid[:, None]
+    flat = hit.reshape(-1)
+    n_hits = jnp.sum(flat)
+    (pos,) = jnp.nonzero(flat, size=cap, fill_value=-1)
+    cell = pos // block
+    off = pos % block
+    hit_q = jnp.where(pos >= 0, qidx[cell], -1)
+    hit_pos = jnp.where(pos >= 0, bidx[cell] * block + off, -1)
+    return hit_q, hit_pos, n_hits
+
+
+def _next_pow2(x: int, lo: int = 16) -> int:
+    return max(lo, 1 << (max(x, 1) - 1).bit_length())
+
+
+# Above this alive-cell fraction the jnp backend computes the dense distance
+# matrix (one big GEMM beats ragged gathers); below it, only the surviving
+# cells are gathered.  Empirically ~0.08 on CPU; either branch is exact.
+_DENSE_ALIVE_FRAC = 0.08
+
+
+@partial(jax.jit, static_argnames=("metric_name", "block"))
+def _dense_hit_mask_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data: jnp.ndarray,
+    valid: jnp.ndarray,
+    alive: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    block: int,
+):
+    """Dense exact pass returning the (Q, N) hit BITMASK.
+
+    One big GEMM with the hit test fused into its output traversal — for l2
+    the test runs in the squared domain rearranged as
+    ``|p|^2 - 2 q.p <= t^2 - |q|^2`` (no sqrt, and the f32 distance matrix
+    itself is never materialised as an output) — masked by the per-query
+    block survival.  Bools are 4x cheaper than the distances to move, and
+    position extraction is a single host ``np.nonzero`` over the mask
+    (XLA's sized ``nonzero`` costs seconds at this size; numpy's scan is
+    milliseconds)."""
+    nq = queries.shape[0]
+    if metric_name == "l2":
+        qf = queries.astype(jnp.float32)
+        df = data.astype(jnp.float32)
+        s = -2.0 * (qf @ df.T) + jnp.sum(df * df, axis=-1)[None, :]
+        thresh = t * t - jnp.sum(qf * qf, axis=-1)  # (Q,)
+        raw_hit = s <= thresh[:, None]
+    else:
+        metric = METRICS[metric_name]
+        raw_hit = metric.pairwise(queries, data) <= t
+    hit = (
+        raw_hit.reshape(nq, -1, block)
+        & alive[:, :, None]
+        & valid.reshape(1, -1, block)
+    )
+    return hit.reshape(nq, -1)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "block", "bq", "backend", "interpret"),
+)
+def _query_batched_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    t: jnp.ndarray,
+    dev: BSSDeviceArrays,
+    *,
+    block: int,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+):
+    """One fused range-search pass.  Returns (dist (Q, n_pad), alive (Q, B),
+    tile_mask (Qtiles, B)).
+
+    dist is +inf wherever the planar bound excluded the cell (or padding);
+    every finite entry is an exact metric distance.  Exactness: a tile
+    survives when ANY of its queries has lb <= t, so no true hit of any
+    query is ever pruned (per-query hits are re-filtered by d <= t)."""
+    lb = _fused_lower_bounds(
+        metric_name, queries, dev.pivots, dev.pairs, dev.deltas, dev.boxes,
+        backend=backend, bq=bq, interpret=interpret,
+    )  # (Q, B)
+    alive = lb <= t
+    tile_mask = _tile_survival(alive, bq)  # (Qtiles, B)
+    dist = _masked_exact_dists(
+        metric_name, queries, dev.data, dev.valid, tile_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )
+    return dist, alive, tile_mask
+
+
+def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) -> dict:
+    """The paper's figure of merit for a fused pass.  ``alive`` counts each
+    query's own surviving blocks (the oracle's accounting, comparable across
+    engines); ``tiles_computed`` counts what the hardware actually ran
+    (tile-level OR over the query tile)."""
+    bsz = index.block
+    n_pivots = index.pivots.shape[0]
+    survived = alive.sum(axis=1)
+    mean_exact = float((survived * bsz).mean()) if survived.size else 0.0
+    return {
+        "pivot_dists_per_query": float(n_pivots),
+        "exact_dists_per_query": mean_exact,
+        "dists_per_query": float(n_pivots) + mean_exact,
+        "block_exclusion_rate": float(1.0 - alive.mean()) if alive.size else 1.0,
+        "tiles_computed": int(tile_mask.sum()),
+        "tile_exclusion_rate": (
+            float(1.0 - tile_mask.mean()) if tile_mask.size else 1.0
+        ),
+        "n_blocks": int(index.n_blocks),
+    }
+
+
+def bss_query_batched(
+    index: BSSIndex,
+    queries: np.ndarray,
+    t: float,
+    *,
+    bq: int = _DEFAULT_BQ,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[list[list[int]], dict]:
+    """Exact range search through the fused jitted engine.
+
+    Bit-equal to the ``bss_query`` oracle's hit lists (same indices, same
+    per-query order) whenever float32 and float64 agree on ``d <= t`` —
+    which the test suite enforces at safe thresholds.
+
+    The ``pallas`` backend runs the dense masked kernel (tile skipping on
+    TPU, interpret mode in tests).  The ``jnp`` backend picks its exact
+    phase by survivor density: below ``_DENSE_ALIVE_FRAC`` only the alive
+    (query, block) cells are gathered (``_cells_exact_jit``); above it one
+    dense per-query-masked pass wins (``_dense_hit_mask_jit``).  Either
+    way only compact hits / a bitmask cross back to the host — never the
+    distance matrix."""
+    backend = _resolve_backend(backend)
+    queries = np.asarray(queries, np.float32)
+    nq = queries.shape[0]
+    if nq == 0:
+        return [], _batched_stats(
+            index,
+            np.zeros((0, index.n_blocks), bool),
+            np.zeros((0, index.n_blocks), bool),
+        )
+    dev = index.device
+    if backend == "jnp":
+        qj = jnp.asarray(queries)
+        lb = np.asarray(
+            _lower_bounds_jit(
+                index.metric_name, qj, dev.pivots, dev.pairs, dev.deltas,
+                dev.boxes,
+            )
+        )
+        alive = lb <= t
+        if alive.mean() > _DENSE_ALIVE_FRAC:
+            mask = np.asarray(
+                _dense_hit_mask_jit(
+                    index.metric_name, qj, dev.data, dev.valid,
+                    jnp.asarray(alive), jnp.float32(t), block=index.block,
+                )
+            )
+            hit_q, hit_pos = np.nonzero(mask)  # (query, position) ascending
+        else:
+            qidx, bidx = np.nonzero(alive)  # sorted by (query, block)
+            c = len(qidx)
+            c_pad = _next_pow2(c)
+            cell_valid = jnp.asarray(np.arange(c_pad) < c)
+            qidx_p = jnp.asarray(np.pad(qidx, (0, c_pad - c)), jnp.int32)
+            bidx_p = jnp.asarray(np.pad(bidx, (0, c_pad - c)), jnp.int32)
+            cap = _next_pow2(8 * max(nq, 1), lo=1024)
+            while True:
+                hit_q, hit_pos, n_hits = _cells_exact_jit(
+                    index.metric_name, qj, dev.data, dev.valid,
+                    qidx_p, bidx_p, cell_valid, jnp.float32(t),
+                    block=index.block, cap=cap,
+                )
+                n_hits = int(n_hits)
+                if n_hits <= cap:
+                    break
+                cap = _next_pow2(n_hits)  # rare: recompile, bigger bucket
+            hit_q = np.asarray(hit_q)[:n_hits]
+            hit_pos = np.asarray(hit_pos)[:n_hits]
+        orig = index.perm[hit_pos]
+        counts = np.bincount(hit_q, minlength=nq)
+        per_query = np.split(orig, np.cumsum(counts)[:-1])
+        results = [r.tolist() for r in per_query]
+        tile_mask = np.asarray(_tile_survival(jnp.asarray(alive), bq))
+        stats = _batched_stats(index, alive, tile_mask)
+        return results, stats
+    dist, alive, tile_mask = _query_batched_jit(
+        index.metric_name,
+        jnp.asarray(queries),
+        jnp.float32(t),
+        dev,
+        block=index.block,
+        bq=bq,
+        backend=backend,
+        interpret=interpret,
+    )
+    dist = np.asarray(dist)
+    hit = dist <= t
+    qidx, pidx = np.nonzero(hit)  # row-major: pidx ascending within a query
+    orig = index.perm[pidx]
+    counts = hit.sum(axis=1)
+    per_query = np.split(orig, np.cumsum(counts)[:-1])
+    results = [r.tolist() for r in per_query]
+    stats = _batched_stats(index, np.asarray(alive), np.asarray(tile_mask))
+    return results, stats
+
+
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "block", "bq", "k", "backend", "interpret"),
+)
+def _knn_round_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    radii: jnp.ndarray,
+    lb: jnp.ndarray,
+    dev: BSSDeviceArrays,
+    *,
+    k: int,
+    block: int,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+):
+    """One batched radius-deepening round over ALL queries.
+
+    ``lb`` is the radius-independent (Q, B) planar bound matrix, computed
+    once by the caller and reused across rounds.  Returns (cand_idx (Q, k)
+    positions in the permuted layout, cand_dist (Q, k) ascending, kth (Q,),
+    done (Q,), alive (Q, B), tile_mask).
+
+    ``done`` is sound: if the kth-smallest computed distance is <= the
+    query's radius, every unevaluated point sits in a block whose planar
+    lower bound exceeds the radius, hence is farther than the kth candidate
+    — the top-k is final."""
+    alive = lb <= radii[:, None]
+    tile_mask = _tile_survival(alive, bq)
+    dist = _masked_exact_dists(
+        metric_name, queries, dev.data, dev.valid, tile_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )  # (Q, n_pad), +inf where pruned/padding
+    neg, cand_idx = jax.lax.top_k(-dist, k)  # k smallest distances
+    cand_dist = -neg  # ascending
+    kth = cand_dist[:, -1]
+    # done when nothing unevaluated can beat the kth candidate: either the
+    # radius covers it, or every block was computed anyway.
+    done = jnp.isfinite(kth) & ((kth <= radii) | jnp.all(alive, axis=1))
+    return cand_idx, cand_dist, kth, done, alive, tile_mask
+
+
+@partial(jax.jit, static_argnames=("metric_name", "bq", "backend", "interpret"))
+def _knn_lb_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    dev: BSSDeviceArrays,
+    *,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    return _fused_lower_bounds(
+        metric_name, queries, dev.pivots, dev.pairs, dev.deltas, dev.boxes,
+        backend=backend, bq=bq, interpret=interpret,
+    )
+
+
+def bss_knn_batched(
+    index: BSSIndex,
+    queries: np.ndarray,
+    k: int,
+    *,
+    r0: float | None = None,
+    growth: float = 2.0,
+    max_rounds: int = 8,
+    bq: int = _DEFAULT_BQ,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Exact batched kNN: the range-search reduction run as jitted
+    radius-deepening rounds over all queries at once.
+
+    Round scheme (each round is ONE jitted call, fixed shapes, no recompiles):
+      * every query carries its own radius; blocks with planar bound above it
+        are excluded from the masked exact phase;
+      * ``jax.lax.top_k`` extracts the k nearest computed candidates;
+      * a query is finished when its kth candidate distance <= its radius
+        (soundness argument in ``_knn_round_jit``);
+      * unfinished queries tighten AND widen: the kth-nearest-so-far
+        distance is an upper bound on the true kth distance, so the next
+        radius is ``min(kth_so_far, widened)`` where ``widened`` is the
+        per-query radius that doubles the number of surviving blocks (read
+        off the query's sorted block bounds — scale-free, so convergence
+        takes at most ~log2(n_blocks) rounds).  One extra round at radius
+        ``kth_so_far`` is always sufficient; the min keeps the mask as
+        tight as the current evidence allows.  After ``max_rounds`` any
+        stragglers run one exhaustive round (radius = inf), so the result
+        is always exact.
+
+    The initial radius (when ``r0`` is None) is per-query and scale-free:
+    the ceil(2k/block)-th smallest block bound — the smallest radius that
+    could possibly admit 2k candidate points, by the bound's own ordering.
+
+    Returns (indices (Q, k) original ids sorted by ascending distance — -1
+    when the corpus holds fewer than k valid points, distances (Q, k), stats).
+    """
+    backend = _resolve_backend(backend)
+    queries = np.asarray(queries, np.float32)
+    nq = queries.shape[0]
+    k = int(k)
+    if k <= 0:
+        raise ValueError(f"k must be positive, got {k}")
+    if nq == 0:
+        return (
+            np.zeros((0, k), np.int64),
+            np.zeros((0, k), np.float32),
+            {"rounds": 0, "pivot_dists_per_query": 0.0,
+             "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+             "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
+        )
+    # clamp to the VALID corpus size: with k_run > n_valid the kth distance
+    # would stay inf and no round could ever finish early
+    k_run = min(k, index.n_valid)
+    if k_run == 0:
+        return (
+            np.full((nq, k), -1, np.int64),
+            np.full((nq, k), np.inf, np.float32),
+            {"rounds": 0, "pivot_dists_per_query": 0.0,
+             "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+             "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
+        )
+    dev = index.device
+    qj = jnp.asarray(queries)
+
+    # The (Q, B) planar bounds are radius-independent: compute them once
+    # (through the selected backend) and reuse across every round — the
+    # device copy feeds the rounds, the sorted host copy drives the initial
+    # radius and the per-round widening schedule.
+    lb_dev = _knn_lb_jit(
+        index.metric_name, qj, dev, bq=bq, backend=backend, interpret=interpret
+    )
+    lb_sorted = np.sort(np.asarray(lb_dev), axis=1)
+    n_blocks = index.n_blocks
+    if r0 is None:
+        j0 = min(n_blocks - 1, max(0, math.ceil(2 * k / index.block) - 1))
+        radii = lb_sorted[:, j0].astype(np.float32)
+    else:
+        radii = np.full(nq, float(r0), np.float32)
+
+    total_alive = np.zeros(nq, np.int64)
+    tiles_total = 0
+    done = np.zeros(nq, bool)
+    cand_idx = np.full((nq, k_run), 0, np.int64)
+    cand_dist = np.full((nq, k_run), np.inf, np.float32)
+    rounds = 0
+    for rounds in range(1, max_rounds + 2):
+        if rounds == max_rounds + 1:
+            # exhaustive fallback for stragglers: radius inf computes every
+            # block, so the round below is guaranteed final for them.
+            radii = np.where(done, radii, np.inf).astype(np.float32)
+        ci, cd, kth, dn, alive, tile_mask = _knn_round_jit(
+            index.metric_name, qj, jnp.asarray(radii), lb_dev, dev,
+            k=k_run, block=index.block, bq=bq, backend=backend,
+            interpret=interpret,
+        )
+        ci, cd, kth, dn, alive = (
+            np.asarray(ci), np.asarray(cd), np.asarray(kth),
+            np.asarray(dn), np.asarray(alive),
+        )
+        upd = ~done  # freeze finished queries (their results are final)
+        cand_idx[upd] = ci[upd]
+        cand_dist[upd] = cd[upd]
+        total_alive[upd] += alive[upd].sum(axis=1)
+        tiles_total += int(np.asarray(tile_mask).sum())
+        done = done | dn
+        if done.all():
+            break
+        # widen to the radius that (at least) doubles the surviving blocks,
+        # tighten by the kth-nearest-so-far where we already hold k
+        # candidates — min() keeps the next mask as small as evidence allows.
+        n_alive = alive.sum(axis=1)
+        j_next = np.minimum(
+            n_blocks - 1,
+            np.maximum(np.maximum(2 * n_alive, n_alive + 1), 1),
+        )
+        widened = np.maximum(lb_sorted[np.arange(nq), j_next], radii * growth)
+        # finished queries get a negative radius: lb >= 0, so their alive
+        # rows empty out and they stop contributing blocks/tiles to the
+        # remaining rounds (their results are already frozen above)
+        radii = np.where(
+            done, np.float32(-1.0),
+            np.where(np.isfinite(kth), np.minimum(kth, widened), widened),
+        ).astype(np.float32)
+        # unprunable query (most blocks already alive): grinding more
+        # rounds just re-evaluates them — finish exhaustively instead
+        radii = np.where(
+            ~done & (n_alive > n_blocks // 2), np.float32(np.inf), radii
+        )
+
+    n_pivots = index.pivots.shape[0]
+    dists_pq = n_pivots + total_alive.astype(np.float64) * index.block
+    stats = {
+        "rounds": rounds,
+        "pivot_dists_per_query": float(n_pivots),
+        "exact_dists_per_query": float((total_alive * index.block).mean()),
+        "dists_per_query": float(dists_pq.mean()),
+        "tiles_computed": tiles_total,
+        "n_blocks": int(index.n_blocks),
+    }
+    orig = np.where(np.isfinite(cand_dist), index.perm[cand_idx], -1)
+    if k_run < k:  # corpus smaller than k: pad out to the requested width
+        orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)
+        cand_dist = np.pad(
+            cand_dist, ((0, 0), (0, k - k_run)), constant_values=np.inf
+        )
+    return orig, cand_dist, stats

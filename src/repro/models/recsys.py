@@ -299,7 +299,20 @@ class TwoTowerModel(_RecsysBase):
                                      qy[:, None, :] - boxes[None, :, :, 3]), 0.0)
         lb = jnp.max(jnp.sqrt(dx * dx + dy * dy), axis=-1)  # (Q, B_blocks)
 
-        top = jnp.argsort(lb, axis=1)[:, :budget_blocks]  # (Q, budget)
+        # Rank blocks by (lower bound, distance-to-box-centres): overlapping
+        # boxes give lb == 0 ties for most blocks, where the bound alone
+        # degenerates to block-id order (an arbitrary subset).  The centre
+        # proximity is a pure ordering heuristic — soundness/exactness only
+        # ever depend on WHICH blocks are inside the budget being verified
+        # downstream, never on this tie-break.
+        cx = 0.5 * (boxes[None, :, :, 0] + boxes[None, :, :, 1])
+        cy = 0.5 * (boxes[None, :, :, 2] + boxes[None, :, :, 3])
+        cdist = jnp.mean(
+            jnp.sqrt((qx[:, None, :] - cx) ** 2 + (qy[:, None, :] - cy) ** 2),
+            axis=-1,
+        )  # (Q, B_blocks)
+        order = jnp.lexsort((cdist, lb), axis=1)  # lb primary, cdist ties
+        top = order[:, :budget_blocks]  # (Q, budget)
         cand_pad = jnp.pad(cand, ((0, n_pad - n), (0, 0)))
         blocks = cand_pad.reshape(b_blocks, block, e_dim)
         picked = blocks[top]  # (Q, budget, block, E) — the pruned gather

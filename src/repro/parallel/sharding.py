@@ -67,14 +67,23 @@ def abstract_with_sharding(shape_tree: Any, sharding_tree: Any) -> Any:
     )
 
 
+def _no_active_mesh() -> bool:
+    try:
+        from jax.sharding import get_abstract_mesh
+    except ImportError:
+        # jax <= 0.4.37: the `with mesh:` context lives in thread_resources
+        from jax.interpreters import pxla
+
+        return pxla.thread_resources.env.physical_mesh.empty
+    m = get_abstract_mesh()
+    return m is None or m.empty
+
+
 def maybe_constrain(x, spec: P):
     """with_sharding_constraint that is a no-op when no mesh is active
     (lets the same model code run in single-device smoke tests and in
     pjit-partitioned production graphs)."""
-    from jax.sharding import get_abstract_mesh
-
-    m = get_abstract_mesh()
-    if m is None or m.empty:
+    if _no_active_mesh():
         return x
     return jax.lax.with_sharding_constraint(x, spec)
 

@@ -141,7 +141,14 @@ def test_int8_kv_cache_decode_close():
 
 def test_supermetric_pruned_retrieval_beats_random():
     """Pruned scoring with the planar bound recalls far more of the true
-    top-k than a random block subset of the same budget."""
+    top-k than a random block subset of the same budget.
+
+    The corpus is clustered around user-tower outputs — the geometry a
+    *trained* two-tower model produces (items gather around user-interest
+    regions), and the regime the paper's exclusion targets.  An isotropic
+    random corpus in 256-d has no structure for ANY exact method to exploit
+    (the paper's own intrinsic-dimensionality caveat), which is why the
+    earlier formulation of this test was flaky."""
     import numpy as np
     from repro.core import flat_index
 
@@ -150,12 +157,17 @@ def test_supermetric_pruned_retrieval_beats_random():
     params = model.init_params(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     n = 128 * 64
-    cand = np.asarray(model.item_embed(
-        params, rng.integers(0, cfg.vocab, size=(n, cfg.n_item_fields))),
-        np.float32)
-    idx = flat_index.build_bss("l2", cand, n_pivots=8, n_pairs=12,
+    centre_ids = rng.integers(0, cfg.vocab, size=(20, cfg.n_user_fields))
+    centres = np.asarray(model.user_embed(params, centre_ids), np.float32)
+    e_dim = centres.shape[1]
+    cand = centres[rng.integers(0, 20, size=n)] + (
+        0.3 / np.sqrt(e_dim)
+    ) * rng.normal(size=(n, e_dim)).astype(np.float32)
+    cand /= np.linalg.norm(cand, axis=1, keepdims=True)
+    idx = flat_index.build_bss("l2", cand, n_pivots=8, n_pairs=16,
                                block=128, seed=1)
-    user_ids = rng.integers(0, cfg.vocab, size=(4, cfg.n_user_fields))
+    nq = 8
+    user_ids = rng.integers(0, cfg.vocab, size=(nq, cfg.n_user_fields))
     batch = {
         "user_ids": jnp.asarray(user_ids),
         "candidates": jnp.asarray(idx.data),
@@ -171,9 +183,9 @@ def test_supermetric_pruned_retrieval_beats_random():
         params, {"user_ids": jnp.asarray(user_ids),
                  "candidates": jnp.asarray(idx.data)})
     got = 0
-    for q in range(4):
+    for q in range(nq):
         want = set(np.argsort(-np.asarray(dense[q]))[:10].tolist())
         r, s = np.asarray(rows[q]), np.asarray(scores[q])
         got += len(want & set(r[np.argsort(-s)[:10]].tolist()))
-    recall = got / 40
+    recall = got / (nq * 10)
     assert recall > 1.5 * (budget / 64), (recall, budget / 64)

@@ -1,0 +1,219 @@
+"""Fused batched BSS engine vs the numpy oracle.
+
+The contract under test: ``bss_query_batched`` / ``bss_knn_batched`` return
+EXACTLY the numpy path's results — same hit indices, same per-query order
+for range search; the same neighbour set for kNN — across metrics, odd
+shapes, padded blocks, and both backends (pure-jnp and the Pallas kernels
+in interpret mode).
+
+Thresholds are snapped to midpoints of well-separated gaps in the true
+(float64) distance distribution so the float32 engine and the float64
+oracle cannot disagree about ``d <= t`` at the boundary — the comparison is
+then exact, not approximate.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+
+from repro.core import flat_index
+from repro.core.npdist import pairwise_np
+
+SUPERMETRICS = ["l2", "cosine", "jsd"]
+
+
+def _space(metric, n, dim, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, dim)).astype(np.float32) + 1e-3
+    if metric in ("jsd", "triangular"):
+        x /= x.sum(axis=1, keepdims=True)
+    return x
+
+
+def safe_threshold(dvals: np.ndarray, frac: float) -> float:
+    """A threshold at ~the given quantile, snapped to the midpoint of a
+    well-separated gap so float32 and float64 agree on every d <= t."""
+    vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+    i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+    for j in range(i, len(vals) - 1):
+        if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+            return float(0.5 * (vals[j] + vals[j + 1]))
+    return float(vals[-1] + 1.0)
+
+
+# ------------------------------------------------------------- range search
+
+# odd query counts, non-power-of-two corpora, blocks that end up padded
+SHAPES = [
+    ("l2", 801, 17, 64, 33),
+    ("l2", 1024, 32, 128, 128),
+    ("cosine", 513, 9, 128, 21),
+    ("jsd", 330, 11, 32, 7),
+    ("triangular", 257, 7, 64, 5),
+]
+
+
+@pytest.mark.parametrize("metric,n,dim,block,nq", SHAPES)
+def test_range_matches_oracle(metric, n, dim, block, nq):
+    data = _space(metric, n + nq, dim, seed=n + dim)
+    db, q = data[:n], data[n:]
+    idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                               block=block, seed=1)
+    t = safe_threshold(pairwise_np(metric, q, db), 0.02)
+    oracle, so = flat_index.bss_query(idx, q, t)
+    batched, sb = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    assert batched == oracle  # same indices AND same per-query order
+    # both paths prune identically (shared lower bound definition)
+    assert sb["dists_per_query"] == pytest.approx(so["dists_per_query"])
+    assert 0.0 <= sb["tile_exclusion_rate"] <= 1.0
+
+
+@pytest.mark.parametrize("metric", SUPERMETRICS)
+def test_range_matches_oracle_pallas_interpret(metric):
+    """Kernel wiring (interpret mode off-TPU) returns the oracle's hits."""
+    data = _space(metric, 450, 12, seed=3)
+    db, q = data[:420], data[420:]
+    idx = flat_index.build_bss(metric, db, n_pivots=6, n_pairs=8,
+                               block=128, seed=2)
+    t = safe_threshold(pairwise_np(metric, q, db), 0.03)
+    oracle, _ = flat_index.bss_query(idx, q, t)
+    batched, _ = flat_index.bss_query_batched(
+        idx, q, t, backend="pallas", interpret=True, bq=8
+    )
+    assert batched == oracle
+
+
+@pytest.mark.parametrize("t,expect_all", [(-1.0, False), (1e6, True)])
+def test_range_all_and_none_excluded(t, expect_all):
+    """Degenerate masks: a negative threshold excludes every block (lb >= 0
+    always; empty hit lists); a threshold above every distance computes
+    every cell — both must still match the oracle exactly."""
+    db = _space("l2", 400, 10, seed=9)
+    q = _space("l2", 23, 10, seed=10)
+    idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=64,
+                               seed=3)
+    oracle, _ = flat_index.bss_query(idx, q, t)
+    batched, sb = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    assert batched == oracle
+    if expect_all:
+        assert all(len(r) == len(db) for r in batched)
+        assert sb["block_exclusion_rate"] == 0.0
+    else:
+        assert all(len(r) == 0 for r in batched)
+        assert sb["block_exclusion_rate"] == 1.0
+
+
+# --------------------------------------------------------------------- kNN
+
+
+@pytest.mark.parametrize("metric,n,dim,block,nq,k", [
+    ("l2", 900, 16, 64, 37, 7),
+    ("l2", 1111, 24, 128, 128, 1),
+    ("cosine", 640, 12, 128, 19, 10),
+    ("jsd", 385, 9, 32, 11, 5),
+])
+def test_knn_matches_bruteforce(metric, n, dim, block, nq, k):
+    data = _space(metric, n + nq, dim, seed=n * 3 + k)
+    db, q = data[:n], data[n:]
+    idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                               block=block, seed=4)
+    truth = pairwise_np(metric, q, db)
+    want_idx = np.argsort(truth, axis=1)[:, :k]
+    got_idx, got_d, stats = flat_index.bss_knn_batched(
+        idx, q, k, backend="jnp"
+    )
+    for i in range(nq):
+        assert set(got_idx[i].tolist()) == set(want_idx[i].tolist()), i
+        np.testing.assert_allclose(  # ascending exact distances
+            got_d[i], np.sort(truth[i])[:k], rtol=1e-5, atol=1e-5
+        )
+    assert stats["rounds"] >= 1
+    assert stats["dists_per_query"] >= stats["pivot_dists_per_query"]
+
+
+def test_knn_pallas_interpret_matches_jnp():
+    db = _space("l2", 384, 8, seed=6)
+    q = _space("l2", 9, 8, seed=7)
+    idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=128,
+                               seed=5)
+    i_jnp, d_jnp, _ = flat_index.bss_knn_batched(idx, q, 6, backend="jnp")
+    i_pal, d_pal, _ = flat_index.bss_knn_batched(
+        idx, q, 6, backend="pallas", interpret=True, bq=8
+    )
+    np.testing.assert_array_equal(np.sort(i_jnp, 1), np.sort(i_pal, 1))
+    np.testing.assert_allclose(d_jnp, d_pal, rtol=1e-5, atol=1e-6)
+
+
+def test_knn_k_exceeding_corpus_pads():
+    db = _space("l2", 40, 6, seed=8)
+    q = _space("l2", 3, 6, seed=9)
+    idx = flat_index.build_bss("l2", db, n_pivots=4, n_pairs=4, block=32,
+                               seed=6)
+    got_idx, got_d, _ = flat_index.bss_knn_batched(idx, q, 50, backend="jnp")
+    assert got_idx.shape == (3, 50)
+    assert (got_idx[:, :40] >= 0).all() and (got_idx[:, 40:] == -1).all()
+    assert np.isinf(got_d[:, 40:]).all()
+    truth = pairwise_np("l2", q, db)
+    for i in range(3):
+        assert set(got_idx[i, :40].tolist()) == set(range(40))
+        np.testing.assert_allclose(got_d[i, :40], np.sort(truth[i]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_knn_fixed_r0_and_serving_path():
+    """An explicit initial radius (the serving layer's t0_guess) stays
+    exact, whether it starts too tight or too wide."""
+    db = _space("l2", 700, 14, seed=11)
+    q = _space("l2", 17, 14, seed=12)
+    idx = flat_index.build_bss("l2", db, n_pivots=8, n_pairs=10, block=64,
+                               seed=7)
+    truth = np.argsort(pairwise_np("l2", q, db), axis=1)[:, :5]
+    for r0 in (1e-6, 0.3, 100.0):
+        got, _, _ = flat_index.bss_knn_batched(idx, q, 5, r0=r0, backend="jnp")
+        for i in range(len(q)):
+            assert set(got[i].tolist()) == set(truth[i].tolist()), (r0, i)
+
+
+# -------------------------------------------------------------- soundness
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(100, 500),
+    st.integers(4, 24),
+    st.floats(0.005, 0.2),
+    st.integers(0, 10_000),
+)
+def test_no_excluded_block_contains_a_true_hit(n, dim, t_frac, seed):
+    """THE soundness property the engine's exactness rests on: for ANY
+    corpus/threshold, a block excluded by the planar lower bound never
+    contains a point within the search radius."""
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, dim)).astype(np.float32)
+    q = rng.random((8, dim)).astype(np.float32)
+    idx = flat_index.build_bss("l2", db, n_pivots=min(8, n), n_pairs=10,
+                               block=32, seed=seed % 23)
+    d = pairwise_np("l2", q, idx.data)
+    d = np.where(idx.valid[None, :], d, np.inf)
+    per_block_min = d.reshape(len(q), idx.n_blocks, idx.block).min(axis=2)
+    lb = flat_index.bss_lower_bounds(idx, q)
+    t = float(np.quantile(d[np.isfinite(d)], t_frac))
+    excluded = lb > t
+    # excluded => no point in the block at distance <= t (float tolerance:
+    # the bound is float32, the truth float64)
+    assert np.all(per_block_min[excluded] > t - 1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(100, 400), st.integers(3, 16), st.integers(0, 10_000))
+def test_batched_range_property(n, dim, seed):
+    """Property form of oracle equivalence on random spaces."""
+    rng = np.random.default_rng(seed)
+    db = rng.random((n, dim)).astype(np.float32)
+    q = rng.random((7, dim)).astype(np.float32)
+    idx = flat_index.build_bss("l2", db, n_pivots=min(8, n), n_pairs=8,
+                               block=32, seed=seed % 17)
+    t = safe_threshold(pairwise_np("l2", q, db), 0.05)
+    oracle, _ = flat_index.bss_query(idx, q, t)
+    batched, _ = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    assert batched == oracle

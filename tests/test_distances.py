@@ -2,8 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_shim import given, settings, st
 
 from repro.core import distances, projection
 from repro.core.npdist import pairwise_np

@@ -18,16 +18,15 @@ _SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.checkpoint.manager import CheckpointManager
 
-    auto = (jax.sharding.AxisType.Auto,)
-
     # --- elastic reshard: save under a (2,2) mesh, restore under (4,) ---
-    mesh_a = jax.make_mesh((2, 2), ("data", "model"), axis_types=auto * 2)
+    # (plain make_mesh: jax 0.4.37 has no axis_types kwarg / AxisType enum)
+    mesh_a = jax.make_mesh((2, 2), ("data", "model"))
     w = jnp.arange(64.0).reshape(8, 8)
     w_a = jax.device_put(w, NamedSharding(mesh_a, P("data", "model")))
     mgr = CheckpointManager(sys.argv[1])
     mgr.save(1, {"w": w_a})
 
-    mesh_b = jax.make_mesh((4,), ("data",), axis_types=auto)
+    mesh_b = jax.make_mesh((4,), ("data",))
     restored, _ = mgr.restore(
         {"w": w}, shardings={"w": NamedSharding(mesh_b, P("data", None))}
     )
@@ -45,7 +44,10 @@ _SCRIPT = textwrap.dedent("""
     model = type(model)(dataclasses.replace(cfg, batch_axes=("data",)))
     params = model.init_params(jax.random.PRNGKey(0))
     batch = batch_fn(jax.random.PRNGKey(1))
-    with jax.set_mesh(mesh_b):
+    # Mesh context manager instead of jax.set_mesh (added after 0.4.37);
+    # inputs carry explicit NamedShardings, the context only resolves
+    # named-axis constraints inside jit.
+    with mesh_b:
         params = jax.device_put(
             params, NamedSharding(mesh_b, P()))
         batch = jax.device_put(

@@ -132,9 +132,9 @@ def test_sat_centre_witness_soundness(small_space):
 
 
 # ---------------------------------------------------------------- hypothesis
+# (real hypothesis when installed; seeded parametrize fallback otherwise)
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hypothesis_shim import given, settings, st
 
 
 @settings(max_examples=15, deadline=None)
