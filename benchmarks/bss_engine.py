@@ -9,14 +9,25 @@ jitted: lower bound -> tile mask -> masked exact phase, see
 ``flat_index.bss_query_batched``) against the numpy-loop oracle path, and a
 dedicated scale row times both on a 65k-point corpus with 1k queries — the
 fused path must win wall-clock, that's the point of it existing.
+
+``run_all_metrics`` sweeps the paper's four supermetrics (l2, cosine, jsd,
+triangular) through the fused range AND kNN paths with oracle-exactness
+checks on a >=4k-point corpus per metric, and records distances/query +
+wall-clock per metric.  ``python -m benchmarks.bss_engine --all-metrics``
+additionally writes ``BENCH_bss_metrics.json`` so CI can archive the perf
+trajectory.
 """
 
 from __future__ import annotations
+
+import json
+import time
 
 import numpy as np
 
 from benchmarks.paper_common import FULL, load_space, row, timed
 from repro.core import flat_index, tree
+from repro.core.npdist import pairwise_np
 from repro.data import metricsets
 
 
@@ -82,6 +93,124 @@ def run(datasets=("colors", "nasa", "euc10"), seed: int = 0) -> list[str]:
     return rows
 
 
+# the paper's four supermetrics, each with a corpus its geometry is valid on
+SUPERMETRICS = ("l2", "cosine", "jsd", "triangular")
+
+
+def _metric_space(metric: str, n: int, nq: int, seed: int):
+    """(db, q, t) valid for the metric: the uniform Euclidean benchmark for
+    l2, clustered embeddings for cosine, topic histograms (probability
+    vectors) for jsd/triangular.  t targets ~1-5 hits/query."""
+    if metric in ("jsd", "triangular"):
+        data = metricsets.topics_surrogate(n + nq, dim=64, seed=seed)
+    elif metric == "cosine":
+        rng = np.random.default_rng(seed)
+        centres = rng.normal(size=(32, 48))
+        data = centres[rng.integers(0, 32, size=n + nq)] + 0.2 * rng.normal(
+            size=(n + nq, 48)
+        )
+    else:
+        data = metricsets.euc10(n + nq, seed=seed)
+    db, q = data[:n], data[n:]
+    t = metricsets.calibrate_threshold(metric, db, 2.0 / n, seed=seed)
+    return db.astype(np.float64), q.astype(np.float64), t
+
+
+def _range_rows_match(truth, hits_a, hits_b, t) -> bool:
+    """Hit-list equality with the same boundary caveat as the kNN check:
+    float32-engine vs float64-oracle disagreements are acceptable only for
+    points whose true distance is within float32 resolution of t."""
+    for i, (a, b) in enumerate(zip(hits_a, hits_b)):
+        diff = set(a) ^ set(b)
+        if diff and not all(
+            abs(truth[i][j] - t) <= 1e-5 * max(t, 1e-9) for j in diff
+        ):
+            return False
+    return True
+
+
+def _knn_row_matches(truth_row, got, want) -> bool:
+    """Set equality with the kth-boundary caveat: the float32 engine may
+    legitimately swap neighbours whose float64 distances are within float32
+    resolution of the kth distance — don't record those ties as an
+    exactness regression in the archived BENCH json."""
+    if set(got) == set(want):
+        return True
+    kth = truth_row[want[-1]]
+    diff = set(got) ^ set(want)
+    return all(
+        abs(truth_row[j] - kth) <= 1e-5 * max(kth, 1e-9) for j in diff
+    )
+
+
+def run_all_metrics(seed: int = 0, n: int | None = None, nq: int = 128,
+                    k: int = 10):
+    """Fused range + kNN vs oracle for every supermetric; returns
+    (csv rows, results dict for BENCH_bss_metrics.json)."""
+    n = n or (16_384 if FULL else 4_096)
+    rows, results = [], {}
+    for metric in SUPERMETRICS:
+        db, q, t = _metric_space(metric, n, nq, seed)
+        idx, dt_build = timed(
+            flat_index.build_bss, metric, db, n_pivots=16, n_pairs=24,
+            block=128, seed=seed,
+        )
+        (hits_np, so), dt_np = timed(flat_index.bss_query, idx, q, t)
+        flat_index.bss_query_batched(idx, q, t)  # warm-up (jit compile)
+        (hits_fused, sf), dt_range = timed(
+            flat_index.bss_query_batched, idx, q, t
+        )
+        truth = pairwise_np(metric, q, db)
+        # permuted-layout truth is not needed here: hit ids are original
+        # indices, so index truth by them directly
+        range_exact = hits_fused == hits_np or _range_rows_match(
+            truth, hits_fused, hits_np, t
+        )
+        want = np.argsort(truth, axis=1)[:, :k]
+        flat_index.bss_knn_batched(idx, q, k)  # warm-up
+        (knn_idx, _, sk), dt_knn = timed(flat_index.bss_knn_batched, idx, q, k)
+        knn_exact = all(
+            _knn_row_matches(truth[i], knn_idx[i].tolist(), want[i].tolist())
+            for i in range(len(q))
+        )
+        results[metric] = {
+            "corpus": int(n),
+            "queries": int(nq),
+            "build_s": round(dt_build, 3),
+            "range": {
+                "exact": bool(range_exact),
+                "dists_per_query": round(sf["dists_per_query"], 2),
+                "us_per_query": round(dt_range / nq * 1e6, 1),
+                "oracle_us_per_query": round(dt_np / nq * 1e6, 1),
+                "tile_exclusion_rate": round(sf["tile_exclusion_rate"], 4),
+            },
+            "knn": {
+                "k": k,
+                "exact": bool(knn_exact),
+                "rounds": int(sk["rounds"]),
+                "dists_per_query": round(sk["dists_per_query"], 2),
+                "us_per_query": round(dt_knn / nq * 1e6, 1),
+            },
+        }
+        rows.append(row(
+            f"bss/metrics/{metric}/range", dt_range / nq * 1e6,
+            f"exact={range_exact};dists_per_query={sf['dists_per_query']:.0f};"
+            f"tile_exclusion={sf['tile_exclusion_rate']:.3f};corpus={n}",
+        ))
+        rows.append(row(
+            f"bss/metrics/{metric}/knn{k}", dt_knn / nq * 1e6,
+            f"exact={knn_exact};rounds={sk['rounds']};"
+            f"dists_per_query={sk['dists_per_query']:.0f}",
+        ))
+    return rows, results
+
+
+def run_metrics(seed: int = 0) -> list[str]:
+    """Suite entry point (harness contract: rows only)."""
+    rows, _ = run_all_metrics(seed=seed)
+    return rows
+
+
 def _scale_row(seed: int) -> str:
     """65k-point corpus (112-d colors surrogate, the paper's colors
     dimensionality), 1k queries at ~5 hits/query: fused engine vs the
@@ -110,3 +239,38 @@ def _scale_row(seed: int) -> str:
         f"tile_exclusion={fstats['tile_exclusion_rate']:.3f};"
         f"build_s={dt_build:.1f};full={FULL}",
     )
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--all-metrics", action="store_true",
+                    help="sweep l2/cosine/jsd/triangular and write "
+                         "BENCH_bss_metrics.json")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_bss_metrics.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.all_metrics:
+        t0 = time.time()
+        rows, results = run_all_metrics(seed=args.seed)
+        for r in rows:
+            print(r, flush=True)
+        payload = {
+            "bench": "bss_metrics",
+            "seed": args.seed,
+            "wall_s": round(time.time() - t0, 1),
+            "full": FULL,
+            "metrics": results,
+        }
+        with open(args.out, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"# wrote {args.out}", flush=True)
+    else:
+        for r in run(seed=args.seed):
+            print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ def main() -> None:
         "lrt": paper_lrt.run,             # Fig. 15-16 (§5)
         "unbalance": paper_unbalance.run,  # §6 future work, implemented
         "bss": bss_engine.run,            # beyond-paper TPU engine
+        "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep
         "retrieval": retrieval_serving.run,  # serving integration
         "roofline": roofline.run,         # dry-run derived terms
     }

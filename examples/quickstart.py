@@ -48,3 +48,24 @@ print(
     f"BSS kNN: top-5 for {len(queries)} queries in {kstats['rounds']} "
     f"jitted rounds, {kstats['dists_per_query']:.0f} distances/query"
 )
+
+# 6. the same engine under the OTHER supermetrics (paper §2.2): the colors
+#    surrogate rows are probability vectors, valid for JSD / Triangular —
+#    and cosine rides the l2 kernels on the unit sphere.
+from repro.core.npdist import pairwise_np  # noqa: E402
+
+for metric in ("cosine", "jsd", "triangular"):
+    t_m = metricsets.calibrate_threshold(metric, db, selectivity=2e-4)
+    idx_m = flat_index.build_bss(metric, db, n_pivots=16, n_pairs=24, block=128)
+    hits_m, stats_m = flat_index.bss_query_batched(idx_m, queries, t_m)
+    oracle_m, _ = flat_index.bss_query(idx_m, queries, t_m)
+    # the float32 engine and float64 oracle may only disagree on points
+    # whose distance is within float rounding of the raw quantile threshold
+    for a, b, qv in zip(hits_m, oracle_m, queries):
+        for j in set(a) ^ set(b):
+            dj = float(pairwise_np(metric, qv, db[j])[0, 0])
+            assert abs(dj - t_m) <= 1e-5 * t_m, (metric, j, dj, t_m)
+    print(
+        f"BSS engine [{metric:10s}]: {stats_m['dists_per_query']:.0f} "
+        f"distances/query (exact, == numpy oracle)"
+    )

@@ -167,22 +167,47 @@ METRICS: dict[str, Metric] = {
 def power_transform(base: Metric, alpha: float = 0.5) -> Metric:
     """``d^alpha`` for ``0 < alpha <= 1/2`` has the four-point property for
     ANY metric ``d`` (paper §2.2 item 4) — this upgrades e.g. l1 into a
-    supermetric at the cost of distorting the distance distribution."""
+    supermetric at the cost of distorting the distance distribution.
+
+    The metric is REGISTERED: it lands in ``METRICS`` under
+    ``"{base}^{alpha}"`` and gets a numpy twin in ``npdist``, so every
+    engine (``build_bss``, ``build_tree``, ``pairwise_np``, benchmarks)
+    accepts the name like any built-in metric."""
     if not (0.0 < alpha <= 0.5):
         raise ValueError("four-point property only guaranteed for 0 < alpha <= 1/2")
 
     def pw(x, y, _base=base.pairwise, _a=alpha):
         return jnp.power(jnp.maximum(_base(x, y), 0.0), _a)
 
-    return Metric(
+    m = Metric(
         f"{base.name}^{alpha}",
         pw,
         four_point=True,
         probability_space=base.probability_space,
     )
+    METRICS[m.name] = m
+    # numpy twin, so the host-side engines accept the name too (late import:
+    # npdist is numpy-only and must not depend on this jnp module)
+    from repro.core import npdist
+
+    npdist.register_power(base.name, alpha)
+    return m
 
 
 def get_metric(name: str) -> Metric:
+    """Registry lookup; ``"{base}^{alpha}"`` power-transform names (e.g.
+    ``"l1^0.5"``) are parsed and registered on first use."""
+    if name not in METRICS and "^" in name:
+        base, _, exp = name.partition("^")
+        if base in METRICS:
+            try:
+                alpha = float(exp)
+            except ValueError:
+                alpha = None
+            # only canonical names register ("l1^0.5", not "l1^0.50") — a
+            # failed lookup must not mutate the registry as a side effect
+            if alpha is not None and f"{base}^{alpha}" == name:
+                power_transform(METRICS[base], alpha)
     if name not in METRICS:
         raise KeyError(f"unknown metric {name!r}; have {sorted(METRICS)}")
     return METRICS[name]

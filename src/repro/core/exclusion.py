@@ -30,6 +30,7 @@ import dataclasses
 import jax.numpy as jnp
 
 from repro.core import projection
+from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
 
 __all__ = [
     "HYPERBOLIC",
@@ -117,8 +118,13 @@ def hyperplane_exclusion_mask(
     if mechanism == HYPERBOLIC:
         crit = dx - dy > 2.0 * t
     elif mechanism == HILBERT:
-        delta = jnp.maximum(ref_dists, 1e-12)  # (k, k)
-        crit = (dx * dx - dy * dy) / delta > 2.0 * t
+        delta = jnp.maximum(ref_dists, MIN_DELTA)  # (k, k)
+        # degenerate witness pairs (duplicate refs) separate nothing: under
+        # jit the numerator carries float noise that a tiny delta would
+        # amplify into spurious exclusion — neutralise those pairs instead
+        crit = ((dx * dx - dy * dy) / delta > 2.0 * t) & (
+            ref_dists >= DEGENERATE_DELTA
+        )
     else:
         raise ValueError(f"unknown mechanism {mechanism!r}")
     k = dq.shape[-1]

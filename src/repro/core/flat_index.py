@@ -32,16 +32,17 @@ Two query paths share one index:
   query→pivot distances, the planar lower bound over every (query, block)
   pair, a (query-tile × block) survival mask, and exact distances for the
   surviving cells only.  On TPU the lower bound and the masked exact phase
-  are the Pallas kernels (``planar_lower_bound_kernel_call`` and
-  ``masked_pairwise_l2_kernel_call``); off-TPU the same jitted graph routes
-  through pure-jnp math so XLA still fuses it (``backend="auto"`` picks per
-  ``jax.default_backend()``; tests force ``"pallas"`` + ``interpret=True``
-  to exercise the kernel wiring everywhere).  The jnp exact phase is
-  adaptive in survivor density: sparse survivors gather only the alive
-  (query, block) cells; dense survivors run one GEMM with the hit test
-  fused into its output traversal (squared-domain for l2, no distance
-  matrix materialised) — both return compact hits, so nothing O(Q·N)
-  crosses back to the host.  kNN is the range reduction run as *batched
+  are the Pallas kernels (``planar_lower_bound_kernel_call`` and the
+  metric-dispatched ``masked_pairwise_kernel_call`` family); off-TPU the
+  same jitted graph routes through pure-jnp math so XLA still fuses it
+  (``backend="auto"`` picks per ``jax.default_backend()``; tests force
+  ``"pallas"`` + ``interpret=True`` to exercise the kernel wiring
+  everywhere).  The jnp exact phase is adaptive in survivor density: sparse
+  survivors gather only the alive (query, block) cells — for range search
+  AND for kNN rounds — while dense survivors run one pairwise pass (for l2
+  the range hit test runs in the squared domain with no distance matrix
+  materialised).  Compact hits / top-k candidates cross back to the host,
+  never an O(Q·N) matrix.  kNN is the range reduction run as *batched
   radius deepening*: one jitted round over all queries per iteration, with
   each query's kth-nearest-so-far distance tightening its radius (and
   therefore the survival mask) for the next round, and ``jax.lax.top_k``
@@ -52,6 +53,28 @@ Two query paths share one index:
   lower-bound definition but evaluates the exact phase in float64 numpy.
   The test suite asserts the fused path reproduces its hit lists exactly;
   it is also the baseline the benchmarks measure the fused path against.
+
+Metric support
+--------------
+
+Every registered four-point metric is served end to end; the engine maps
+each to its *kernel space* at the boundary:
+
+* **l2** — the native MXU path (squared-domain matmul identity).
+* **cosine** — served EXACTLY as l2: the proper supermetric cosine distance
+  ``sqrt(2 - 2 cos)`` *is* the Euclidean distance between unit vectors, so
+  the corpus is normalised once at build and queries once per batch, and
+  every downstream stage (bounds, kernels, exact phase) runs the l2 code.
+* **jsd / triangular** — probability-space metrics with their own VPU tile
+  kernels wired into the masked exact phase and the pivot-distance stage.
+* **power transforms** (``"l1^0.5"`` …, paper §2.2) — four-point by
+  construction; served through the jnp pairwise path (no tile kernel).
+
+Distance accounting: ``exact_dists_per_query`` counts only VALID corpus
+points in surviving blocks (per-block valid counts, excluding the padded
+slots of partial blocks), so the paper's figure of merit matches a
+``DistanceCounter`` replay exactly even when n is not a multiple of the
+block size.
 
 ``BSSIndex`` stores the build products as host numpy arrays (cheap to
 pickle, friendly to the oracle) and mirrors them into device arrays on
@@ -70,12 +93,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import projection
-from repro.core.distances import METRICS, Metric
+from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
+from repro.core.distances import Metric, get_metric
 from repro.core.npdist import pairwise_np
 from repro.core.refpoints import select_fft
 from repro.kernels.pairwise_dist import (
-    masked_pairwise_l2_kernel_call,
-    pairwise_l2_kernel_call,
+    KERNEL_METRICS,
+    masked_pairwise_kernel_call,
+    pairwise_kernel_call,
 )
 from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
 
@@ -89,6 +114,27 @@ __all__ = [
 ]
 
 _DEFAULT_BQ = 128  # query-tile size: matches the Pallas kernels' row tiling
+
+# Normalisation floor for the cosine→l2 mapping; matches the cosine metric's
+# own floor in distances._cosine_pairwise so both paths agree bit-for-bit on
+# which vectors count as zero.
+_MIN_NORM = 1e-12
+
+
+def _engine_metric(metric_name: str) -> str:
+    """The metric the fused engine actually computes with.  Supermetric
+    cosine IS l2 on the unit sphere, so cosine rides the l2 kernels; every
+    other metric is served natively."""
+    return "l2" if metric_name == "cosine" else metric_name
+
+
+def _engine_queries(metric_name: str, queries: np.ndarray) -> np.ndarray:
+    """Map queries into the engine's kernel space (unit sphere for cosine;
+    identity otherwise).  The corpus side happens once, in ``build_bss``."""
+    if metric_name == "cosine":
+        norms = np.linalg.norm(queries, axis=-1, keepdims=True)
+        queries = queries / np.maximum(norms, _MIN_NORM)
+    return np.asarray(queries, np.float32)
 
 
 class BSSDeviceArrays(NamedTuple):
@@ -127,7 +173,7 @@ class BSSIndex:
 
     @property
     def metric(self) -> Metric:
-        return METRICS[self.metric_name]
+        return get_metric(self.metric_name)
 
     @property
     def device(self) -> BSSDeviceArrays:
@@ -144,11 +190,18 @@ class BSSIndex:
 
 
 def _project_all(dp: np.ndarray, pairs: np.ndarray, deltas: np.ndarray):
-    """dp: (n, P) pivot distances -> (n, M) x and (n, M) y planar coords."""
+    """dp: (n, P) pivot distances -> (n, M) x and (n, M) y planar coords.
+
+    Must agree with ``projection.project`` (the query side) — in particular
+    degenerate planes (duplicate pivots) collapse to the ring (0, d1) on
+    BOTH sides, or the box/query geometries would diverge unsoundly."""
     d1 = dp[:, pairs[:, 0]]
     d2 = dp[:, pairs[:, 1]]
-    delta = np.maximum(deltas[None, :], 1e-12)
-    x = (d1 * d1 - d2 * d2) / (2.0 * delta)
+    raw = deltas[None, :]
+    delta = np.maximum(raw, MIN_DELTA)
+    x = np.where(
+        raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
+    )
     y = np.sqrt(np.maximum(d1 * d1 - (x + delta / 2.0) ** 2, 0.0))
     return x, y
 
@@ -161,22 +214,36 @@ def build_bss(
     block: int = 128,
     seed: int = 0,
 ) -> BSSIndex:
+    metric = get_metric(metric_name)  # validates; registers power names
+    if not metric.four_point:
+        raise ValueError(
+            f"{metric_name!r} lacks the four-point property — planar "
+            f"exclusion would be unsound.  Use a supermetric, or its "
+            f"power transform (e.g. {metric_name}^0.5, paper §2.2)."
+        )
     rng = np.random.default_rng(seed)
     data = np.asarray(data, np.float32)
+    if metric_name == "cosine":
+        # Corpus onto the unit sphere once: supermetric cosine distance IS
+        # l2 there, so the whole engine (projection, kernels, exact phase)
+        # runs the l2 path with zero approximation.
+        norms = np.linalg.norm(data, axis=1, keepdims=True)
+        data = data / np.maximum(norms, _MIN_NORM)
+    build_metric = _engine_metric(metric_name)
     n = data.shape[0]
-    piv_idx = select_fft(metric_name, data, n_pivots, rng)
+    piv_idx = select_fft(build_metric, data, n_pivots, rng)
     pivots = data[piv_idx]
 
     # All pivot pairs, keep the M most separated (wide baselines give the
     # best-conditioned planes; beyond that the paper shows insensitivity).
-    pd = pairwise_np(metric_name, pivots, pivots)
+    pd = pairwise_np(build_metric, pivots, pivots)
     cand = [(pd[i, j], i, j) for i in range(n_pivots) for j in range(i + 1, n_pivots)]
     cand.sort(reverse=True)
     m = min(n_pairs, len(cand))
     pairs = np.array([[i, j] for _, i, j in cand[:m]], dtype=np.int32)
     deltas = np.array([d for d, _, _ in cand[:m]], dtype=np.float32)
 
-    dp = pairwise_np(metric_name, data, pivots).astype(np.float32)  # (n, P)
+    dp = pairwise_np(build_metric, data, pivots).astype(np.float32)  # (n, P)
     x, y = _project_all(dp, pairs, deltas)  # (n, M) each
     feats = np.concatenate([x, y], axis=1)  # (n, 2M) margin space
 
@@ -254,10 +321,11 @@ def _lower_bounds_jit(
 
 
 def bss_lower_bounds(index: BSSIndex, queries: np.ndarray) -> np.ndarray:
+    queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     return np.asarray(
         _lower_bounds_jit(
-            index.metric_name,
-            jnp.asarray(queries, jnp.float32),
+            _engine_metric(index.metric_name),
+            jnp.asarray(queries),
             jnp.asarray(index.pivots),
             jnp.asarray(index.pairs),
             jnp.asarray(index.deltas),
@@ -266,14 +334,29 @@ def bss_lower_bounds(index: BSSIndex, queries: np.ndarray) -> np.ndarray:
     )
 
 
+def _valid_per_block(index: BSSIndex) -> np.ndarray:
+    """(n_blocks,) number of REAL corpus points per block.  The final block
+    of a corpus whose size is not a multiple of ``block`` is partially
+    padding; distance accounting must count only the valid slots."""
+    return index.valid.reshape(index.n_blocks, index.block).sum(axis=1)
+
+
+def _exact_counts(index: BSSIndex, alive: np.ndarray) -> np.ndarray:
+    """(Q,) exact distance evaluations implied by a (Q, n_blocks) survival
+    matrix — per-block VALID counts, not ``survived * block`` (which would
+    count padded slots as distance evaluations and inflate the paper's
+    figure of merit)."""
+    return alive.astype(np.int64) @ _valid_per_block(index)
+
+
 def bss_query(
     index: BSSIndex, queries: np.ndarray, t: float
 ) -> tuple[list[list[int]], dict]:
     """Exact range search — the NUMPY ORACLE path (see module docstring).
 
     Returns per-query hit lists (original indices) and stats including the
-    paper's figure of merit (distances/query: P pivot distances + 128 per
-    surviving block)."""
+    paper's figure of merit (distances/query: P pivot distances + the VALID
+    points of each surviving block)."""
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     lb = bss_lower_bounds(index, queries)  # (Q, B)
@@ -293,11 +376,11 @@ def bss_query(
                 if orig >= 0:
                     results[int(qi)].append(int(orig))
     n_pivots = index.pivots.shape[0]
-    survived = alive.sum(axis=1)  # blocks per query
+    exact = _exact_counts(index, alive)  # padding-free, per query
     stats = {
         "pivot_dists_per_query": float(n_pivots),
-        "exact_dists_per_query": float((survived * bsz).mean()),
-        "dists_per_query": float(n_pivots + (survived * bsz).mean()),
+        "exact_dists_per_query": float(exact.mean()),
+        "dists_per_query": float(n_pivots + exact.mean()),
         "block_exclusion_rate": float(1.0 - alive.mean()),
         "n_blocks": int(index.n_blocks),
     }
@@ -341,12 +424,18 @@ def _fused_lower_bounds(
     bq: int,
     interpret: bool | None,
 ) -> jnp.ndarray:
-    """(Q, B) planar lower bounds, through the Pallas kernel or pure jnp."""
-    metric = METRICS[metric_name]
-    if backend == "pallas" and metric_name == "l2":
-        dqp = pairwise_l2_kernel_call(queries, dev_pivots, interpret=interpret)
+    """(Q, B) planar lower bounds, through the Pallas kernels or pure jnp.
+
+    ``metric_name`` is the ENGINE metric (cosine arrives here as l2 over
+    pre-normalised queries).  Metrics with a registered tile kernel compute
+    the query→pivot distances through it on the pallas backend; the rest
+    (power transforms) use their jnp pairwise."""
+    if backend == "pallas" and metric_name in KERNEL_METRICS:
+        dqp = pairwise_kernel_call(
+            metric_name, queries, dev_pivots, interpret=interpret
+        )
     else:
-        dqp = metric.pairwise(queries, dev_pivots)  # (Q, P)
+        dqp = get_metric(metric_name).pairwise(queries, dev_pivots)  # (Q, P)
     d1 = dqp[:, dev_pairs[:, 0]]
     d2 = dqp[:, dev_pairs[:, 1]]
     if backend == "pallas":
@@ -374,21 +463,22 @@ def _masked_exact_dists(
     """(Q, n_pad) exact distances for surviving (query-tile × block) cells;
     +inf everywhere the mask (or padding) excluded.
 
-    Known limitation of the jnp branch: the dense pairwise is computed and
-    then masked, so XLA does not skip the excluded tiles' arithmetic the
-    way the Pallas kernel does on TPU — acceptable for the kNN rounds at
-    current scales; a cell-gather realisation (as in the range path) is
-    the upgrade when kNN serving needs to scale off-TPU."""
-    if backend == "pallas" and metric_name == "l2":
-        dist = masked_pairwise_l2_kernel_call(
-            queries, dev_data, tile_mask, bm=bq, bn=block, interpret=interpret
+    On the pallas backend every metric with a registered tile kernel
+    (l2 / jsd / triangular; cosine arrives as l2) runs the masked kernel —
+    excluded tiles are skipped on the hardware, not computed-then-masked.
+    The dense jnp fallback below serves only kernel-less metrics (power
+    transforms) and the dense-survivor regime of the jnp backend; the
+    sparse-survivor regime uses the cell-gather realisations
+    (``_cells_exact_jit`` for range, ``_knn_round_cells_jit`` for kNN)."""
+    if backend == "pallas" and metric_name in KERNEL_METRICS:
+        dist = masked_pairwise_kernel_call(
+            metric_name, queries, dev_data, tile_mask,
+            bm=bq, bn=block, interpret=interpret,
         )
     else:
         # Same masked semantics through XLA: dense metric distances with the
-        # survival mask applied.  (The Pallas masked kernel is l2-only; the
-        # other supermetrics go through their jnp pairwise.)
-        metric = METRICS[metric_name]
-        dense = metric.pairwise(queries, dev_data)  # (Q, n_pad)
+        # survival mask applied.
+        dense = get_metric(metric_name).pairwise(queries, dev_data)  # (Q, n_pad)
         mrep = jnp.repeat(
             jnp.repeat(tile_mask, bq, axis=0)[: queries.shape[0]],
             block,
@@ -396,6 +486,28 @@ def _masked_exact_dists(
         )[:, : dev_data.shape[0]]
         dist = jnp.where(mrep, dense, jnp.inf)
     return jnp.where(dev_valid[None, :], dist, jnp.inf)
+
+
+def _gather_cell_dists(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data: jnp.ndarray,
+    valid: jnp.ndarray,
+    qidx: jnp.ndarray,
+    bidx: jnp.ndarray,
+    block: int,
+):
+    """Shared cell-gather distance block for the sparse range AND kNN
+    realisations: evaluate the metric only for the C gathered (query, block)
+    cells.  Returns (d (C, block), pvalid (C, block))."""
+    dim = data.shape[-1]
+    blocks = data.reshape(-1, block, dim)
+    gathered = blocks[bidx]  # (C, block, dim)
+    qs = queries[qidx]  # (C, dim)
+    metric = get_metric(metric_name)
+    d = jax.vmap(lambda a, b: metric.pairwise(a[None], b)[0])(qs, gathered)
+    pvalid = valid.reshape(-1, block)[bidx]  # (C, block)
+    return d, pvalid
 
 
 @partial(jax.jit, static_argnames=("metric_name", "block", "cap"))
@@ -420,13 +532,9 @@ def _cells_exact_jit(
     n_hits are -1.  Row-major over (cell, offset) with cells sorted by
     (query, block), so per-query hits come out in ascending position order —
     the oracle's order."""
-    dim = data.shape[-1]
-    blocks = data.reshape(-1, block, dim)
-    gathered = blocks[bidx]  # (C, block, dim)
-    qs = queries[qidx]  # (C, dim)
-    metric = METRICS[metric_name]
-    d = jax.vmap(lambda a, b: metric.pairwise(a[None], b)[0])(qs, gathered)
-    pvalid = valid.reshape(-1, block)[bidx]  # (C, block)
+    d, pvalid = _gather_cell_dists(
+        metric_name, queries, data, valid, qidx, bidx, block
+    )
     hit = (d <= t) & pvalid & cell_valid[:, None]
     flat = hit.reshape(-1)
     n_hits = jnp.sum(flat)
@@ -477,8 +585,7 @@ def _dense_hit_mask_jit(
         thresh = t * t - jnp.sum(qf * qf, axis=-1)  # (Q,)
         raw_hit = s <= thresh[:, None]
     else:
-        metric = METRICS[metric_name]
-        raw_hit = metric.pairwise(queries, data) <= t
+        raw_hit = get_metric(metric_name).pairwise(queries, data) <= t
     hit = (
         raw_hit.reshape(nq, -1, block)
         & alive[:, :, None]
@@ -525,12 +632,12 @@ def _query_batched_jit(
 def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) -> dict:
     """The paper's figure of merit for a fused pass.  ``alive`` counts each
     query's own surviving blocks (the oracle's accounting, comparable across
-    engines); ``tiles_computed`` counts what the hardware actually ran
-    (tile-level OR over the query tile)."""
-    bsz = index.block
+    engines) weighted by per-block VALID point counts — padded slots are
+    never counted as distance evaluations; ``tiles_computed`` counts what
+    the hardware actually ran (tile-level OR over the query tile)."""
     n_pivots = index.pivots.shape[0]
-    survived = alive.sum(axis=1)
-    mean_exact = float((survived * bsz).mean()) if survived.size else 0.0
+    exact = _exact_counts(index, alive)
+    mean_exact = float(exact.mean()) if exact.size else 0.0
     return {
         "pivot_dists_per_query": float(n_pivots),
         "exact_dists_per_query": mean_exact,
@@ -567,7 +674,8 @@ def bss_query_batched(
     way only compact hits / a bitmask cross back to the host — never the
     distance matrix."""
     backend = _resolve_backend(backend)
-    queries = np.asarray(queries, np.float32)
+    metric_eng = _engine_metric(index.metric_name)
+    queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     nq = queries.shape[0]
     if nq == 0:
         return [], _batched_stats(
@@ -580,7 +688,7 @@ def bss_query_batched(
         qj = jnp.asarray(queries)
         lb = np.asarray(
             _lower_bounds_jit(
-                index.metric_name, qj, dev.pivots, dev.pairs, dev.deltas,
+                metric_eng, qj, dev.pivots, dev.pairs, dev.deltas,
                 dev.boxes,
             )
         )
@@ -588,7 +696,7 @@ def bss_query_batched(
         if alive.mean() > _DENSE_ALIVE_FRAC:
             mask = np.asarray(
                 _dense_hit_mask_jit(
-                    index.metric_name, qj, dev.data, dev.valid,
+                    metric_eng, qj, dev.data, dev.valid,
                     jnp.asarray(alive), jnp.float32(t), block=index.block,
                 )
             )
@@ -603,7 +711,7 @@ def bss_query_batched(
             cap = _next_pow2(8 * max(nq, 1), lo=1024)
             while True:
                 hit_q, hit_pos, n_hits = _cells_exact_jit(
-                    index.metric_name, qj, dev.data, dev.valid,
+                    metric_eng, qj, dev.data, dev.valid,
                     qidx_p, bidx_p, cell_valid, jnp.float32(t),
                     block=index.block, cap=cap,
                 )
@@ -621,7 +729,7 @@ def bss_query_batched(
         stats = _batched_stats(index, alive, tile_mask)
         return results, stats
     dist, alive, tile_mask = _query_batched_jit(
-        index.metric_name,
+        metric_eng,
         jnp.asarray(queries),
         jnp.float32(t),
         dev,
@@ -684,6 +792,45 @@ def _knn_round_jit(
     return cand_idx, cand_dist, kth, done, alive, tile_mask
 
 
+@partial(jax.jit, static_argnames=("metric_name", "k", "block"))
+def _knn_round_cells_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data: jnp.ndarray,
+    valid: jnp.ndarray,
+    qidx: jnp.ndarray,
+    bidx: jnp.ndarray,
+    cell_valid: jnp.ndarray,
+    *,
+    k: int,
+    block: int,
+):
+    """Sparse kNN round: the cell-gather realisation of the masked kernel's
+    tile skipping for the jnp backend.  Exact distances are evaluated ONLY
+    for the C host-gathered alive (query, block) cells — O(C·block·dim)
+    arithmetic instead of the dense O(Q·N·dim) — then scatter-min'd into a
+    (Q, n_pad) +inf matrix for ``top_k``.  Padded cells carry +inf, so the
+    min-scatter is a no-op for them regardless of scatter order.  Returns
+    (cand_idx (Q, k) permuted positions, cand_dist (Q, k) ascending).
+
+    The scatter target is still O(Q·n_pad) floats — same memory as the
+    dense round, but 4-byte writes instead of dim-wide metric arithmetic
+    (the win is ~dim× on compute, which is what dominates for jsd /
+    triangular).  A survivor-proportional top-k (per-query capped gather)
+    is the follow-up when kNN serving memory becomes the binding
+    constraint — see ROADMAP."""
+    d, pvalid = _gather_cell_dists(
+        metric_name, queries, data, valid, qidx, bidx, block
+    )
+    d = jnp.where(pvalid & cell_valid[:, None], d, jnp.inf)
+    nq = queries.shape[0]
+    n_blocks = data.shape[0] // block
+    dense = jnp.full((nq, n_blocks, block), jnp.inf, jnp.float32)
+    dense = dense.at[qidx, bidx].min(d)
+    neg, cand_idx = jax.lax.top_k(-dense.reshape(nq, -1), k)
+    return cand_idx, -neg
+
+
 @partial(jax.jit, static_argnames=("metric_name", "bq", "backend", "interpret"))
 def _knn_lb_jit(
     metric_name: str,
@@ -736,11 +883,17 @@ def bss_knn_batched(
     the ceil(2k/block)-th smallest block bound — the smallest radius that
     could possibly admit 2k candidate points, by the bound's own ordering.
 
+    On the jnp backend each round is adaptive in survivor density (mirroring
+    the range path): sparse rounds gather only the alive (query, block)
+    cells (``_knn_round_cells_jit``), dense rounds run the masked dense pass
+    — either way the round's arithmetic is exact and the result identical.
+
     Returns (indices (Q, k) original ids sorted by ascending distance — -1
     when the corpus holds fewer than k valid points, distances (Q, k), stats).
     """
     backend = _resolve_backend(backend)
-    queries = np.asarray(queries, np.float32)
+    metric_eng = _engine_metric(index.metric_name)
+    queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     nq = queries.shape[0]
     k = int(k)
     if k <= 0:
@@ -772,9 +925,10 @@ def bss_knn_batched(
     # device copy feeds the rounds, the sorted host copy drives the initial
     # radius and the per-round widening schedule.
     lb_dev = _knn_lb_jit(
-        index.metric_name, qj, dev, bq=bq, backend=backend, interpret=interpret
+        metric_eng, qj, dev, bq=bq, backend=backend, interpret=interpret
     )
-    lb_sorted = np.sort(np.asarray(lb_dev), axis=1)
+    lb_np = np.asarray(lb_dev)
+    lb_sorted = np.sort(lb_np, axis=1)
     n_blocks = index.n_blocks
     if r0 is None:
         j0 = min(n_blocks - 1, max(0, math.ceil(2 * k / index.block) - 1))
@@ -782,7 +936,8 @@ def bss_knn_batched(
     else:
         radii = np.full(nq, float(r0), np.float32)
 
-    total_alive = np.zeros(nq, np.int64)
+    valid_pb = _valid_per_block(index)
+    total_exact = np.zeros(nq, np.int64)
     tiles_total = 0
     done = np.zeros(nq, bool)
     cand_idx = np.full((nq, k_run), 0, np.int64)
@@ -793,20 +948,45 @@ def bss_knn_batched(
             # exhaustive fallback for stragglers: radius inf computes every
             # block, so the round below is guaranteed final for them.
             radii = np.where(done, radii, np.inf).astype(np.float32)
-        ci, cd, kth, dn, alive, tile_mask = _knn_round_jit(
-            index.metric_name, qj, jnp.asarray(radii), lb_dev, dev,
-            k=k_run, block=index.block, bq=bq, backend=backend,
-            interpret=interpret,
-        )
-        ci, cd, kth, dn, alive = (
-            np.asarray(ci), np.asarray(cd), np.asarray(kth),
-            np.asarray(dn), np.asarray(alive),
-        )
+        alive_host = lb_np <= radii[:, None]  # identical to the device test
+        if backend == "jnp" and alive_host.mean() <= _DENSE_ALIVE_FRAC:
+            # sparse round: gather only the alive cells (adaptive, like the
+            # range path); done/alive/tiles derived on host
+            qidx, bidx = np.nonzero(alive_host)
+            c = len(qidx)
+            c_pad = _next_pow2(c)
+            ci, cd = _knn_round_cells_jit(
+                metric_eng, qj, dev.data, dev.valid,
+                jnp.asarray(np.pad(qidx, (0, c_pad - c)), jnp.int32),
+                jnp.asarray(np.pad(bidx, (0, c_pad - c)), jnp.int32),
+                jnp.asarray(np.arange(c_pad) < c),
+                k=k_run, block=index.block,
+            )
+            ci, cd = np.asarray(ci), np.asarray(cd)
+            kth = cd[:, -1]
+            dn = np.isfinite(kth) & (
+                (kth <= radii) | alive_host.all(axis=1)
+            )
+            alive = alive_host
+            tiles_round = int(
+                np.asarray(_tile_survival(jnp.asarray(alive_host), bq)).sum()
+            )
+        else:
+            ci, cd, kth, dn, alive, tile_mask = _knn_round_jit(
+                metric_eng, qj, jnp.asarray(radii), lb_dev, dev,
+                k=k_run, block=index.block, bq=bq, backend=backend,
+                interpret=interpret,
+            )
+            ci, cd, kth, dn, alive = (
+                np.asarray(ci), np.asarray(cd), np.asarray(kth),
+                np.asarray(dn), np.asarray(alive),
+            )
+            tiles_round = int(np.asarray(tile_mask).sum())
         upd = ~done  # freeze finished queries (their results are final)
         cand_idx[upd] = ci[upd]
         cand_dist[upd] = cd[upd]
-        total_alive[upd] += alive[upd].sum(axis=1)
-        tiles_total += int(np.asarray(tile_mask).sum())
+        total_exact[upd] += alive[upd].astype(np.int64) @ valid_pb
+        tiles_total += tiles_round
         done = done | dn
         if done.all():
             break
@@ -833,12 +1013,11 @@ def bss_knn_batched(
         )
 
     n_pivots = index.pivots.shape[0]
-    dists_pq = n_pivots + total_alive.astype(np.float64) * index.block
     stats = {
         "rounds": rounds,
         "pivot_dists_per_query": float(n_pivots),
-        "exact_dists_per_query": float((total_alive * index.block).mean()),
-        "dists_per_query": float(dists_pq.mean()),
+        "exact_dists_per_query": float(total_exact.mean()),
+        "dists_per_query": float(n_pivots + total_exact.mean()),
         "tiles_computed": tiles_total,
         "n_blocks": int(index.n_blocks),
     }

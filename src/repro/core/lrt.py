@@ -30,6 +30,7 @@ import sys
 
 import numpy as np
 
+from repro.core.constants import MIN_DELTA
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.core.npdist import DistanceCounter, pairwise_np
 
@@ -66,7 +67,7 @@ class MonotoneTree:
 
 
 def _project_np(d1: np.ndarray, d2: np.ndarray, delta: float):
-    delta = max(delta, 1e-12)
+    delta = max(delta, MIN_DELTA)
     x = (d1 * d1 - d2 * d2) / (2.0 * delta)
     y = np.sqrt(np.maximum(d1 * d1 - (x + delta / 2.0) ** 2, 0.0))
     return x, y
@@ -160,7 +161,7 @@ def build_monotone_tree(
         subset, d1 = subset[keep], d1[keep]
         d2 = pairwise_np(metric, data[subset], data[p2][None, :])[:, 0]
         build_count[0] += len(subset)
-        if delta < 1e-12:
+        if delta < MIN_DELTA:
             # degenerate duplicate pivots: fall back to a leaf bucket
             return np.concatenate([subset, np.array([p2], dtype=np.int64)])
         x, y = _project_np(d1, d2, delta)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import numpy as np
 
-__all__ = ["pairwise_np", "DistanceCounter"]
+__all__ = ["pairwise_np", "register_power", "DistanceCounter"]
 
 _EPS = 1e-12
 
@@ -71,14 +71,51 @@ _FNS = {
 }
 
 
+def register_power(base: str, alpha: float) -> str:
+    """Register the numpy twin of ``distances.power_transform(base, alpha)``
+    under the canonical ``"{base}^{alpha}"`` name; returns the name."""
+    name = f"{base}^{alpha}"
+    if name not in _FNS:
+        base_fn = _FNS[base]
+        _FNS[name] = lambda x, y, _b=base_fn, _a=alpha: np.power(
+            np.maximum(_b(x, y), 0.0), _a
+        )
+    return name
+
+
+def _resolve(name: str):
+    fn = _FNS.get(name)
+    if fn is None and "^" in name:
+        # power-transform names ("l1^0.5") parse + register on first use,
+        # mirroring distances.get_metric
+        base, _, exp = name.partition("^")
+        if base in _FNS:
+            try:
+                alpha = float(exp)
+            except ValueError:
+                alpha = None
+            # same bound as distances.power_transform: only 0 < a <= 1/2
+            # guarantees the four-point property the engines rely on
+            if (
+                alpha is not None
+                and 0.0 < alpha <= 0.5
+                and f"{base}^{alpha}" == name
+            ):
+                fn = _FNS[register_power(base, alpha)]
+    if fn is None:
+        raise KeyError(f"unknown metric {name!r}; have {sorted(_FNS)}")
+    return fn
+
+
 def pairwise_np(name: str, x: np.ndarray, y: np.ndarray) -> np.ndarray:
+    fn = _resolve(name)
     x = np.asarray(x, np.float64)
     y = np.asarray(y, np.float64)
     if x.ndim == 1:
         x = x[None, :]
     if y.ndim == 1:
         y = y[None, :]
-    return _FNS[name](x, y)
+    return fn(x, y)
 
 
 class DistanceCounter:

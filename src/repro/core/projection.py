@@ -24,6 +24,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
+
 __all__ = [
     "project",
     "project_x",
@@ -40,11 +42,19 @@ def project(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> tuple[jnp.ndarray, jnp.n
     Broadcasts over any leading shape.  Degenerate triangles (numerical noise
     making d1 + d2 < delta) are clamped onto the X-axis, which keeps the
     lower-bound property (clamping can only *reduce* planar distances).
+
+    Degenerate PLANES (delta below ``DEGENERATE_DELTA``: duplicate or
+    near-duplicate pivots) project to the ring (x=0, y=d1) — the sound
+    triangle-inequality bound — instead of dividing float noise by a tiny
+    baseline (see ``repro.core.constants``).
     """
     d1 = jnp.asarray(d1, jnp.float32)
     d2 = jnp.asarray(d2, jnp.float32)
-    delta = jnp.maximum(jnp.asarray(delta, jnp.float32), 1e-12)
-    x = (d1 * d1 - d2 * d2) / (2.0 * delta)
+    raw = jnp.asarray(delta, jnp.float32)
+    delta = jnp.maximum(raw, MIN_DELTA)
+    x = jnp.where(
+        raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
+    )
     y_sq = d1 * d1 - (x + delta / 2.0) ** 2
     y = jnp.sqrt(jnp.maximum(y_sq, 0.0))
     return x, y
@@ -53,11 +63,15 @@ def project(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> tuple[jnp.ndarray, jnp.n
 def project_x(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> jnp.ndarray:
     """X coordinate only — this is the Hilbert-exclusion quantity
     ``(d1^2 - d2^2) / (2 delta)`` (signed distance to the separating
-    hyperplane's planar image)."""
+    hyperplane's planar image).  Degenerate planes yield 0 (no exclusion —
+    coincident pivots separate nothing)."""
     d1 = jnp.asarray(d1, jnp.float32)
     d2 = jnp.asarray(d2, jnp.float32)
-    delta = jnp.maximum(jnp.asarray(delta, jnp.float32), 1e-12)
-    return (d1 * d1 - d2 * d2) / (2.0 * delta)
+    raw = jnp.asarray(delta, jnp.float32)
+    delta = jnp.maximum(raw, MIN_DELTA)
+    return jnp.where(
+        raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
+    )
 
 
 def rotate(x: jnp.ndarray, y: jnp.ndarray, theta, h) -> tuple[jnp.ndarray, jnp.ndarray]:

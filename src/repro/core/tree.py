@@ -40,6 +40,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core import refpoints
+from repro.core.constants import MIN_DELTA
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.core.npdist import DistanceCounter, pairwise_np
 
@@ -315,7 +316,7 @@ def _exclusion_masks(
     if mechanism == HYPERBOLIC:
         crit = dx - dy > 2.0 * t
     else:
-        delta = np.maximum(node.ref_dists, 1e-300)[None, :, :]
+        delta = np.maximum(node.ref_dists, MIN_DELTA)[None, :, :]
         crit = (dx * dx - dy * dy) / delta > 2.0 * t
     off = ~np.eye(k, dtype=bool)[None]
     excl |= np.any(crit & off, axis=2)
@@ -324,7 +325,7 @@ def _exclusion_masks(
         if mechanism == HYPERBOLIC:
             excl |= dq - d_centre[:, None] > 2.0 * t
         else:
-            delta_c = np.maximum(node.centre_dists, 1e-300)[None, :]
+            delta_c = np.maximum(node.centre_dists, MIN_DELTA)[None, :]
             excl |= (dq * dq - (d_centre**2)[:, None]) / delta_c > 2.0 * t
     return excl
 

@@ -22,9 +22,11 @@ __all__ = [
     "euc10",
     "colors_surrogate",
     "nasa_surrogate",
+    "topics_surrogate",
     "split_queries",
     "calibrate_threshold",
     "DATASETS",
+    "PROB_DATASETS",
 ]
 
 
@@ -79,6 +81,34 @@ def nasa_surrogate(n: int = 40_150, dim: int = 20, seed: int = 0) -> np.ndarray:
     return pts.astype(np.float64)
 
 
+def topics_surrogate(n: int = 24_576, dim: int = 64, seed: int = 0) -> np.ndarray:
+    """Topic-model / term-histogram embeddings: probability vectors on the
+    ``dim``-simplex, the corpus type served under the probability-space
+    supermetrics (Jensen-Shannon and Triangular, paper §2.2).
+
+    Mixture of sparse Dirichlet topic profiles with Zipf-skewed topic
+    popularity: most documents concentrate on a few topics (tight clusters
+    the four-point bound can prune), a diffuse tail keeps the space honest.
+    """
+    rng = np.random.default_rng(seed)
+    k = 24
+    profiles = rng.gamma(0.25, size=(k, dim))  # sparse: few dominant terms
+    profiles /= profiles.sum(axis=1, keepdims=True)
+    weights = 1.0 / np.arange(1, k + 1) ** 1.2
+    weights /= weights.sum()
+    conc = rng.lognormal(mean=4.0, sigma=0.5, size=k)  # per-topic tightness
+    assign = rng.choice(k, size=n, p=weights)
+    alpha = profiles[assign] * conc[assign, None] + 1e-3
+    pts = rng.gamma(np.maximum(alpha, 1e-6))
+    pts /= np.maximum(pts.sum(axis=1, keepdims=True), 1e-12)
+    diffuse = rng.random(n) < 0.05
+    if diffuse.any():
+        o = rng.gamma(0.8, size=(int(diffuse.sum()), dim))
+        o /= o.sum(axis=1, keepdims=True)
+        pts[diffuse] = o
+    return pts.astype(np.float64)
+
+
 def split_queries(
     data: np.ndarray, frac: float = 0.10, seed: int = 0, max_queries: int | None = None
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -115,4 +145,11 @@ DATASETS = {
     "euc10": (euc10, (0.229, 0.245, 0.263), (1e-6, 2e-6, 4e-6)),
     "colors": (colors_surrogate, (0.052, 0.083, 0.131), (1e-5, 1e-4, 1e-3)),
     "nasa": (nasa_surrogate, (0.120, 0.285, 0.530), (1e-5, 1e-4, 1e-3)),
+}
+
+# probability-vector corpora (rows on the simplex) — valid under every
+# metric in the registry including the probability-space supermetrics
+PROB_DATASETS = {
+    "topics": topics_surrogate,
+    "colors": colors_surrogate,
 }

@@ -9,9 +9,10 @@ transcendental-heavy VPU workload:
 Tiling: grid over (M/bm, N/bn) output tiles; each cell streams an (bm, K)
 X tile and (bn, K) Y tile into VMEM and loops the pair reduction on the VPU.
 The x-entropy term depends only on x (resp. y) — precomputed per tile to
-avoid recomputing it bn (resp. bm) times.
-
-VMEM @ bm=bn=128, K=256 fp32: 2*128 KiB tiles + 64 KiB out + (bm,bn) accum.
+avoid recomputing it bn (resp. bm) times.  The mixture-entropy broadcast is
+reduced in K-chunks of ``_K_CHUNK`` lanes so the (bm, bn, Kc) transient is
+bounded at 4 MiB even for 128x128 tiles (the BSS masked exact phase ties
+bm/bn to the query-tile / block sizes) and large metric-space dims.
 """
 
 from __future__ import annotations
@@ -25,6 +26,7 @@ from jax.experimental import pallas as pl
 __all__ = ["pairwise_jsd_kernel_call"]
 
 _EPS = 1e-12
+_K_CHUNK = 64  # lanes reduced per VPU pass; bounds the (bm, bn, Kc) transient
 
 
 def _interpret_default() -> bool:
@@ -38,10 +40,13 @@ def _xlogx(v):
 def _jsd_tile_kernel(x_ref, y_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)  # (bm, K)
     y = y_ref[...].astype(jnp.float32)  # (bn, K)
+    k = x.shape[1]
     hx = jnp.sum(_xlogx(x), axis=1)  # (bm,) entropy terms, computed once
     hy = jnp.sum(_xlogx(y), axis=1)  # (bn,)
-    m = 0.5 * (x[:, None, :] + y[None, :, :])  # (bm, bn, K)
-    hm = jnp.sum(_xlogx(m), axis=-1)  # (bm, bn)
+    hm = jnp.zeros((x.shape[0], y.shape[0]), jnp.float32)  # (bm, bn)
+    for k0 in range(0, k, _K_CHUNK):  # static K => unrolled at trace time
+        m = 0.5 * (x[:, None, k0 : k0 + _K_CHUNK] + y[None, :, k0 : k0 + _K_CHUNK])
+        hm = hm + jnp.sum(_xlogx(m), axis=-1)
     js = 0.5 * hx[:, None] + 0.5 * hy[None, :] - hm
     o_ref[...] = jnp.sqrt(jnp.maximum(js, 0.0) / jnp.log(2.0))
 

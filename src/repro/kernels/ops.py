@@ -11,7 +11,10 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.kernels.pairwise_dist import (
+    KERNEL_METRICS,
+    masked_pairwise_kernel_call,
     masked_pairwise_l2_kernel_call,
+    pairwise_kernel_call,
     pairwise_l2_kernel_call,
 )
 from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
@@ -19,12 +22,17 @@ from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
 __all__ = [
     "pairwise_l2",
     "masked_pairwise_l2",
+    "pairwise_metric",
+    "masked_pairwise_metric",
+    "KERNEL_METRICS",
     "planar_lower_bound",
     "bss_query_fused",
 ]
 
 pairwise_l2 = pairwise_l2_kernel_call
 masked_pairwise_l2 = masked_pairwise_l2_kernel_call
+pairwise_metric = pairwise_kernel_call
+masked_pairwise_metric = masked_pairwise_kernel_call
 planar_lower_bound = planar_lower_bound_kernel_call
 
 
@@ -63,7 +71,12 @@ def bss_query_fused(
     )
     return dist, tile_mask
 
+import functools  # noqa: E402
+
 from repro.kernels.jsd_dist import pairwise_jsd_kernel_call  # noqa: E402
 
 pairwise_jsd = pairwise_jsd_kernel_call
-__all__.append("pairwise_jsd")
+# triangular has no standalone call module — it shares the dispatched
+# plumbing in pairwise_dist (one copy of the grid/padding machinery)
+pairwise_tri = functools.partial(pairwise_kernel_call, "triangular")
+__all__ += ["pairwise_jsd", "pairwise_tri"]

@@ -19,6 +19,17 @@ VMEM budget per cell @ bm=bn=128, K=512, fp32:
 The masked variant consumes the BSS exclusion mask (one flag per output
 tile) and skips the MXU work of excluded tiles via ``pl.when`` — the planar
 lower bound of the paper materialised as *actually skipped* compute.
+
+Metric-dispatched family
+------------------------
+``pairwise_kernel_call`` / ``masked_pairwise_kernel_call`` dispatch one tile
+kernel per supermetric: l2 (MXU contraction, this module), JSD and
+Triangular (VPU broadcast reductions, ``jsd_dist`` / ``tri_dist``).  The
+masked wrapper is metric-agnostic — the ``pl.when`` tile skip is applied
+around whichever tile kernel the metric resolves to, so every supermetric
+gets the same "block pruned == grid cell skipped" guarantee.  Cosine never
+appears here: the engine serves it as l2 over unit-normalised vectors
+(exact, per the supermetric cosine definition).
 """
 
 from __future__ import annotations
@@ -29,7 +40,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pairwise_l2_kernel_call", "masked_pairwise_l2_kernel_call"]
+from repro.kernels.jsd_dist import _jsd_tile_kernel
+from repro.kernels.tri_dist import _tri_tile_kernel
+
+__all__ = [
+    "pairwise_l2_kernel_call",
+    "masked_pairwise_l2_kernel_call",
+    "pairwise_kernel_call",
+    "masked_pairwise_kernel_call",
+    "KERNEL_METRICS",
+]
 
 DEFAULT_BM = 128
 DEFAULT_BN = 128
@@ -56,14 +76,25 @@ def _l2_tile_kernel(x_ref, y_ref, o_ref, *, squared: bool):
     o_ref[...] = sq if squared else jnp.sqrt(sq)
 
 
-def _masked_l2_tile_kernel(mask_ref, x_ref, y_ref, o_ref, *, squared: bool):
-    """Same contraction, but the whole MXU tile is skipped when the BSS
-    planar lower bound already excluded this (query-tile, block) cell."""
+def _masked_tile_kernel(mask_ref, x_ref, y_ref, o_ref, *, tile_kernel):
+    """Metric-agnostic mask wrapper: the whole compute tile is skipped when
+    the BSS planar lower bound already excluded this (query-tile, block)
+    cell — excluded tiles are filled with +inf without touching MXU/VPU."""
     o_ref[...] = jnp.full_like(o_ref, jnp.inf)
 
     @pl.when(mask_ref[0, 0] != 0)
     def _do():
-        _l2_tile_kernel(x_ref, y_ref, o_ref, squared=squared)
+        tile_kernel(x_ref, y_ref, o_ref)
+
+
+# metric name -> unmasked tile kernel (x_ref, y_ref, o_ref); the masked
+# variant is derived by wrapping with _masked_tile_kernel
+_TILE_KERNELS = {
+    "l2": functools.partial(_l2_tile_kernel, squared=False),
+    "jsd": _jsd_tile_kernel,
+    "triangular": _tri_tile_kernel,
+}
+KERNEL_METRICS = tuple(_TILE_KERNELS)
 
 
 def _pad_to(a: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
@@ -73,6 +104,54 @@ def _pad_to(a: jnp.ndarray, mult: int, axis: int) -> jnp.ndarray:
     pad = [(0, 0)] * a.ndim
     pad[axis] = (0, mult - rem)
     return jnp.pad(a, pad)
+
+
+def _pairwise_call(tile_kernel, x, y, *, bm, bn, interpret):
+    """Shared (grid, padding, pallas_call) plumbing for unmasked tiles."""
+    m, k = x.shape
+    n, k2 = y.shape
+    assert k == k2, (x.shape, y.shape)
+    xp = _pad_to(x, bm, 0)
+    yp = _pad_to(y, bn, 0)
+    mp, np_ = xp.shape[0], yp.shape[0]
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(xp, yp)
+    return out[:m, :n]
+
+
+def _masked_call(tile_kernel, x, y, tile_mask, *, bm, bn, interpret):
+    """Shared plumbing for masked tiles: one mask flag per output tile,
+    excluded tiles short-circuit to +inf via ``pl.when``."""
+    m, k = x.shape
+    n, _ = y.shape
+    xp = _pad_to(x, bm, 0)
+    yp = _pad_to(y, bn, 0)
+    mp, np_ = xp.shape[0], yp.shape[0]
+    grid = (mp // bm, np_ // bn)
+    assert tile_mask.shape == grid, (tile_mask.shape, grid)
+    out = pl.pallas_call(
+        functools.partial(_masked_tile_kernel, tile_kernel=tile_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(tile_mask.astype(jnp.int32), xp, yp)
+    return out[:m, :n]
 
 
 @functools.partial(
@@ -90,25 +169,10 @@ def pairwise_l2_kernel_call(
     """(m, K), (n, K) -> (m, n) Euclidean distance matrix."""
     if interpret is None:
         interpret = _interpret_default()
-    m, k = x.shape
-    n, k2 = y.shape
-    assert k == k2, (x.shape, y.shape)
-    xp = _pad_to(x, bm, 0)
-    yp = _pad_to(y, bn, 0)
-    mp, np_ = xp.shape[0], yp.shape[0]
-    grid = (mp // bm, np_ // bn)
-    out = pl.pallas_call(
+    return _pairwise_call(
         functools.partial(_l2_tile_kernel, squared=squared),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        interpret=interpret,
-    )(xp, yp)
-    return out[:m, :n]
+        x, y, bm=bm, bn=bn, interpret=interpret,
+    )
 
 
 @functools.partial(
@@ -132,23 +196,52 @@ def masked_pairwise_l2_kernel_call(
     """
     if interpret is None:
         interpret = _interpret_default()
-    m, k = x.shape
-    n, _ = y.shape
-    xp = _pad_to(x, bm, 0)
-    yp = _pad_to(y, bn, 0)
-    mp, np_ = xp.shape[0], yp.shape[0]
-    grid = (mp // bm, np_ // bn)
-    assert tile_mask.shape == grid, (tile_mask.shape, grid)
-    out = pl.pallas_call(
-        functools.partial(_masked_l2_tile_kernel, squared=squared),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
-            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        interpret=interpret,
-    )(tile_mask.astype(jnp.int32), xp, yp)
-    return out[:m, :n]
+    return _masked_call(
+        functools.partial(_l2_tile_kernel, squared=squared),
+        x, y, tile_mask, bm=bm, bn=bn, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "bm", "bn", "interpret")
+)
+def pairwise_kernel_call(
+    metric_name: str,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Metric-dispatched (m, K), (n, K) -> (m, n) distance matrix for every
+    metric in ``KERNEL_METRICS``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _pairwise_call(
+        _TILE_KERNELS[metric_name], x, y, bm=bm, bn=bn, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric_name", "bm", "bn", "interpret")
+)
+def masked_pairwise_kernel_call(
+    metric_name: str,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    tile_mask: jnp.ndarray,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Metric-dispatched masked pairwise: the BSS exact phase for every
+    metric in ``KERNEL_METRICS``, with the same tile-skipping contract as
+    ``masked_pairwise_l2_kernel_call``."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _masked_call(
+        _TILE_KERNELS[metric_name], x, y, tile_mask,
+        bm=bm, bn=bn, interpret=interpret,
+    )

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
+
 __all__ = ["planar_lower_bound_kernel_call"]
 
 DEFAULT_BQ = 128
@@ -37,11 +39,15 @@ def _interpret_default() -> bool:
 def _lb_tile_kernel(d1_ref, d2_ref, delta_ref, boxes_ref, o_ref):
     d1 = d1_ref[...].astype(jnp.float32)  # (bq, M)
     d2 = d2_ref[...].astype(jnp.float32)  # (bq, M)
-    delta = jnp.maximum(delta_ref[...].astype(jnp.float32), 1e-12)  # (1, M)
+    raw = delta_ref[...].astype(jnp.float32)  # (1, M)
+    delta = jnp.maximum(raw, MIN_DELTA)
     boxes = boxes_ref[...].astype(jnp.float32)  # (bb, M, 4)
 
-    # apex projection (fused; never leaves VMEM)
-    qx = (d1 * d1 - d2 * d2) / (2.0 * delta)  # (bq, M)
+    # apex projection (fused; never leaves VMEM); degenerate planes use the
+    # ring bound x=0 — must match projection.project / ref exactly
+    qx = jnp.where(
+        raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
+    )  # (bq, M)
     qy = jnp.sqrt(jnp.maximum(d1 * d1 - (qx + delta / 2.0) ** 2, 0.0))
 
     qxe = qx[:, None, :]  # (bq, 1, M)

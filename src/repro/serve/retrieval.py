@@ -1,19 +1,25 @@
 """Retrieval serving: the paper's technique deployed as a production feature.
 
-Pipeline: a trained two-tower model embeds the item corpus -> the embeddings
-are indexed by the Blocked Supermetric Scan (exact search, four-point
-pruning) -> queries are served in batches: user tower -> supermetric range /
-kNN search over the corpus.
+Pipeline: an embedded corpus (trained two-tower item tower, topic/histogram
+model, …) -> the embeddings are indexed by the Blocked Supermetric Scan
+(exact search, four-point pruning) -> queries are served in batches through
+the fused engine (``bss_query_batched`` / ``bss_knn_batched``): the whole
+query path is one jitted function per round (Pallas kernels on TPU, fused
+XLA elsewhere).
 
-Dot-product scoring on l2-normalised towers is order-equivalent to Euclidean
-distance (d^2 = 2 - 2<u,i>), so the supermetric index serves EXACT top-k /
-threshold retrieval for the model's own similarity — the paper's exactness
-guarantee carried into the serving path.
+The server is parametrised by METRIC — any four-point metric in the
+registry is served exactly:
 
-Both entry points run on the fused batched engine (``bss_query_batched`` /
-``bss_knn_batched``): the whole query path is one jitted function per round
-(Pallas kernels on TPU, fused XLA elsewhere), replacing the per-block host
-loops this server originally layered on top of the index.
+* ``metric="cosine"`` (default) — the dot-product specialisation: scoring a
+  dot product on l2-normalised towers is order-equivalent to Euclidean
+  distance (``d^2 = 2 - 2<u,i>``), so the supermetric index serves EXACT
+  top-k / min-score retrieval for the model's own similarity.  The
+  score↔distance mapping (``score_to_distance``) lives only in this
+  specialisation; the engine itself serves cosine as l2 on the unit sphere.
+* ``metric="jsd"`` / ``"triangular"`` — probability-vector corpora
+  (topic mixtures, histograms): thresholds are distances, use
+  ``range_by_distance``; ``top_k`` works unchanged.
+* ``metric="l2"`` (or a registered power transform) — plain metric serving.
 """
 
 from __future__ import annotations
@@ -55,38 +61,60 @@ class ServeStats:
 
 
 class RetrievalServer:
-    """Batched exact retrieval over an embedded corpus (fused BSS engine)."""
+    """Batched exact retrieval over an embedded corpus (fused BSS engine),
+    parametrised by any four-point metric in the registry."""
 
-    def __init__(self, corpus_embeddings: np.ndarray, *, n_pivots: int = 16,
-                 n_pairs: int = 24, block: int = 128, seed: int = 0,
-                 backend: str = "auto"):
+    def __init__(self, corpus_embeddings: np.ndarray, *, metric: str = "cosine",
+                 n_pivots: int = 16, n_pairs: int = 24, block: int = 128,
+                 seed: int = 0, backend: str = "auto"):
         corpus = np.array(corpus_embeddings, np.float32, copy=True)
-        corpus /= np.maximum(np.linalg.norm(corpus, axis=1, keepdims=True), 1e-9)
+        self.metric = metric
+        if metric == "cosine":
+            # kept normalised server-side so dot-product scoring against
+            # self.corpus matches the index geometry exactly; the engine's
+            # own floor is reused so both normalisations agree bit-for-bit
+            corpus = flat_index._engine_queries("cosine", corpus)
         self.corpus = corpus
         self.backend = backend
         self.index = flat_index.build_bss(
-            "l2", corpus, n_pivots=n_pivots, n_pairs=n_pairs, block=block,
+            metric, corpus, n_pivots=n_pivots, n_pairs=n_pairs, block=block,
             seed=seed,
         )
         self.stats = ServeStats()
 
-    def _normalise(self, user_embeddings: np.ndarray) -> np.ndarray:
-        q = np.array(user_embeddings, np.float32, copy=True)
-        q /= np.maximum(np.linalg.norm(q, axis=1, keepdims=True), 1e-9)
+    def _prep(self, user_embeddings: np.ndarray) -> np.ndarray:
+        q = np.asarray(user_embeddings, np.float32)
+        if self.metric == "cosine":
+            q = flat_index._engine_queries("cosine", q)
         return q
 
+    def _account(self, nq: int, dists_per_query: float, t0: float) -> None:
+        self.stats.n_queries += nq
+        self.stats.total_dists += dists_per_query * nq
+        self.stats.exhaustive_dists += nq * self.corpus.shape[0]
+        self.stats.total_seconds += time.time() - t0
+
     def range_query(self, user_embeddings: np.ndarray, min_score: float):
-        """All items with dot-score >= min_score — exact, one fused pass."""
-        q = self._normalise(user_embeddings)
+        """All items with dot-score >= min_score — exact, one fused pass.
+        Cosine (dot-product) serving only; other metrics threshold on
+        distance, use ``range_by_distance``."""
+        if self.metric != "cosine":
+            raise ValueError(
+                f"min-score retrieval is the cosine specialisation; the "
+                f"{self.metric!r} server thresholds on distance — use "
+                f"range_by_distance"
+            )
         t = float(score_to_distance(np.asarray(min_score)))
+        return self.range_by_distance(user_embeddings, t)
+
+    def range_by_distance(self, user_embeddings: np.ndarray, t: float):
+        """All items within metric distance t — exact, one fused pass."""
+        q = self._prep(user_embeddings)
         t0 = time.time()
         hits, s = flat_index.bss_query_batched(
-            self.index, q, t, backend=self.backend
+            self.index, q, float(t), backend=self.backend
         )
-        self.stats.n_queries += len(q)
-        self.stats.total_dists += s["dists_per_query"] * len(q)
-        self.stats.exhaustive_dists += len(q) * self.corpus.shape[0]
-        self.stats.total_seconds += time.time() - t0
+        self._account(len(q), s["dists_per_query"], t0)
         return hits
 
     def top_k(self, user_embeddings: np.ndarray, k: int,
@@ -96,20 +124,22 @@ class RetrievalServer:
         kth-nearest-so-far distance tightening its pruning radius (see
         ``bss_knn_batched``).  ``t0_guess`` optionally seeds the radius
         (None = the engine's per-query scale-free estimate)."""
-        q = self._normalise(user_embeddings)
+        q = self._prep(user_embeddings)
         t0 = time.time()
         idx, dists, s = flat_index.bss_knn_batched(
             self.index, q, k, r0=t0_guess, max_rounds=max_rounds,
             backend=self.backend,
         )
-        self.stats.n_queries += len(q)
-        self.stats.total_dists += s["dists_per_query"] * len(q)
-        self.stats.exhaustive_dists += len(q) * self.corpus.shape[0]
-        self.stats.total_seconds += time.time() - t0
+        self._account(len(q), s["dists_per_query"], t0)
         return [idx[i] for i in range(idx.shape[0])]
 
     def top_k_oracle(self, user_embeddings: np.ndarray, k: int) -> list:
-        """Brute-force reference (numpy float64) — for tests/benchmarks."""
-        q = self._normalise(user_embeddings)
-        d = pairwise_np("l2", q, self.corpus)
-        return [np.argsort(d[i])[:k] for i in range(len(q))]
+        """Brute-force reference (numpy float64) — for tests/benchmarks.
+        Chunked over queries: the probability-space metrics broadcast a
+        (Q, N, dim) float64 intermediate, which must stay bounded."""
+        q = self._prep(user_embeddings)
+        out = []
+        for lo in range(0, len(q), 32):
+            d = pairwise_np(self.metric, q[lo:lo + 32], self.corpus)
+            out.extend(np.argsort(d[i])[:k] for i in range(d.shape[0]))
+        return out

@@ -17,15 +17,19 @@ import pytest
 from hypothesis_shim import given, settings, st
 
 from repro.core import flat_index
-from repro.core.npdist import pairwise_np
+from repro.core.distances import METRICS, get_metric
+from repro.core.npdist import DistanceCounter, pairwise_np
 
-SUPERMETRICS = ["l2", "cosine", "jsd"]
+SUPERMETRICS = ["l2", "cosine", "jsd", "triangular"]
+# every four-point metric the registry serves, incl. a power transform
+ALL_SUPERMETRICS = SUPERMETRICS + ["l1^0.5"]
+get_metric("l1^0.5")  # ensure registration before METRICS introspection
 
 
 def _space(metric, n, dim, seed):
     rng = np.random.default_rng(seed)
     x = rng.random((n, dim)).astype(np.float32) + 1e-3
-    if metric in ("jsd", "triangular"):
+    if metric in METRICS and METRICS[metric].probability_space:
         x /= x.sum(axis=1, keepdims=True)
     return x
 
@@ -50,6 +54,7 @@ SHAPES = [
     ("cosine", 513, 9, 128, 21),
     ("jsd", 330, 11, 32, 7),
     ("triangular", 257, 7, 64, 5),
+    ("l1^0.5", 410, 13, 64, 9),
 ]
 
 
@@ -111,6 +116,8 @@ def test_range_all_and_none_excluded(t, expect_all):
     ("l2", 1111, 24, 128, 128, 1),
     ("cosine", 640, 12, 128, 19, 10),
     ("jsd", 385, 9, 32, 11, 5),
+    ("triangular", 300, 8, 64, 9, 4),
+    ("l1^0.5", 420, 10, 64, 13, 6),
 ])
 def test_knn_matches_bruteforce(metric, n, dim, block, nq, k):
     data = _space(metric, n + nq, dim, seed=n * 3 + k)
@@ -131,10 +138,14 @@ def test_knn_matches_bruteforce(metric, n, dim, block, nq, k):
     assert stats["dists_per_query"] >= stats["pivot_dists_per_query"]
 
 
-def test_knn_pallas_interpret_matches_jnp():
-    db = _space("l2", 384, 8, seed=6)
-    q = _space("l2", 9, 8, seed=7)
-    idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=128,
+@pytest.mark.parametrize("metric", SUPERMETRICS)
+def test_knn_pallas_interpret_matches_jnp(metric):
+    """The masked Pallas kernel family (interpret mode off-TPU) returns the
+    jnp engine's kNN for every supermetric — cosine through the l2 kernels
+    on the sphere, jsd/triangular through their own tile kernels."""
+    db = _space(metric, 384, 8, seed=6)
+    q = _space(metric, 9, 8, seed=7)
+    idx = flat_index.build_bss(metric, db, n_pivots=6, n_pairs=8, block=128,
                                seed=5)
     i_jnp, d_jnp, _ = flat_index.bss_knn_batched(idx, q, 6, backend="jnp")
     i_pal, d_pal, _ = flat_index.bss_knn_batched(
@@ -214,6 +225,127 @@ def test_batched_range_property(n, dim, seed):
     idx = flat_index.build_bss("l2", db, n_pivots=min(8, n), n_pairs=8,
                                block=32, seed=seed % 17)
     t = safe_threshold(pairwise_np("l2", q, db), 0.05)
+    oracle, _ = flat_index.bss_query(idx, q, t)
+    batched, _ = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    assert batched == oracle
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.sampled_from(ALL_SUPERMETRICS),
+    st.integers(120, 400),
+    st.integers(4, 20),
+    st.integers(0, 10_000),
+)
+def test_lower_bound_never_exceeds_true_distance(metric, n, dim, seed):
+    """Four-point soundness per metric: the per-block planar lower bound
+    never exceeds the true distance to ANY valid point of the block, for
+    every supermetric the registry serves (incl. a power transform)."""
+    db = _space(metric, n, dim, seed=seed % 1000)
+    q = _space(metric, 6, dim, seed=seed % 1000 + 1)
+    idx = flat_index.build_bss(metric, db, n_pivots=min(8, n), n_pairs=8,
+                               block=32, seed=seed % 13)
+    lb = flat_index.bss_lower_bounds(idx, q)  # (Q, B)
+    d = pairwise_np(metric, q, idx.data)  # permuted order (normalised for
+    d = np.where(idx.valid[None, :], d, np.inf)  # cosine: idempotent)
+    per_block_min = d.reshape(len(q), idx.n_blocks, idx.block).min(axis=2)
+    assert np.all(lb <= per_block_min + 1e-4), metric
+
+
+def test_non_four_point_metric_rejected():
+    """Planar exclusion is unsound without the four-point property; the
+    engine must refuse plain l1/linf (their power transforms are fine)."""
+    db = _space("l2", 64, 6, seed=0)
+    with pytest.raises(ValueError, match="four-point"):
+        flat_index.build_bss("l1", db, n_pivots=4, n_pairs=4, block=32)
+    flat_index.build_bss("l1^0.5", db, n_pivots=4, n_pairs=4, block=32)
+
+
+# ---------------------------------------------------- distance accounting
+
+
+@pytest.mark.parametrize("n", [300, 1000])  # NOT multiples of block=128
+def test_exact_dists_accounting_excludes_padding(n):
+    """Regression: ``exact_dists_per_query`` used ``survived * block``,
+    counting the padded slots of partial blocks as real distance
+    evaluations.  The corrected accounting must equal a DistanceCounter
+    replay that evaluates only VALID points of surviving blocks."""
+    assert n % 128 != 0
+    db = _space("l2", n, 12, seed=n)
+    q = _space("l2", 17, 12, seed=n + 1)
+    idx = flat_index.build_bss("l2", db, n_pivots=8, n_pairs=10, block=128,
+                               seed=2)
+    t = safe_threshold(pairwise_np("l2", q, db), 0.05)
+
+    # replay the oracle's exact phase through a DistanceCounter, evaluating
+    # only the valid slots of each surviving block
+    lb = flat_index.bss_lower_bounds(idx, q)
+    alive = lb <= t
+    counter = DistanceCounter("l2", len(q))
+    bsz = idx.block
+    for b in range(idx.n_blocks):
+        qrows = np.nonzero(alive[:, b])[0]
+        if len(qrows) == 0:
+            continue
+        blk_valid = idx.valid[b * bsz:(b + 1) * bsz]
+        pts = idx.data[b * bsz:(b + 1) * bsz][blk_valid]
+        counter.pairwise(qrows, q[qrows], pts)
+
+    for results, stats in (
+        flat_index.bss_query(idx, q, t),
+        flat_index.bss_query_batched(idx, q, t, backend="jnp"),
+    ):
+        assert stats["exact_dists_per_query"] == pytest.approx(counter.mean)
+        assert stats["dists_per_query"] == pytest.approx(
+            idx.pivots.shape[0] + counter.mean
+        )
+    # the old (buggy) accounting would have been strictly larger whenever a
+    # partial block survives; make sure some query DID hit the partial block
+    assert alive[:, -1].any(), "test space must exercise the partial block"
+    n_pad = idx.n_blocks * bsz
+    assert n_pad > n  # padding exists, and is excluded from the count
+
+
+def test_knn_accounting_excludes_padding():
+    """kNN rounds share the padding-free accounting: with a radius that
+    admits every block in round one, exactly n_valid (200) distances are
+    charged — the old accounting would have charged n_pad (256)."""
+    db = _space("l2", 200, 8, seed=3)  # 2 blocks of 128, second half-empty
+    q = _space("l2", 5, 8, seed=4)
+    idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=128,
+                               seed=3)
+    _, _, stats = flat_index.bss_knn_batched(
+        idx, q, 3, r0=1e6, backend="jnp"
+    )
+    assert stats["rounds"] == 1
+    assert stats["exact_dists_per_query"] == pytest.approx(200.0)
+    assert stats["dists_per_query"] == pytest.approx(206.0)  # + 6 pivots
+
+
+# ------------------------------------------------------- degenerate deltas
+
+
+def test_duplicate_pivots_delta_zero_stays_sound():
+    """Regression for the inconsistent zero-baseline floors: with duplicate
+    points forced into the pivot set (delta == 0 planes), exclusion through
+    the shared MIN_DELTA floor must stay sound — bounds never exceed true
+    distances and the fused engine still matches the oracle exactly."""
+    rng = np.random.default_rng(7)
+    # only TWO distinct locations: with 8 pivots, FFT is forced to select
+    # duplicates, and keeping all 28 pivot pairs guarantees delta == 0 planes
+    locs = rng.random((2, 8)).astype(np.float32)
+    db = np.repeat(locs, 50, axis=0)  # 100 points, blocks end up padded too
+    q = rng.random((11, 8)).astype(np.float32)
+    idx = flat_index.build_bss("l2", db, n_pivots=8, n_pairs=28, block=32,
+                               seed=5)
+    assert (idx.deltas == 0.0).any(), "need at least one degenerate plane"
+    lb = flat_index.bss_lower_bounds(idx, q)
+    d = pairwise_np("l2", q, idx.data)
+    d = np.where(idx.valid[None, :], d, np.inf)
+    per_block_min = d.reshape(len(q), idx.n_blocks, idx.block).min(axis=2)
+    assert np.all(lb <= per_block_min + 1e-4)
+    assert np.all(np.isfinite(lb)), "degenerate plane produced inf/nan bound"
+    t = safe_threshold(d[np.isfinite(d)], 0.05)
     oracle, _ = flat_index.bss_query(idx, q, t)
     batched, _ = flat_index.bss_query_batched(idx, q, t, backend="jnp")
     assert batched == oracle

@@ -82,6 +82,50 @@ def test_four_point_fails_for_l1():
     assert worst > 1e-3, "expected a four-point violation for l1"
 
 
+def test_power_transform_registered_everywhere():
+    """Regression: the returned Metric used to be an orphan — not in
+    METRICS, no numpy twin — so every engine rejected it.  Now it must be
+    servable end to end: registry, numpy twin, BSS build, tree build."""
+    m = distances.power_transform(distances.l1, 0.5)
+    assert m.name == "l1^0.5"
+    assert distances.METRICS["l1^0.5"] is m
+    assert distances.get_metric("l1^0.5") is m
+    # name-only access registers lazily too
+    m2 = distances.get_metric("linf^0.25")
+    assert m2.four_point and m2.name == "linf^0.25"
+
+    rng = np.random.default_rng(6)
+    x, y = rng.random((12, 7)), rng.random((9, 7))
+    d_np = pairwise_np("l1^0.5", x, y)
+    d_j = np.asarray(m.pairwise(x, y))
+    np.testing.assert_allclose(d_np, d_j, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(d_np, pairwise_np("l1", x, y) ** 0.5,
+                               rtol=1e-12, atol=1e-12)
+
+    # both engines accept the registered name
+    from repro.core import flat_index, tree
+
+    db = rng.random((150, 7))
+    q = rng.random((6, 7))
+    t = float(np.quantile(pairwise_np("l1^0.5", q, db), 0.03))
+    truth = tree.exhaustive_search("l1^0.5", db, q, t)
+    idx = flat_index.build_bss("l1^0.5", db, n_pivots=6, n_pairs=8, block=32)
+    res, _ = flat_index.bss_query(idx, q, t)
+    assert all(sorted(a) == sorted(b) for a, b in zip(res, truth))
+    tr = tree.build_tree("hpt_fft_binary", "l1^0.5", db, seed=3)
+    res_t, _ = tree.range_search(tr, q, t, "hilbert")
+    assert all(sorted(a) == sorted(b) for a, b in zip(res_t, truth))
+
+
+def test_power_transform_bad_alpha_rejected():
+    with pytest.raises(ValueError):
+        distances.power_transform(distances.l1, 0.75)
+    with pytest.raises(ValueError):
+        distances.get_metric("l1^0.75")  # lazy path enforces the same bound
+    with pytest.raises(KeyError):
+        pairwise_np("l1^0.75", np.zeros((2, 3)), np.zeros((2, 3)))
+
+
 def test_power_transform_restores_four_point():
     """d^0.5 has the four-point property for ANY metric (paper §2.2 item 4)."""
     rng = np.random.default_rng(4)

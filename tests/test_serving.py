@@ -48,6 +48,53 @@ def test_range_query_exact_and_prunes(server_and_corpus):
     assert server.stats.saving > 0.3, "expected >30% distance pruning"
 
 
+@pytest.mark.parametrize("metric", ["jsd", "triangular"])
+def test_probability_corpus_server_exact(metric):
+    """Metric-parametrised serving: topic-histogram corpus under the
+    probability-space supermetrics — exact top-k and range-by-distance."""
+    from repro.data import metricsets
+
+    corpus = metricsets.topics_surrogate(3000, dim=32, seed=5)
+    queries = metricsets.topics_surrogate(520, dim=32, seed=6)[:20]
+    server = RetrievalServer(corpus, metric=metric, n_pivots=12, n_pairs=16,
+                             block=64)
+    top = server.top_k(queries, k=5)
+    d = pairwise_np(metric, queries, corpus)
+    for i in range(len(queries)):
+        want = set(np.argsort(d[i])[:5].tolist())
+        assert set(np.asarray(top[i]).tolist()) == want, i
+    t = float(np.quantile(d, 0.002))
+    hits = server.range_by_distance(queries, t)
+    for i in range(len(queries)):
+        want = set(np.nonzero(d[i] <= t)[0].tolist())
+        got = set(hits[i])
+        # float32 engine vs float64 truth may disagree only AT the boundary
+        assert got - want == set() or np.allclose(
+            d[i][sorted(got - want)], t, rtol=1e-5
+        )
+        missing = want - got
+        assert not missing or np.allclose(d[i][sorted(missing)], t, rtol=1e-5)
+    # score-based API is the cosine specialisation only
+    with pytest.raises(ValueError, match="cosine"):
+        server.range_query(queries, 0.9)
+    assert server.stats.n_queries == 40
+
+
+def test_cosine_server_serves_l2_on_sphere():
+    """The default (cosine) server's engine distance is l2 on the unit
+    sphere — bit-compatible with dot-product scoring."""
+    rng = np.random.default_rng(9)
+    corpus = rng.normal(size=(2000, 24))
+    server = RetrievalServer(corpus, n_pivots=10, n_pairs=12, block=64)
+    assert server.metric == "cosine"
+    assert server.index.metric_name == "cosine"
+    # the index data is the normalised corpus
+    np.testing.assert_allclose(
+        np.linalg.norm(server.index.data[server.index.valid], axis=1),
+        1.0, rtol=1e-5,
+    )
+
+
 def test_score_distance_duality():
     s = np.linspace(-1, 1, 101)
     d = score_to_distance(s)

@@ -172,3 +172,36 @@ def test_hilbert_dominates_property(n, seed):
     _, c_hyp = tree.range_search(tr, q, t, HYPERBOLIC)
     _, c_hil = tree.range_search(tr, q, t, HILBERT)
     assert np.all(c_hil.per_query <= c_hyp.per_query)
+
+
+@pytest.mark.parametrize("mech", [HYPERBOLIC, HILBERT])
+def test_tree_duplicate_refs_delta_zero_sound(mech):
+    """Regression for the delta floor (was 1e-300 here, 1e-12 elsewhere):
+    a corpus thick with exact duplicates forces duplicate reference points
+    (ref_dists == 0) — exclusion through the shared MIN_DELTA floor must
+    stay sound: range results still equal exhaustive search."""
+    rng = np.random.default_rng(21)
+    locs = rng.random((40, 6))
+    db = np.concatenate([np.repeat(locs, 8, axis=0), rng.random((80, 6))])
+    q = rng.random((12, 6))
+    t = 0.25
+    truth = tree.exhaustive_search("l2", db, q, t)
+    for variant in ("hpt_fft_fixed", "sat_pure"):
+        tr = tree.build_tree(variant, "l2", db, seed=5)
+        res, _ = tree.range_search(tr, q, t, mech)
+        assert _same(res, truth), (variant, mech)
+
+
+def test_monotone_tree_duplicate_pivots_sound():
+    """Same regression for the monotone/LRT family: duplicate pivot pairs
+    (delta < MIN_DELTA) fall back to leaf buckets and stay exact."""
+    rng = np.random.default_rng(22)
+    locs = rng.random((25, 5))
+    db = np.repeat(locs, 10, axis=0)  # every point duplicated 10x
+    q = rng.random((10, 5))
+    t = 0.2
+    truth = tree.exhaustive_search("l2", db, q, t)
+    for partition in ("closer", "median_x", "lrt"):
+        tr = lrt.build_monotone_tree(partition, "far", "l2", db, seed=6)
+        res, _ = lrt.range_search_monotone(tr, q, t, HILBERT)
+        assert _same(res, truth), partition
