@@ -44,5 +44,13 @@ def timed(fn, *args, **kw):
     return out, time.time() - t0
 
 
+def forest_search(search_fn, enc, q, t, mech):
+    """Uniform (hits, per_query_dists) adapter over the device-forest
+    walkers (``forest_range_search`` / ``monotone_range_search``) for the
+    tree benchmarks' timing loops."""
+    hits, stats = search_fn(enc, q, t, mech)
+    return hits, stats["per_query_dists"]
+
+
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"

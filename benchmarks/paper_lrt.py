@@ -5,15 +5,25 @@ Paper claims validated:
   * LRT (balanced) beats the balanced monotone tree ("the fair comparison"),
   * the unbalanced monotone tree is the overall best performer,
 plus our beyond-paper partitions (pca, median_y) for §3.4 completeness.
+
+``backend="forest"`` runs every walk through the array-encoded jitted
+monotone walker (``repro.forest``) instead of the host numpy walk — same
+results, same per-query distance counts.
+
+    PYTHONPATH=src python -m benchmarks.paper_lrt --backend forest
 """
 
 from __future__ import annotations
 
-from benchmarks.paper_common import load_space, row, timed
+from benchmarks.paper_common import forest_search, load_space, row, timed
 from repro.core import lrt
+from repro.forest import encode_monotone, monotone_range_search
 
 
-def run(datasets=("colors", "nasa"), seed: int = 0) -> list[str]:
+def run(datasets=("colors", "nasa"), seed: int = 0,
+        backend: str = "numpy") -> list[str]:
+    if backend not in ("numpy", "forest"):
+        raise ValueError(f"backend must be numpy|forest, got {backend!r}")
     rows = []
     for ds in datasets:
         db, q, t = load_space(ds, seed=seed)
@@ -27,14 +37,23 @@ def run(datasets=("colors", "nasa"), seed: int = 0) -> list[str]:
         ):
             for select in ("rand", "far"):
                 tr = lrt.build_monotone_tree(part, select, "l2", db, seed=seed + 3)
-                (hits, counter), dt = timed(
-                    lrt.range_search_monotone, tr, q, t, "hilbert"
-                )
-                results[(label, select)] = counter.mean
+                if backend == "forest":
+                    enc = encode_monotone(tr)
+                    monotone_range_search(enc, q, t, "hilbert")  # warm-up (same shapes)
+                    (hits, per_query), dt = timed(
+                        forest_search, monotone_range_search, enc, q, t, "hilbert"
+                    )
+                    mean = float(per_query.mean())
+                else:
+                    (hits, counter), dt = timed(
+                        lrt.range_search_monotone, tr, q, t, "hilbert"
+                    )
+                    mean = counter.mean
+                results[(label, select)] = mean
                 rows.append(row(
-                    f"lrt/{ds}/{label}/{select}",
+                    f"lrt/{ds}/{label}/{select}/{backend}",
                     dt / len(q) * 1e6,
-                    f"dists_per_query={counter.mean:.1f};depth={tr.max_depth}",
+                    f"dists_per_query={mean:.1f};depth={tr.max_depth}",
                 ))
         lrt_best = min(results[("LRT", s)] for s in ("rand", "far"))
         bal_best = min(results[("MonPT_balanced", s)] for s in ("rand", "far"))
@@ -43,6 +62,29 @@ def run(datasets=("colors", "nasa"), seed: int = 0) -> list[str]:
             f"lrt/{ds}/summary", 0.0,
             f"lrt_over_balanced={lrt_best / bal_best:.3f};"
             f"unbalanced_over_lrt={unb_best / lrt_best:.3f};"
-            f"paper_claim=lrt<balanced,unbalanced<all",
+            f"paper_claim=lrt<balanced,unbalanced<all;backend={backend}",
         ))
     return rows
+
+
+def run_forest(datasets=("colors", "nasa"), seed: int = 0) -> list[str]:
+    """Suite entry point for the device-forest backend."""
+    return run(datasets=datasets, seed=seed, backend="forest")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="numpy", choices=["numpy", "forest"])
+    ap.add_argument("--datasets", nargs="+", default=["colors", "nasa"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(datasets=tuple(args.datasets), seed=args.seed,
+                 backend=args.backend):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

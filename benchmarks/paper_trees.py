@@ -7,32 +7,64 @@ query.  Paper claims validated here:
   * improvement magnitude ~40-60% at low thresholds,
   * variance across structures far lower under Hilbert,
   * hpt_fft_log among the best (paper's new record-holder).
+
+Backends
+--------
+``backend="numpy"`` walks the host trees (``tree.range_search``, the
+distance-counted oracle); ``backend="forest"`` array-encodes each tree and
+runs the jitted batched device walk (``repro.forest``) — identical result
+sets and per-query distance counts, tree-shaped pruning on accelerator.
+
+    PYTHONPATH=src python -m benchmarks.paper_trees --backend forest
+    PYTHONPATH=src python -m benchmarks.paper_trees --backend both \
+        --datasets colors --out BENCH_trees.json
+
+``--backend both`` cross-checks forest vs numpy per variant (results AND
+per-query counts) and records both timings in the JSON payload — the
+artifact the CI forest-matrix job archives.
 """
 
 from __future__ import annotations
 
+import json
+import time
+
 import numpy as np
 
-from benchmarks.paper_common import load_space, row, timed
+from benchmarks.paper_common import FULL, forest_search, load_space, row, timed
 from repro.core import tree
+from repro.forest import encode_tree, forest_range_search
 
 
 def run(datasets=("colors", "nasa", "euc10"), variants=tree.TREE_VARIANTS,
-        seed: int = 0) -> list[str]:
+        seed: int = 0, backend: str = "numpy") -> list[str]:
+    if backend not in ("numpy", "forest"):
+        raise ValueError(f"backend must be numpy|forest, got {backend!r}")
     rows = []
     for ds in datasets:
         db, q, t = load_space(ds, seed=seed)
         per_variant = {}
         for variant in variants:
             tr = tree.build_tree(variant, "l2", db, seed=seed + 7)
+            enc = encode_tree(tr) if backend == "forest" else None
             res = {}
             for mech in ("hyperbolic", "hilbert"):
-                (hits, counter), dt = timed(tree.range_search, tr, q, t, mech)
-                res[mech] = counter.mean
+                if backend == "forest":
+                    forest_range_search(enc, q, t, mech)  # jit warm-up (same shapes)
+                    (hits, per_query), dt = timed(
+                        forest_search, forest_range_search, enc, q, t, mech
+                    )
+                    mean = float(per_query.mean())
+                else:
+                    (hits, counter), dt = timed(
+                        tree.range_search, tr, q, t, mech
+                    )
+                    mean = counter.mean
+                res[mech] = mean
                 rows.append(row(
-                    f"trees/{ds}/{variant}/{mech}",
+                    f"trees/{ds}/{variant}/{mech}/{backend}",
                     dt / len(q) * 1e6,
-                    f"dists_per_query={counter.mean:.1f};n={db.shape[0]};t={t:.4f}",
+                    f"dists_per_query={mean:.1f};n={db.shape[0]};t={t:.4f}",
                 ))
             per_variant[variant] = res
         hyp = np.array([v["hyperbolic"] for v in per_variant.values()])
@@ -43,6 +75,114 @@ def run(datasets=("colors", "nasa", "euc10"), variants=tree.TREE_VARIANTS,
             f"hilbert_over_hyperbolic={float(np.mean(hil / hyp)):.3f};"
             f"cv_hyp={float(np.std(hyp) / np.mean(hyp)):.3f};"
             f"cv_hil={float(np.std(hil) / np.mean(hil)):.3f};"
-            f"best_hilbert={best}",
+            f"best_hilbert={best};backend={backend}",
         ))
     return rows
+
+
+def run_forest(datasets=("colors", "nasa", "euc10"), seed: int = 0) -> list[str]:
+    """Suite entry point for the device-forest backend."""
+    return run(datasets=datasets, seed=seed, backend="forest")
+
+
+def sweep_both(datasets=("colors",), variants=tree.TREE_VARIANTS,
+               seed: int = 0, max_n: int | None = None, nq: int | None = None):
+    """numpy walk vs device forest, per variant: timings, mean distance
+    counts, and the oracle-equivalence verdict (results AND per-query
+    counts).  Returns (csv rows, results dict for BENCH_trees.json)."""
+    rows, results = [], {}
+    for ds in datasets:
+        db, q, t = load_space(ds, seed=seed)
+        if max_n:
+            db = db[:max_n]
+        if nq:
+            q = q[:nq]
+        ds_res = {"n": int(db.shape[0]), "queries": int(len(q)),
+                  "t": float(t), "variants": {}}
+        for variant in variants:
+            tr, dt_build = timed(tree.build_tree, variant, "l2", db, seed=seed + 7)
+            enc, dt_encode = timed(encode_tree, tr)
+            vres = {"build_s": round(dt_build, 3),
+                    "encode_s": round(dt_encode, 3),
+                    "levels": len(enc.levels), "nodes": enc.n_nodes}
+            for mech in ("hyperbolic", "hilbert"):
+                (hits_np, counter), dt_np = timed(
+                    tree.range_search, tr, q, t, mech
+                )
+                forest_range_search(enc, q, t, mech)  # jit warm-up (same shapes)
+                (hits_f, per_query), dt_f = timed(forest_search, forest_range_search, enc, q, t, mech)
+                match = all(
+                    sorted(a) == sorted(b) for a, b in zip(hits_f, hits_np)
+                ) and np.array_equal(per_query, counter.per_query)
+                vres[mech] = {
+                    "match": bool(match),
+                    "dists_per_query": round(float(counter.mean), 2),
+                    "numpy_us_per_query": round(dt_np / len(q) * 1e6, 1),
+                    "forest_us_per_query": round(dt_f / len(q) * 1e6, 1),
+                }
+                rows.append(row(
+                    f"trees/{ds}/{variant}/{mech}/both",
+                    dt_f / len(q) * 1e6,
+                    f"match={match};dists_per_query={counter.mean:.1f};"
+                    f"numpy_us={dt_np / len(q) * 1e6:.1f}",
+                ))
+            ds_res["variants"][variant] = vres
+        results[ds] = ds_res
+    return rows, results
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default="numpy",
+                    choices=["numpy", "forest", "both"])
+    ap.add_argument("--datasets", nargs="+", default=["colors"])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-n", type=int, default=None,
+                    help="subsample the corpus (CI-budget sweeps)")
+    ap.add_argument("--max-queries", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_trees.json (only with --backend both)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if args.backend == "both":
+        rows, results = sweep_both(
+            datasets=tuple(args.datasets), seed=args.seed,
+            max_n=args.max_n, nq=args.max_queries,
+        )
+        for r in rows:
+            print(r, flush=True)
+        mismatches = [
+            f"{ds}/{variant}/{mech}"
+            for ds, dres in results.items()
+            for variant, vres in dres["variants"].items()
+            for mech in ("hyperbolic", "hilbert")
+            if not vres[mech]["match"]
+        ]
+        if args.out:
+            payload = {
+                "bench": "trees_forest",
+                "seed": args.seed,
+                "wall_s": round(time.time() - t0, 1),
+                "full": FULL,
+                "datasets": results,
+            }
+            with open(args.out, "w") as fh:
+                json.dump(payload, fh, indent=2)
+            print(f"# wrote {args.out}", flush=True)
+        if mismatches:
+            # the sweep IS the oracle-equivalence gate at benchmark scale —
+            # a recorded divergence must fail the CI job, not just land in
+            # the archived artifact
+            raise SystemExit(f"forest/numpy mismatch: {', '.join(mismatches)}")
+    else:
+        for r in run(datasets=tuple(args.datasets), seed=args.seed,
+                     backend=args.backend):
+            print(r, flush=True)
+    print(f"# finished in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

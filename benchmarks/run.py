@@ -25,8 +25,10 @@ def main() -> None:
 
     suites = {
         "scatter": paper_scatter.run,     # Fig. 4-7
-        "trees": paper_trees.run,         # Fig. 12-13
+        "trees": paper_trees.run,         # Fig. 12-13 (host numpy walk)
+        "trees_forest": paper_trees.run_forest,  # same sweep, device forest
         "lrt": paper_lrt.run,             # Fig. 15-16 (§5)
+        "lrt_forest": paper_lrt.run_forest,  # same sweep, device forest
         "unbalance": paper_unbalance.run,  # §6 future work, implemented
         "bss": bss_engine.run,            # beyond-paper TPU engine
         "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep

@@ -69,3 +69,18 @@ for metric in ("cosine", "jsd", "triangular"):
         f"BSS engine [{metric:10s}]: {stats_m['dists_per_query']:.0f} "
         f"distances/query (exact, == numpy oracle)"
     )
+
+# 7. the device forest: array-encode the tree from step 2 and run the SAME
+#    range search as a single jitted batched walk (frontier-per-level) —
+#    identical result sets AND identical per-query distance counts.
+from repro.forest import encode_tree, forest_range_search  # noqa: E402
+
+enc = encode_tree(tr)
+f_hits, f_stats = forest_range_search(enc, queries, t, "hilbert")
+assert all(sorted(a) == sorted(b) for a, b in zip(f_hits, results))
+assert (f_stats["per_query_dists"] == counter.per_query).all()
+print(
+    f"device forest (hpt_fft_log): {f_stats['dists_per_query']:8.1f} "
+    f"distances/query over {f_stats['n_levels']} jitted levels "
+    f"(results AND per-query counts == host walk)"
+)

@@ -11,4 +11,17 @@ Layers:
   flat_index  Blocked Supermetric Scan — TPU-native engine (DESIGN.md §2)
 """
 
-from repro.core import distances, exclusion, flat_index, lrt, projection, refpoints, tree  # noqa: F401
+from repro.core import distances, exclusion, lrt, projection, refpoints, tree  # noqa: F401
+
+
+def __getattr__(name: str):
+    # flat_index pulls in repro.kernels, whose modules import
+    # repro.core.constants — importing it eagerly here closes an import
+    # cycle whenever a kernels module is the interpreter's entry point.
+    # Lazy attribute access keeps `repro.core.flat_index` working while
+    # leaving the kernels layer importable on its own.
+    if name == "flat_index":
+        import importlib
+
+        return importlib.import_module("repro.core.flat_index")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,36 @@
+"""Shared plumbing of the batched query engines (BSS scan + device forest):
+backend selection and query-tile survival.
+
+Both engines tile their work as (query-tile x corpus-block) cells fed to the
+masked Pallas kernels on TPU (``backend="pallas"``) or an equivalent fused
+jnp graph elsewhere (``"jnp"``); ``"auto"`` picks per the jax default
+backend.  These two helpers are the contract between an engine's per-query
+survival logic and the kernels' tile granularity — one copy, two engines.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["resolve_backend", "tile_survival"]
+
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if backend not in ("pallas", "jnp"):
+        raise ValueError(f"backend must be auto|pallas|jnp, got {backend!r}")
+    return backend
+
+
+def tile_survival(alive: jnp.ndarray, bq: int) -> jnp.ndarray:
+    """(Q, B) per-query survival -> (ceil(Q/bq), B) tile survival: a tile
+    lives when ANY of its queries does (jnp ops — usable in and out of jit;
+    host callers wrap the result in np.asarray)."""
+    qtiles = -(-alive.shape[0] // bq)
+    alive_pad = jnp.pad(
+        alive, ((0, qtiles * bq - alive.shape[0]), (0, 0)),
+        constant_values=False,
+    )
+    return alive_pad.reshape(qtiles, bq, -1).any(axis=1)

@@ -21,6 +21,20 @@ bound for the closer-of-two-pivots partition is
 ``sep = |d(q,p1) - d(q,p2)| / 2`` (condition ``|d1-d2| > 2t``).
 
 Cover-radius ("ball") exclusion is independent of both and always sound.
+
+One implementation, three consumers
+-----------------------------------
+Every predicate takes an ``xp`` array namespace (``numpy`` or
+``jax.numpy``).  The host tree walks (``core/tree.py``, ``core/lrt.py``)
+call with ``xp=numpy`` in float64; the device forest walker
+(``forest/walk.py``) calls the same bodies with ``xp=jax.numpy`` in float32
+under jit.  Exclusion GEOMETRY lives here and nowhere else — a divergent
+re-derivation is exactly how the pre-PR-2 delta-floor bug happened.
+
+NaN discipline: every criterion is written so a NaN operand (missing centre
+witness, padded slot) makes the comparison False — i.e. *no exclusion*,
+the conservative direction.  Padded reference slots should carry ``+inf``
+query distances, which the criteria likewise treat as "excludes nothing".
 """
 
 from __future__ import annotations
@@ -38,27 +52,38 @@ __all__ = [
     "PlanarPartition",
     "hyperbolic_margin",
     "hilbert_margin",
+    "planar_margin",
+    "cover_radius_exclusion_mask",
     "hyperplane_exclusion_mask",
+    "centre_witness_exclusion_mask",
 ]
 
 HYPERBOLIC = "hyperbolic"
 HILBERT = "hilbert"
 
 
-def hyperbolic_margin(d1: jnp.ndarray, d2: jnp.ndarray) -> jnp.ndarray:
+# one dtype policy for ALL xp-generic geometry: float32 on device, the
+# host's dtype (float64 walks) on numpy — shared with projection.py so the
+# exclusion predicates and the planar coordinates they compare against can
+# never drift apart in precision
+_coerce = projection._coerce
+
+
+def hyperbolic_margin(d1, d2, *, xp=jnp):
     """Signed triangle-inequality margin for the closer-pivot partition.
 
     ``(d1 - d2)/2``: negative => closer to p1 (left).  A query may exclude
     the opposite side iff |margin| > t.  (paper: |d(q,p1)-d(q,p2)| > 2t)
     """
-    return 0.5 * (jnp.asarray(d1, jnp.float32) - jnp.asarray(d2, jnp.float32))
+    d1, d2 = _coerce(xp, d1, d2)
+    return 0.5 * (d1 - d2)
 
 
-def hilbert_margin(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> jnp.ndarray:
+def hilbert_margin(d1, d2, delta, *, xp=jnp):
     """Signed four-point margin: the planar X coordinate
     ``(d1^2 - d2^2) / (2 d(p1,p2))``.  Same sign convention; exclusion of the
     opposite side iff |margin| > t (paper: (d1^2-d2^2)/delta > 2t)."""
-    return projection.project_x(d1, d2, delta)
+    return projection.project_x(d1, d2, delta, xp=xp)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,27 +109,40 @@ class PlanarPartition:
     ny: float = 0.0
     split: float = 0.0
 
-    def margin(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-        rx, ry = projection.rotate(x, y, self.theta, self.h)
+    def margin(self, x, y, *, xp=jnp):
+        rx, ry = projection.rotate(x, y, self.theta, self.h, xp=xp)
         return self.nx * rx + self.ny * ry - self.split
 
-    def separation(self, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
-        return jnp.abs(self.margin(x, y))
+    def separation(self, x, y, *, xp=jnp):
+        return xp.abs(self.margin(x, y, xp=xp))
 
 
-def hyperplane_exclusion_mask(
-    dq: jnp.ndarray,
-    ref_dists: jnp.ndarray,
-    t: float,
-    mechanism: str,
-) -> jnp.ndarray:
+def planar_margin(x, y, theta, h, nx, ny, split, *, xp=jnp):
+    """Array form of ``PlanarPartition.margin`` for batched node tables:
+    all parameters broadcast (per-node vectors against (..., node) planar
+    coordinates).  Same geometry, same soundness argument."""
+    rx, ry = projection.rotate(x, y, theta, h, xp=xp)
+    return nx * rx + ny * ry - split
+
+
+def cover_radius_exclusion_mask(dq, cover_r, t, *, xp=jnp):
+    """Ball exclusion: child x is excluded when ``d(q, p_x) > cr_x + t``
+    (no solution can sit inside a cover ball the query clears by > t).
+    Shapes broadcast; +inf dq excludes (a padded slot has no child)."""
+    dq, cover_r = _coerce(xp, dq, cover_r)
+    return dq > cover_r + t
+
+
+def hyperplane_exclusion_mask(dq, ref_dists, t, mechanism, *, xp=jnp):
     """Pairwise hyperplane exclusion over an n-ary node (paper Alg. 2).
 
     Args:
       dq:        (..., k) distances from query/queries to the k reference
-                 points of a node.
-      ref_dists: (k, k) pairwise distances among the reference points
-                 (only used by Hilbert; computed at build time).
+                 points of a node.  Padded slots must carry +inf (an inf
+                 witness or candidate never triggers a criterion).
+      ref_dists: (k, k) pairwise distances among the reference points —
+                 or any broadcastable batch of them, e.g. (nodes, k, k)
+                 against dq (queries, nodes, k).
       t:         query threshold.
       mechanism: HYPERBOLIC or HILBERT.
 
@@ -113,12 +151,13 @@ def hyperplane_exclusion_mask(
       with  d(q,px) - d(q,py) > 2t          (hyperbolic)
       or    (d(q,px)^2 - d(q,py)^2)/d(px,py) > 2t   (Hilbert).
     """
+    dq, ref_dists = _coerce(xp, dq, ref_dists)
     dx = dq[..., :, None]  # (..., k, 1) candidate-to-exclude x
     dy = dq[..., None, :]  # (..., 1, k) witness y
     if mechanism == HYPERBOLIC:
         crit = dx - dy > 2.0 * t
     elif mechanism == HILBERT:
-        delta = jnp.maximum(ref_dists, MIN_DELTA)  # (k, k)
+        delta = xp.maximum(ref_dists, MIN_DELTA)  # (..., k, k)
         # degenerate witness pairs (duplicate refs) separate nothing: under
         # jit the numerator carries float noise that a tiny delta would
         # amplify into spurious exclusion — neutralise those pairs instead
@@ -128,5 +167,36 @@ def hyperplane_exclusion_mask(
     else:
         raise ValueError(f"unknown mechanism {mechanism!r}")
     k = dq.shape[-1]
-    off_diag = ~jnp.eye(k, dtype=bool)
-    return jnp.any(crit & off_diag, axis=-1)
+    off_diag = ~xp.eye(k, dtype=bool)
+    return xp.any(crit & off_diag, axis=-1)
+
+
+def centre_witness_exclusion_mask(dq, d_centre, centre_dists, t, mechanism, *, xp=jnp):
+    """SAT-family bonus witness: the parent *centre*, whose query distance
+    was already paid one level up (passed down for free).
+
+    Args:
+      dq:           (..., k) query→reference distances at the node.
+      d_centre:     (...,) query→parent-centre distance (NaN when the walk
+                    has no centre in hand — NaN comparisons are False, so
+                    nothing is excluded: the sound default).
+      centre_dists: (k,) build-time d(ref_i, centre) — or a broadcastable
+                    batch; NaN entries (witness disabled at build, see
+                    ``build_tree``'s centre_witness flag) exclude nothing.
+      t, mechanism: as in ``hyperplane_exclusion_mask``.
+
+    Returns (..., k) True where child x is excluded via the centre witness.
+    """
+    dq, d_centre, centre_dists = _coerce(xp, dq, d_centre, centre_dists)
+    dc = d_centre[..., None]  # (..., 1)
+    if mechanism == HYPERBOLIC:
+        return dq - dc > 2.0 * t
+    if mechanism == HILBERT:
+        delta = xp.maximum(centre_dists, MIN_DELTA)
+        # same degenerate-pair neutralisation as the pairwise criterion: a
+        # ref sitting on the centre separates nothing (and a tiny delta
+        # would amplify jit float noise into unsound exclusion)
+        return ((dq * dq - dc * dc) / delta > 2.0 * t) & (
+            centre_dists >= DEGENERATE_DELTA
+        )
+    raise ValueError(f"unknown mechanism {mechanism!r}")

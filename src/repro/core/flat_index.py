@@ -93,7 +93,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import projection
-from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
+from repro.core.backends import resolve_backend, tile_survival
 from repro.core.distances import Metric, get_metric
 from repro.core.npdist import pairwise_np
 from repro.core.refpoints import select_fft
@@ -103,6 +103,7 @@ from repro.kernels.pairwise_dist import (
     pairwise_kernel_call,
 )
 from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
+from repro.kernels.tiles import TILE_BQ
 
 __all__ = [
     "BSSIndex",
@@ -113,7 +114,8 @@ __all__ = [
     "bss_lower_bounds",
 ]
 
-_DEFAULT_BQ = 128  # query-tile size: matches the Pallas kernels' row tiling
+# query-tile size: matches the Pallas kernels' row tiling (REPRO_TILE_BQ)
+_DEFAULT_BQ = TILE_BQ
 
 # Normalisation floor for the cosine→l2 mapping; matches the cosine metric's
 # own floor in distances._cosine_pairwise so both paths agree bit-for-bit on
@@ -192,18 +194,13 @@ class BSSIndex:
 def _project_all(dp: np.ndarray, pairs: np.ndarray, deltas: np.ndarray):
     """dp: (n, P) pivot distances -> (n, M) x and (n, M) y planar coords.
 
-    Must agree with ``projection.project`` (the query side) — in particular
-    degenerate planes (duplicate pivots) collapse to the ring (0, d1) on
-    BOTH sides, or the box/query geometries would diverge unsoundly."""
-    d1 = dp[:, pairs[:, 0]]
-    d2 = dp[:, pairs[:, 1]]
-    raw = deltas[None, :]
-    delta = np.maximum(raw, MIN_DELTA)
-    x = np.where(
-        raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
+    SAME implementation as the query side (``projection.project``, numpy
+    namespace) — in particular degenerate planes (duplicate pivots) collapse
+    to the ring (0, d1) on BOTH sides, or the box/query geometries would
+    diverge unsoundly."""
+    return projection.project(
+        dp[:, pairs[:, 0]], dp[:, pairs[:, 1]], deltas[None, :], xp=np
     )
-    y = np.sqrt(np.maximum(d1 * d1 - (x + delta / 2.0) ** 2, 0.0))
-    return x, y
 
 
 def build_bss(
@@ -392,24 +389,9 @@ def bss_query(
 # ---------------------------------------------------------------------------
 
 
-def _tile_survival(alive: jnp.ndarray, bq: int) -> jnp.ndarray:
-    """(Q, B) per-query survival -> (ceil(Q/bq), B) tile survival: a tile
-    lives when ANY of its queries does (jnp ops — usable in and out of jit;
-    host callers wrap the result in np.asarray)."""
-    qtiles = -(-alive.shape[0] // bq)
-    alive_pad = jnp.pad(
-        alive, ((0, qtiles * bq - alive.shape[0]), (0, 0)),
-        constant_values=False,
-    )
-    return alive_pad.reshape(qtiles, bq, -1).any(axis=1)
-
-
-def _resolve_backend(backend: str) -> str:
-    if backend == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "jnp"
-    if backend not in ("pallas", "jnp"):
-        raise ValueError(f"backend must be auto|pallas|jnp, got {backend!r}")
-    return backend
+# shared with the device forest walker — see repro.core.backends
+_tile_survival = tile_survival
+_resolve_backend = resolve_backend
 
 
 def _fused_lower_bounds(

@@ -30,7 +30,8 @@ import sys
 
 import numpy as np
 
-from repro.core.constants import MIN_DELTA
+from repro.core import exclusion, projection
+from repro.core.constants import DEGENERATE_DELTA
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.core.npdist import DistanceCounter, pairwise_np
 
@@ -66,17 +67,12 @@ class MonotoneTree:
     max_depth: int
 
 
-def _project_np(d1: np.ndarray, d2: np.ndarray, delta: float):
-    delta = max(delta, MIN_DELTA)
-    x = (d1 * d1 - d2 * d2) / (2.0 * delta)
-    y = np.sqrt(np.maximum(d1 * d1 - (x + delta / 2.0) ** 2, 0.0))
-    return x, y
-
-
-def _rotate_np(x, y, theta: float, h: float):
-    c, s = np.cos(theta), np.sin(theta)
-    xs = x - h
-    return xs * c + y * s, -xs * s + y * c
+# Planar geometry comes from core/projection.py (numpy namespace, float64)
+# — the SAME bodies the jitted engines run in float32, so build, host walk
+# and device forest walk agree on the degenerate-plane (duplicate-pivot)
+# handling by construction.  Build refuses nodes with delta below
+# DEGENERATE_DELTA (leaf-bucket fallback), so the walk-side ring collapse
+# inside ``projection.project`` never fires for an encoded node.
 
 
 def _fit_partition(partition: str, x: np.ndarray, y: np.ndarray,
@@ -115,7 +111,7 @@ def _fit_partition(partition: str, x: np.ndarray, y: np.ndarray,
             m = num / den
             theta = float(np.arctan(m))
             h = xb - yb / m if abs(m) > 1e-9 else 0.0
-        rx, _ = _rotate_np(x, y, theta, h)
+        rx, _ = projection.rotate(x, y, theta, h, xp=np)
         return theta, h, 1.0, 0.0, float(np.quantile(rx, q))
     raise ValueError(partition)
 
@@ -161,13 +157,15 @@ def build_monotone_tree(
         subset, d1 = subset[keep], d1[keep]
         d2 = pairwise_np(metric, data[subset], data[p2][None, :])[:, 0]
         build_count[0] += len(subset)
-        if delta < MIN_DELTA:
-            # degenerate duplicate pivots: fall back to a leaf bucket
+        if delta < DEGENERATE_DELTA:
+            # degenerate (duplicate or near-duplicate) pivots: the plane
+            # cannot be trusted — projection would collapse it to the ring
+            # bound at query time (PR 2 fix), so no linear split of it can
+            # separate anything.  Fall back to a leaf bucket.
             return np.concatenate([subset, np.array([p2], dtype=np.int64)])
-        x, y = _project_np(d1, d2, delta)
+        x, y = projection.project(d1, d2, delta, xp=np)
         theta, h, nx, ny, split = _fit_partition(partition, x, y, split_quantile)
-        rx, ry = _rotate_np(x, y, theta, h)
-        margin = nx * rx + ny * ry - split
+        margin = exclusion.planar_margin(x, y, theta, h, nx, ny, split, xp=np)
         lmask = margin < 0.0
         # One-sided splits are legitimate for the unbalanced 'closer' tree
         # (paper §5: "the unbalanced tree is always the best performer"); for
@@ -248,11 +246,13 @@ def range_search_monotone(
         for row in np.nonzero(dq2 <= t)[0]:
             results[qidx[row]].append(node.p2)
         if mechanism == HYPERBOLIC:
-            margin = 0.5 * (dq1 - dq2)  # <0 closer to p1; exclude iff |.|>t
+            # <0 closer to p1; exclude iff |.| > t
+            margin = exclusion.hyperbolic_margin(dq1, dq2, xp=np)
         else:
-            x, y = _project_np(dq1, dq2, node.delta)
-            rx, ry = _rotate_np(x, y, node.theta, node.h)
-            margin = node.nx * rx + node.ny * ry - node.split
+            x, y = projection.project(dq1, dq2, node.delta, xp=np)
+            margin = exclusion.planar_margin(
+                x, y, node.theta, node.h, node.nx, node.ny, node.split, xp=np
+            )
         go_left = margin < t       # cannot exclude left unless margin >= t
         go_right = margin > -t
         if np.any(go_left):

@@ -17,7 +17,12 @@ so any partition of the plane yields a sound exclusion rule: a query farther
 than ``t`` (in the plane) from a region cannot have solutions inside it.
 Hilbert exclusion is the special case of the vertical line ``x = 0``.
 
-All functions are batched/jit-friendly; shapes broadcast over leading dims.
+All functions take an ``xp`` array namespace: ``jax.numpy`` (default —
+float32, jit/vmap-friendly, shapes broadcast over leading dims) or ``numpy``
+(host dtype preserved, i.e. the float64 tree walks).  The host twins used to
+be re-derived in ``core/lrt.py`` and ``core/flat_index.py``; they now share
+THIS body, so the degenerate-plane handling (the PR 2 duplicate-pivot fix)
+cannot drift between engines.
 """
 
 from __future__ import annotations
@@ -36,7 +41,16 @@ __all__ = [
 ]
 
 
-def project(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> tuple[jnp.ndarray, jnp.ndarray]:
+def _coerce(xp, *arrays):
+    """THE dtype policy for every xp-generic geometry function (here and in
+    ``core/exclusion.py``): jnp computes in float32 (the engines' dtype);
+    numpy keeps the host dtype (float64 walks, float32 index build)."""
+    if xp is jnp:
+        return tuple(jnp.asarray(a, jnp.float32) for a in arrays)
+    return tuple(xp.asarray(a) for a in arrays)
+
+
+def project(d1, d2, delta, *, xp=jnp):
     """Planar apex coordinates for distances (d1, d2) w.r.t. pivot gap delta.
 
     Broadcasts over any leading shape.  Degenerate triangles (numerical noise
@@ -48,33 +62,29 @@ def project(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> tuple[jnp.ndarray, jnp.n
     triangle-inequality bound — instead of dividing float noise by a tiny
     baseline (see ``repro.core.constants``).
     """
-    d1 = jnp.asarray(d1, jnp.float32)
-    d2 = jnp.asarray(d2, jnp.float32)
-    raw = jnp.asarray(delta, jnp.float32)
-    delta = jnp.maximum(raw, MIN_DELTA)
-    x = jnp.where(
+    d1, d2, raw = _coerce(xp, d1, d2, delta)
+    delta = xp.maximum(raw, MIN_DELTA)
+    x = xp.where(
         raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
     )
     y_sq = d1 * d1 - (x + delta / 2.0) ** 2
-    y = jnp.sqrt(jnp.maximum(y_sq, 0.0))
+    y = xp.sqrt(xp.maximum(y_sq, 0.0))
     return x, y
 
 
-def project_x(d1: jnp.ndarray, d2: jnp.ndarray, delta) -> jnp.ndarray:
+def project_x(d1, d2, delta, *, xp=jnp):
     """X coordinate only — this is the Hilbert-exclusion quantity
     ``(d1^2 - d2^2) / (2 delta)`` (signed distance to the separating
     hyperplane's planar image).  Degenerate planes yield 0 (no exclusion —
     coincident pivots separate nothing)."""
-    d1 = jnp.asarray(d1, jnp.float32)
-    d2 = jnp.asarray(d2, jnp.float32)
-    raw = jnp.asarray(delta, jnp.float32)
-    delta = jnp.maximum(raw, MIN_DELTA)
-    return jnp.where(
+    d1, d2, raw = _coerce(xp, d1, d2, delta)
+    delta = xp.maximum(raw, MIN_DELTA)
+    return xp.where(
         raw < DEGENERATE_DELTA, 0.0, (d1 * d1 - d2 * d2) / (2.0 * delta)
     )
 
 
-def rotate(x: jnp.ndarray, y: jnp.ndarray, theta, h) -> tuple[jnp.ndarray, jnp.ndarray]:
+def rotate(x, y, theta, h, *, xp=jnp):
     """Rotate planar points by ``-theta``-style LRT transform around the
     X-intercept ``(h, 0)`` (paper Eq. 2-3):
 
@@ -85,30 +95,24 @@ def rotate(x: jnp.ndarray, y: jnp.ndarray, theta, h) -> tuple[jnp.ndarray, jnp.n
     by ``-theta``; what matters for correctness is that it is a *rigid*
     transform (distance-preserving), so the lower-bound property survives.
     """
-    c = jnp.cos(jnp.asarray(theta, jnp.float32))
-    s = jnp.sin(jnp.asarray(theta, jnp.float32))
-    xs = jnp.asarray(x, jnp.float32) - jnp.asarray(h, jnp.float32)
-    y = jnp.asarray(y, jnp.float32)
+    x, y, theta, h = _coerce(xp, x, y, theta, h)
+    c = xp.cos(theta)
+    s = xp.sin(theta)
+    xs = x - h
     return xs * c + y * s, -xs * s + y * c
 
 
-def planar_lower_bound(
-    x1: jnp.ndarray, y1: jnp.ndarray, x2: jnp.ndarray, y2: jnp.ndarray
-) -> jnp.ndarray:
+def planar_lower_bound(x1, y1, x2, y2, *, xp=jnp):
     """l2 distance in the plane == lower bound on true distance (supermetric)."""
-    return jnp.sqrt((x1 - x2) ** 2 + (y1 - y2) ** 2)
+    return xp.sqrt((x1 - x2) ** 2 + (y1 - y2) ** 2)
 
 
-def point_to_interval(v: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+def point_to_interval(v, lo, hi, *, xp=jnp):
     """Distance from scalar coordinate(s) to interval(s) [lo, hi] (0 inside)."""
-    return jnp.maximum(jnp.maximum(lo - v, v - hi), 0.0)
+    return xp.maximum(xp.maximum(lo - v, v - hi), 0.0)
 
 
-def point_to_box(
-    x: jnp.ndarray,
-    y: jnp.ndarray,
-    box: jnp.ndarray,
-) -> jnp.ndarray:
+def point_to_box(x, y, box, *, xp=jnp):
     """Planar distance from point(s) to axis-aligned box(es).
 
     ``box[..., :] = (x_lo, x_hi, y_lo, y_hi)``.  Broadcasts.  Because the
@@ -116,6 +120,6 @@ def point_to_box(
     on the distance from the query to EVERY point whose projection lies in
     the box — the Blocked Supermetric Scan's pruning primitive.
     """
-    dx = point_to_interval(x, box[..., 0], box[..., 1])
-    dy = point_to_interval(y, box[..., 2], box[..., 3])
-    return jnp.sqrt(dx * dx + dy * dy)
+    dx = point_to_interval(x, box[..., 0], box[..., 1], xp=xp)
+    dy = point_to_interval(y, box[..., 2], box[..., 3], xp=xp)
+    return xp.sqrt(dx * dx + dy * dy)

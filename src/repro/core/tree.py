@@ -39,8 +39,7 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core import refpoints
-from repro.core.constants import MIN_DELTA
+from repro.core import exclusion, refpoints
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.core.npdist import DistanceCounter, pairwise_np
 
@@ -308,25 +307,22 @@ def _exclusion_masks(
     mechanism: str,
     d_centre: np.ndarray | None,
 ) -> np.ndarray:
-    """(nq, k) True where child x is excluded for that query."""
-    nq, k = dq.shape
-    excl = dq > node.cover_r[None, :] + t  # ball exclusion
-    dx = dq[:, :, None]
-    dy = dq[:, None, :]
-    if mechanism == HYPERBOLIC:
-        crit = dx - dy > 2.0 * t
-    else:
-        delta = np.maximum(node.ref_dists, MIN_DELTA)[None, :, :]
-        crit = (dx * dx - dy * dy) / delta > 2.0 * t
-    off = ~np.eye(k, dtype=bool)[None]
-    excl |= np.any(crit & off, axis=2)
+    """(nq, k) True where child x is excluded for that query.
+
+    All three predicates come from ``core/exclusion.py`` (numpy namespace,
+    float64) — the same bodies the device forest walker runs under jit, so
+    the host walk IS the oracle for the accelerated one."""
+    excl = exclusion.cover_radius_exclusion_mask(
+        dq, node.cover_r[None, :], t, xp=np
+    )
+    excl |= exclusion.hyperplane_exclusion_mask(
+        dq, node.ref_dists, t, mechanism, xp=np
+    )
     # SAT-family bonus witness: the parent centre (free query distance).
     if d_centre is not None and not np.any(np.isnan(node.centre_dists)):
-        if mechanism == HYPERBOLIC:
-            excl |= dq - d_centre[:, None] > 2.0 * t
-        else:
-            delta_c = np.maximum(node.centre_dists, MIN_DELTA)[None, :]
-            excl |= (dq * dq - (d_centre**2)[:, None]) / delta_c > 2.0 * t
+        excl |= exclusion.centre_witness_exclusion_mask(
+            dq, d_centre, node.centre_dists[None, :], t, mechanism, xp=np
+        )
     return excl
 
 

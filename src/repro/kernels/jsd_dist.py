@@ -23,10 +23,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiles import TILE_KCHUNK
+
 __all__ = ["pairwise_jsd_kernel_call"]
 
 _EPS = 1e-12
-_K_CHUNK = 64  # lanes reduced per VPU pass; bounds the (bm, bn, Kc) transient
+# lanes reduced per VPU pass; bounds the (bm, bn, Kc) transient.
+# Overridable via REPRO_TILE_KCHUNK (repro.kernels.tiles).
+_K_CHUNK = TILE_KCHUNK
 
 
 def _interpret_default() -> bool:

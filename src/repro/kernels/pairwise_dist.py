@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.jsd_dist import _jsd_tile_kernel
+from repro.kernels.tiles import TILE_BLOCK, TILE_BQ
 from repro.kernels.tri_dist import _tri_tile_kernel
 
 __all__ = [
@@ -51,8 +52,10 @@ __all__ = [
     "KERNEL_METRICS",
 ]
 
-DEFAULT_BM = 128
-DEFAULT_BN = 128
+# overridable without a rebuild via REPRO_TILE_BQ / REPRO_TILE_BLOCK
+# (see repro.kernels.tiles) — the TPU-autotuning knob.
+DEFAULT_BM = TILE_BQ
+DEFAULT_BN = TILE_BLOCK
 
 
 def _interpret_default() -> bool:

@@ -25,11 +25,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.constants import DEGENERATE_DELTA, MIN_DELTA
+from repro.kernels.tiles import TILE_BLOCK, TILE_BQ
 
 __all__ = ["planar_lower_bound_kernel_call"]
 
-DEFAULT_BQ = 128
-DEFAULT_BB = 128
+# overridable via REPRO_TILE_BQ / REPRO_TILE_BLOCK (repro.kernels.tiles)
+DEFAULT_BQ = TILE_BQ
+DEFAULT_BB = TILE_BLOCK
 
 
 def _interpret_default() -> bool:

@@ -22,10 +22,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.tiles import TILE_KCHUNK
+
 __all__ = ["_tri_tile_kernel"]
 
 _EPS = 1e-12
-_K_CHUNK = 64  # lanes reduced per VPU pass; bounds the (bm, bn, Kc) transient
+# lanes reduced per VPU pass; bounds the (bm, bn, Kc) transient.
+# Overridable via REPRO_TILE_KCHUNK (repro.kernels.tiles).
+_K_CHUNK = TILE_KCHUNK
 
 
 def _tri_tile_kernel(x_ref, y_ref, o_ref):

@@ -20,6 +20,17 @@ registry is served exactly:
   (topic mixtures, histograms): thresholds are distances, use
   ``range_by_distance``; ``top_k`` works unchanged.
 * ``metric="l2"`` (or a registered power transform) — plain metric serving.
+
+Index backends
+--------------
+``index="bss"`` (default) serves through the Blocked Supermetric Scan;
+``index="forest"`` builds one of the paper's partition trees
+(``forest_variant``, default the paper's best ``hpt_fft_log``), encodes it
+with ``repro.forest`` and serves range queries through the jitted batched
+tree walk — same exactness contract, tree-shaped pruning.  kNN serving
+stays a BSS capability (the forest walker is a range engine; its
+radius-deepening reduction is ROADMAP work), so ``top_k`` on a forest
+server raises.
 """
 
 from __future__ import annotations
@@ -29,8 +40,10 @@ import time
 
 import numpy as np
 
-from repro.core import flat_index
+from repro.core import flat_index, tree
+from repro.core.exclusion import HILBERT
 from repro.core.npdist import pairwise_np
+from repro.forest import encode_tree, forest_range_search
 
 __all__ = ["RetrievalServer", "score_to_distance", "distance_to_score"]
 
@@ -66,7 +79,11 @@ class RetrievalServer:
 
     def __init__(self, corpus_embeddings: np.ndarray, *, metric: str = "cosine",
                  n_pivots: int = 16, n_pairs: int = 24, block: int = 128,
-                 seed: int = 0, backend: str = "auto"):
+                 seed: int = 0, backend: str = "auto", index: str = "bss",
+                 forest_variant: str = "hpt_fft_log",
+                 forest_mechanism: str = HILBERT):
+        if index not in ("bss", "forest"):
+            raise ValueError(f"index must be bss|forest, got {index!r}")
         corpus = np.array(corpus_embeddings, np.float32, copy=True)
         self.metric = metric
         if metric == "cosine":
@@ -76,10 +93,21 @@ class RetrievalServer:
             corpus = flat_index._engine_queries("cosine", corpus)
         self.corpus = corpus
         self.backend = backend
-        self.index = flat_index.build_bss(
-            metric, corpus, n_pivots=n_pivots, n_pairs=n_pairs, block=block,
-            seed=seed,
-        )
+        self.index_kind = index
+        if index == "forest":
+            # cosine rides the l2 geometry on the pre-normalised corpus,
+            # exactly as in the BSS engine; other metrics build natively
+            self.forest_mechanism = forest_mechanism
+            self.tree = tree.build_tree(
+                forest_variant, flat_index._engine_metric(metric), corpus,
+                seed=seed,
+            )
+            self.index = encode_tree(self.tree)
+        else:
+            self.index = flat_index.build_bss(
+                metric, corpus, n_pivots=n_pivots, n_pairs=n_pairs,
+                block=block, seed=seed,
+            )
         self.stats = ServeStats()
 
     def _prep(self, user_embeddings: np.ndarray) -> np.ndarray:
@@ -108,12 +136,19 @@ class RetrievalServer:
         return self.range_by_distance(user_embeddings, t)
 
     def range_by_distance(self, user_embeddings: np.ndarray, t: float):
-        """All items within metric distance t — exact, one fused pass."""
+        """All items within metric distance t — exact, one fused pass
+        (BSS masked scan or jitted forest walk, per ``index=``)."""
         q = self._prep(user_embeddings)
         t0 = time.time()
-        hits, s = flat_index.bss_query_batched(
-            self.index, q, float(t), backend=self.backend
-        )
+        if self.index_kind == "forest":
+            hits, s = forest_range_search(
+                self.index, q, float(t), self.forest_mechanism,
+                backend=self.backend,
+            )
+        else:
+            hits, s = flat_index.bss_query_batched(
+                self.index, q, float(t), backend=self.backend
+            )
         self._account(len(q), s["dists_per_query"], t0)
         return hits
 
@@ -124,6 +159,12 @@ class RetrievalServer:
         kth-nearest-so-far distance tightening its pruning radius (see
         ``bss_knn_batched``).  ``t0_guess`` optionally seeds the radius
         (None = the engine's per-query scale-free estimate)."""
+        if self.index_kind == "forest":
+            raise NotImplementedError(
+                "top_k serving runs on the BSS engine (index='bss'); the "
+                "forest walker serves range queries — its radius-deepening "
+                "kNN reduction is ROADMAP work"
+            )
         q = self._prep(user_embeddings)
         t0 = time.time()
         idx, dists, s = flat_index.bss_knn_batched(

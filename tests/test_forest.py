@@ -1,0 +1,282 @@
+"""Oracle-equivalence tests for the device forest (array-encoded jitted
+batched walks) against the host numpy walks.
+
+The contract under test is the strongest the subsystem makes: for every
+tree variant, exclusion mechanism and backend, the walker returns the SAME
+result sets and the SAME per-query distance counts as the distance-counted
+host walk (``tree.range_search`` / ``lrt.range_search_monotone``).  The
+pallas backend runs in interpret mode off-TPU, exercising the real masked
+kernel wiring everywhere.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import lrt, tree
+from repro.core.exclusion import HILBERT, HYPERBOLIC
+from repro.data import metricsets
+from repro.forest import (
+    encode_monotone,
+    encode_tree,
+    forest_range_search,
+    monotone_range_search,
+)
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _kw(backend):
+    # interpret=True exercises the Pallas kernels off-TPU
+    return {"backend": backend, "interpret": True if backend == "pallas" else None}
+
+
+def _same_results(res, oracle):
+    return all(sorted(a) == sorted(b) for a, b in zip(res, oracle))
+
+
+@pytest.fixture(scope="module")
+def space():
+    data = metricsets.colors_surrogate(650, dim=16, seed=3)
+    db, q = metricsets.split_queries(data, 0.05, seed=4)
+    q = q[:12]
+    t = metricsets.calibrate_threshold("l2", db, 5e-3)
+    return db, q, t
+
+
+@pytest.fixture(scope="module")
+def tree_cache(space):
+    """Build + encode each variant once for the whole matrix."""
+    db, _, _ = space
+    cache = {}
+
+    def get(variant):
+        if variant not in cache:
+            tr = tree.build_tree(variant, "l2", db, seed=7)
+            cache[variant] = (tr, encode_tree(tr))
+        return cache[variant]
+
+    return get
+
+
+@pytest.fixture(scope="module")
+def oracle_cache(space, tree_cache):
+    db, q, t = space
+    cache = {}
+
+    def get(variant, mech):
+        if (variant, mech) not in cache:
+            tr, _ = tree_cache(variant)
+            cache[(variant, mech)] = tree.range_search(tr, q, t, mech)
+        return cache[(variant, mech)]
+
+    return get
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mech", [HYPERBOLIC, HILBERT])
+@pytest.mark.parametrize("variant", tree.TREE_VARIANTS)
+def test_forest_matches_numpy_walk(space, tree_cache, oracle_cache,
+                                   variant, mech, backend):
+    """Result sets AND per-query distance counts identical to the host walk
+    — all 12 variants x both mechanisms x both backends."""
+    db, q, t = space
+    _, enc = tree_cache(variant)
+    res_np, counter = oracle_cache(variant, mech)
+    res, stats = forest_range_search(enc, q, t, mech, **_kw(backend))
+    assert _same_results(res, res_np), (variant, mech, backend)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query), (
+        variant, mech, backend,
+    )
+
+
+@pytest.fixture(scope="module")
+def monotone_cache(space):
+    db, _, _ = space
+    cache = {}
+
+    def get(partition, select):
+        if (partition, select) not in cache:
+            tr = lrt.build_monotone_tree(partition, select, "l2", db, seed=5)
+            cache[(partition, select)] = (tr, encode_monotone(tr))
+        return cache[(partition, select)]
+
+    return get
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("select", ["rand", "far"])
+@pytest.mark.parametrize("partition", lrt.PARTITIONS)
+def test_monotone_forest_matches_numpy_walk(space, monotone_cache,
+                                            partition, select, backend):
+    db, q, t = space
+    tr, enc = monotone_cache(partition, select)
+    res_np, counter = lrt.range_search_monotone(tr, q, t, HILBERT)
+    res, stats = monotone_range_search(enc, q, t, HILBERT, **_kw(backend))
+    assert _same_results(res, res_np), (partition, select, backend)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_monotone_forest_hyperbolic_closer(space, monotone_cache, backend):
+    db, q, t = space
+    tr, enc = monotone_cache("closer", "far")
+    res_np, counter = lrt.range_search_monotone(tr, q, t, HYPERBOLIC)
+    res, stats = monotone_range_search(enc, q, t, HYPERBOLIC, **_kw(backend))
+    assert _same_results(res, res_np)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+def test_monotone_forest_rejects_hyperbolic_planar(space, monotone_cache):
+    db, q, t = space
+    _, enc = monotone_cache("lrt", "rand")
+    with pytest.raises(ValueError):
+        monotone_range_search(enc, q, t, HYPERBOLIC)
+
+
+def test_forest_rejects_unknown_mechanism(space, tree_cache):
+    db, q, t = space
+    _, enc = tree_cache("hpt_fft_fixed")
+    with pytest.raises(ValueError):
+        forest_range_search(enc, q, t, "euclid")
+
+
+# ------------------------------------------------------------- edge shapes
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("nq", [1, 5])
+def test_forest_non_multiple_frontier_widths(space, tree_cache,
+                                             oracle_cache, nq, backend):
+    """Query batches far from the 128-row tile width (and a corpus whose
+    per-level node counts don't divide the kernel block) — padding paths."""
+    db, q, t = space
+    _, enc = tree_cache("hpt_fft_log")
+    res_np, counter = tree.range_search(
+        tree_cache("hpt_fft_log")[0], q[:nq], t, HILBERT
+    )
+    res, stats = forest_range_search(enc, q[:nq], t, HILBERT, **_kw(backend))
+    assert _same_results(res, res_np)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+def test_forest_empty_query_batch(space, tree_cache):
+    db, q, t = space
+    _, enc = tree_cache("hpt_fft_log")
+    res, stats = forest_range_search(enc, q[:0], t, HILBERT, backend="jnp")
+    assert res == []
+    assert stats["per_query_dists"].shape == (0,)
+
+
+# -------------------------------------------------- degenerate geometries
+
+
+@pytest.fixture(scope="module")
+def duplicate_space():
+    """A corpus thick with exact duplicates: duplicate reference points at
+    inner nodes (ref_dists == 0), oversized fallback leaf buckets in the
+    monotone family — the PR 2 delta-floor regression surface."""
+    rng = np.random.default_rng(21)
+    locs = rng.random((30, 6))
+    db = np.concatenate([np.repeat(locs, 8, axis=0), rng.random((60, 6))])
+    q = rng.random((10, 6))
+    t = 0.25
+    truth = tree.exhaustive_search("l2", db, q, t)
+    return db, q, t, truth
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("mech", [HYPERBOLIC, HILBERT])
+@pytest.mark.parametrize("variant", ["hpt_fft_fixed", "sat_pure"])
+def test_forest_duplicate_refs_sound(duplicate_space, variant, mech, backend):
+    db, q, t, truth = duplicate_space
+    tr = tree.build_tree(variant, "l2", db, seed=5)
+    enc = encode_tree(tr)
+    res_np, counter = tree.range_search(tr, q, t, mech)
+    res, stats = forest_range_search(enc, q, t, mech, **_kw(backend))
+    assert _same_results(res, truth), (variant, mech, backend)
+    assert _same_results(res, res_np)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("partition", ["closer", "median_x", "lrt"])
+def test_monotone_forest_duplicate_pivots_sound(duplicate_space, partition,
+                                                backend):
+    """Duplicate pivot pairs force the degenerate leaf-bucket fallback at
+    build — buckets larger than leaf_cap, exercising the padded leaf table."""
+    db, q, t, truth = duplicate_space
+    tr = lrt.build_monotone_tree(partition, "far", "l2", db, seed=6)
+    enc = encode_monotone(tr)
+    res_np, counter = lrt.range_search_monotone(tr, q, t, HILBERT)
+    res, stats = monotone_range_search(enc, q, t, HILBERT, **_kw(backend))
+    assert _same_results(res, truth), (partition, backend)
+    assert _same_results(res, res_np)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+def test_forest_tiny_dataset_root_leaf():
+    """Datasets at/below leaf_cap produce the k==0 wrapper root (partition)
+    or a bare leaf root (monotone) — root-attached always-alive buckets."""
+    rng = np.random.default_rng(9)
+    db = rng.random((6, 4))
+    q = rng.random((3, 4))
+    t = 0.4
+    truth = tree.exhaustive_search("l2", db, q, t)
+    tr = tree.build_tree("hpt_random_fixed", "l2", db, seed=1)
+    res, stats = forest_range_search(encode_tree(tr), q, t, HILBERT,
+                                     backend="jnp")
+    assert _same_results(res, truth)
+    _, counter = tree.range_search(tr, q, t, HILBERT)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+    mtr = lrt.build_monotone_tree("closer", "far", "l2", db, seed=1)
+    mres, mstats = monotone_range_search(encode_monotone(mtr), q, t, HILBERT,
+                                         backend="jnp")
+    assert _same_results(mres, truth)
+    _, mcounter = lrt.range_search_monotone(mtr, q, t, HILBERT)
+    assert np.array_equal(mstats["per_query_dists"], mcounter.per_query)
+
+
+# ------------------------------------------------------- other supermetrics
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("metric", ["cosine", "jsd"])
+def test_forest_other_metrics(metric, backend):
+    """The walker is metric-dispatched: probability-space JSD rides its VPU
+    kernel on the pallas backend, cosine the jnp formula."""
+    rng = np.random.default_rng(8)
+    data = rng.random((500, 12)) + 1e-3
+    if metric == "jsd":
+        data /= data.sum(axis=1, keepdims=True)
+    db, q = data[:440], data[440:452]
+    t = metricsets.calibrate_threshold(metric, db, 5e-3)
+    tr = tree.build_tree("hpt_fft_log", metric, db, seed=11)
+    enc = encode_tree(tr)
+    res_np, counter = tree.range_search(tr, q, t, HILBERT)
+    res, stats = forest_range_search(enc, q, t, HILBERT, **_kw(backend))
+    assert _same_results(res, res_np), (metric, backend)
+    assert np.array_equal(stats["per_query_dists"], counter.per_query)
+
+
+# ------------------------------------------------------------ serving wire
+
+
+def test_retrieval_server_forest_backend():
+    from repro.serve.retrieval import RetrievalServer
+
+    rng = np.random.default_rng(13)
+    centres = rng.normal(size=(8, 24))
+    corpus = centres[rng.integers(0, 8, size=400)] + 0.15 * rng.normal(
+        size=(400, 24)
+    )
+    qs = corpus[:16] + 0.01 * rng.normal(size=(16, 24))
+    bss = RetrievalServer(corpus, metric="cosine", seed=3)
+    forest = RetrievalServer(corpus, metric="cosine", seed=3, index="forest")
+    t = 0.35
+    hits_bss = bss.range_by_distance(qs, t)
+    hits_f = forest.range_by_distance(qs, t)
+    assert all(set(a) == set(b) for a, b in zip(hits_f, hits_bss))
+    assert forest.stats.n_queries == 16
+    assert forest.stats.dists_per_query > 0
+    with pytest.raises(NotImplementedError):
+        forest.top_k(qs, 5)

@@ -171,3 +171,37 @@ def test_quantile_split_tree_exact():
                                      split_quantile=quant)
         res, _ = lrt.range_search_monotone(tr, q, t, "hilbert")
         assert all(sorted(a) == sorted(b) for a, b in zip(res, truth)), quant
+
+
+def test_tile_constants_env_override():
+    """REPRO_TILE_* env vars reshape the kernel tiling without a rebuild
+    (the ROADMAP autotuning knob).  ``tiles`` is import-light, so the
+    subprocess check is cheap; the in-process defaults are asserted too."""
+    import os
+    import subprocess
+    import sys
+
+    from repro.kernels import pairwise_dist, planar_exclusion, tiles
+
+    assert pairwise_dist.DEFAULT_BM == tiles.TILE_BQ
+    assert pairwise_dist.DEFAULT_BN == tiles.TILE_BLOCK
+    assert planar_exclusion.DEFAULT_BQ == tiles.TILE_BQ
+    assert planar_exclusion.DEFAULT_BB == tiles.TILE_BLOCK
+
+    env = dict(os.environ)
+    env.update({"REPRO_TILE_BQ": "64", "REPRO_TILE_BLOCK": "256",
+                "REPRO_TILE_KCHUNK": "32"})
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.kernels import tiles; "
+         "print(tiles.TILE_BQ, tiles.TILE_BLOCK, tiles.TILE_KCHUNK)"],
+        env=env, capture_output=True, text=True, check=True,
+    )
+    assert out.stdout.split() == ["64", "256", "32"]
+
+    env["REPRO_TILE_BQ"] = "not-a-number"
+    bad = subprocess.run(
+        [sys.executable, "-c", "import repro.kernels.tiles"],
+        env=env, capture_output=True, text=True,
+    )
+    assert bad.returncode != 0 and "REPRO_TILE_BQ" in bad.stderr

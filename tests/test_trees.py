@@ -205,3 +205,42 @@ def test_monotone_tree_duplicate_pivots_sound():
         tr = lrt.build_monotone_tree(partition, "far", "l2", db, seed=6)
         res, _ = lrt.range_search_monotone(tr, q, t, HILBERT)
         assert _same(res, truth), partition
+
+
+def test_projection_degenerate_plane_shared_collapse():
+    """The PR 2 fix, now in ONE place: both array namespaces of
+    ``projection.project`` collapse near-duplicate pivot planes
+    (delta < DEGENERATE_DELTA) to the sound ring bound (x=0, y=d1)."""
+    import jax.numpy as jnp
+
+    from repro.core import projection
+    from repro.core.constants import DEGENERATE_DELTA
+
+    d1 = np.array([0.3, 0.7, 1.1])
+    d2 = np.array([0.30000001, 0.69999999, 1.1])
+    tiny = DEGENERATE_DELTA / 10.0
+    for xp in (np, jnp):
+        x, y = projection.project(d1, d2, tiny, xp=xp)
+        assert np.allclose(np.asarray(x), 0.0)
+        assert np.allclose(np.asarray(y), d1, atol=1e-6)
+        # healthy planes are untouched by the guard
+        x2, _ = projection.project(d1, d1 + 0.2, 0.5, xp=xp)
+        assert np.all(np.abs(np.asarray(x2)) > 0.01)
+
+
+def test_monotone_near_duplicate_pivots_degenerate_fallback():
+    """Near-duplicate pivots (separation below DEGENERATE_DELTA but above
+    the old MIN_DELTA floor) must take the leaf-bucket fallback at build —
+    a plane whose query-side projection ring-collapses cannot carry a
+    linear split — and the search stays exact."""
+    rng = np.random.default_rng(33)
+    locs = rng.random((20, 5))
+    jitter = 1e-8 * rng.random((20, 5))  # ~1e-8 < DEGENERATE_DELTA apart
+    db = np.concatenate([locs, locs + jitter, rng.random((40, 5))])
+    q = rng.random((10, 5))
+    t = 0.2
+    truth = tree.exhaustive_search("l2", db, q, t)
+    for partition in ("closer", "median_x", "lrt"):
+        tr = lrt.build_monotone_tree(partition, "far", "l2", db, seed=6)
+        res, _ = lrt.range_search_monotone(tr, q, t, HILBERT)
+        assert _same(res, truth), partition
