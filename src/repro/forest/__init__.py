@@ -1,0 +1,26 @@
+"""Device forest: array-encoded, jitted batched walks for every hyperplane
+partition tree in the repo (paper §4 12-variant family + §5 monotone/LRT
+family).
+
+``encode`` flattens a built host tree into structure-of-arrays level tables;
+``walk`` runs the batched frontier-per-level range search on accelerator,
+returning result sets AND per-query distance counts identical to the numpy
+walks in ``core/tree.py`` / ``core/lrt.py``.
+"""
+
+from repro.forest.encode import (
+    EncodedForest,
+    EncodedMonotone,
+    encode_monotone,
+    encode_tree,
+)
+from repro.forest.walk import forest_range_search, monotone_range_search
+
+__all__ = [
+    "EncodedForest",
+    "EncodedMonotone",
+    "encode_tree",
+    "encode_monotone",
+    "forest_range_search",
+    "monotone_range_search",
+]

@@ -1,0 +1,482 @@
+"""Flatten host-built partition trees into device-resident node tables.
+
+The host trees (``core/tree.py``'s 12-variant n-ary family, ``core/lrt.py``'s
+monotone/LRT family) are pointer-chasing python structures — hostile to
+accelerators.  This module re-encodes a BUILT tree as structure-of-arrays
+**level tables**: all nodes of one depth side by side, padded to the level's
+max arity with validity masks, children expressed as gather indices into the
+next level's table.  The encoding is lossless w.r.t. the query geometry:
+
+  * per-node reference dataset indices + the build-time ref–ref distance
+    matrices, centre distances and cover radii (everything the exclusion
+    predicates in ``core/exclusion.py`` consume),
+  * child pointers: each level-``l+1`` node knows its (parent position,
+    parent slot) in level ``l`` — propagation is a pure gather, because a
+    tree child has exactly one parent,
+  * leaf buckets: one global member table padded to the max bucket size,
+    each leaf knowing the (level, position, slot) edge it hangs from; the
+    flattened leaf points double as a blocked corpus for the masked
+    pairwise kernels (rows padded to the kernel block size).
+
+The walk in ``forest/walk.py`` then runs level by level with static shapes —
+the whole query path jits.  Host numpy tables stay on the dataclass (cheap
+to pickle, feed the result assembly); the ``.device`` property mirrors them
+into jnp arrays once per encoding, exactly like ``BSSIndex.device``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lrt import MonotoneTree, _MNode
+from repro.core.tree import PartitionTree, _Node
+from repro.kernels.tiles import TILE_BLOCK
+
+__all__ = [
+    "EncodedForest",
+    "EncodedMonotone",
+    "encode_tree",
+    "encode_monotone",
+]
+
+
+# ---------------------------------------------------------------------------
+# device mirrors (pytrees of jnp arrays; all shape information is static)
+# ---------------------------------------------------------------------------
+
+
+class LevelDev(NamedTuple):
+    """One depth of an n-ary partition tree, padded to the level's max arity."""
+
+    ref_valid: jnp.ndarray     # (Na, kmax) bool — False at padded ref slots
+    n_refs: jnp.ndarray        # (Na,) int32 true arity (the distance count)
+    ref_dists: jnp.ndarray     # (Na, kmax, kmax) f32, 0 at padded slots
+    centre_dists: jnp.ndarray  # (Na, kmax) f32, NaN where absent
+    centre_on: jnp.ndarray     # (Na,) bool — centre witness usable at node
+    cover_r: jnp.ndarray       # (Na, kmax) f32
+    parent_pos: jnp.ndarray    # (Na,) int32 position in PREVIOUS level
+    parent_slot: jnp.ndarray   # (Na,) int32 ref slot in the parent
+    ref_data: jnp.ndarray      # (rows_pad, dim) f32 node-major gathered refs
+    node_of_row: jnp.ndarray   # (rows_pad,) int32 owning node, -1 in the tail
+    leaf_parent_pos: jnp.ndarray   # (n_leaves_l,) int32
+    leaf_parent_slot: jnp.ndarray  # (n_leaves_l,) int32
+
+
+class LeafDev(NamedTuple):
+    """Global leaf-bucket table shared by both walkers (ids grouped
+    root-attached first, then level by level — the walk relies on it)."""
+
+    leaf_len: jnp.ndarray    # (n_leaves,) int32 true bucket size
+    leaf_data: jnp.ndarray   # (rows_pad, dim) f32 leaf-major member vectors
+    leaf_valid: jnp.ndarray  # (rows_pad,) bool — False at pad slots/tail
+    leaf_of_row: jnp.ndarray  # (rows_pad,) int32 owning leaf, -1 in the tail
+
+
+class ForestDev(NamedTuple):
+    levels: tuple  # tuple[LevelDev, ...]
+    leaves: LeafDev
+
+
+class MLevelDev(NamedTuple):
+    """One depth of a monotone binary tree (one fresh pivot per node)."""
+
+    delta: jnp.ndarray        # (Na,) f32 d(p1, p2)
+    theta: jnp.ndarray        # (Na,) f32
+    h: jnp.ndarray            # (Na,) f32
+    nx: jnp.ndarray           # (Na,) f32
+    ny: jnp.ndarray           # (Na,) f32
+    split: jnp.ndarray        # (Na,) f32
+    parent_pos: jnp.ndarray   # (Na,) int32
+    parent_right: jnp.ndarray  # (Na,) bool — True if right child of parent
+    p2_data: jnp.ndarray      # (rows_pad, dim) f32 fresh-pivot vectors
+    p2_valid: jnp.ndarray     # (rows_pad,) bool — False in the padded tail
+    leaf_parent_pos: jnp.ndarray    # (n_leaves_l,) int32
+    leaf_parent_right: jnp.ndarray  # (n_leaves_l,) bool
+
+
+class MonotoneDev(NamedTuple):
+    root_p1_data: jnp.ndarray  # (1, dim) f32
+    levels: tuple  # tuple[MLevelDev, ...]
+    leaves: LeafDev
+
+
+# ---------------------------------------------------------------------------
+# host-side tables
+# ---------------------------------------------------------------------------
+
+
+def _pad_rows(a: np.ndarray, mult: int) -> np.ndarray:
+    rem = a.shape[0] % mult
+    if rem == 0:
+        return a
+    return np.concatenate(
+        [a, np.zeros((mult - rem,) + a.shape[1:], a.dtype)], axis=0
+    )
+
+
+def _leaf_pad_width(max_len: int) -> int:
+    """Bucket slot width: next power of two (lane-friendly) up to the kernel
+    block, then whole blocks — so a kernel block never straddles a partial
+    leaf in a way the row->leaf map can't express (the map is per-row, so
+    ANY width is correct; powers of two just keep the padding waste low)."""
+    if max_len <= 0:
+        return 1
+    width = 1 << (max_len - 1).bit_length()
+    if width > TILE_BLOCK:
+        width = -(-max_len // TILE_BLOCK) * TILE_BLOCK
+    return width
+
+
+@dataclasses.dataclass
+class _LeafTable:
+    """Host leaf tables + the flat member map used for result assembly."""
+
+    members: np.ndarray       # (n_leaves, leaf_pad) int64, -1 pad
+    lens: np.ndarray          # (n_leaves,) int32
+    member_of_row: np.ndarray  # (rows_pad,) int64 original id, -1 pad/tail
+    data: np.ndarray          # (rows_pad, dim) f32
+    valid: np.ndarray         # (rows_pad,) bool
+    leaf_of_row: np.ndarray   # (rows_pad,) int32
+
+    @property
+    def n_leaves(self) -> int:
+        return self.members.shape[0]
+
+
+def _build_leaf_table(leaves: list[np.ndarray], data32: np.ndarray) -> _LeafTable:
+    dim = data32.shape[1]
+    if leaves:
+        pad = _leaf_pad_width(max(len(lf) for lf in leaves))
+        members = np.full((len(leaves), pad), -1, dtype=np.int64)
+        for i, lf in enumerate(leaves):
+            members[i, : len(lf)] = lf
+    else:
+        members = np.zeros((0, 1), dtype=np.int64)
+    lens = (members >= 0).sum(axis=1).astype(np.int32)
+    flat = members.reshape(-1)
+    n_rows = flat.shape[0]
+    rows_pad = max(-(-max(n_rows, 1) // TILE_BLOCK) * TILE_BLOCK, TILE_BLOCK)
+    member_of_row = np.full(rows_pad, -1, dtype=np.int64)
+    member_of_row[:n_rows] = flat
+    leaf_of_row = np.full(rows_pad, -1, dtype=np.int32)
+    if members.shape[0]:
+        leaf_of_row[:n_rows] = np.repeat(
+            np.arange(members.shape[0], dtype=np.int32), members.shape[1]
+        )
+    valid = member_of_row >= 0
+    ldata = np.zeros((rows_pad, dim), np.float32)
+    ldata[valid] = data32[member_of_row[valid]]
+    return _LeafTable(members, lens, member_of_row, ldata, valid, leaf_of_row)
+
+
+@dataclasses.dataclass
+class _Level:
+    ref_idx: np.ndarray       # (Na, kmax) int64, -1 pad
+    ref_valid: np.ndarray
+    n_refs: np.ndarray
+    ref_dists: np.ndarray
+    centre_dists: np.ndarray
+    centre_on: np.ndarray
+    cover_r: np.ndarray
+    parent_pos: np.ndarray
+    parent_slot: np.ndarray
+    ref_data: np.ndarray
+    node_of_row: np.ndarray
+    leaf_parent_pos: np.ndarray
+    leaf_parent_slot: np.ndarray
+
+
+@dataclasses.dataclass
+class EncodedForest:
+    """Array encoding of a ``PartitionTree`` (any of the 12 variants)."""
+
+    variant: str
+    metric: str
+    n_points: int
+    levels: list[_Level]
+    leaf: _LeafTable
+    _device: ForestDev | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(lv.n_refs.shape[0] for lv in self.levels)
+
+    @property
+    def device(self) -> ForestDev:
+        if self._device is None:
+            self._device = ForestDev(
+                levels=tuple(
+                    LevelDev(
+                        ref_valid=jnp.asarray(lv.ref_valid),
+                        n_refs=jnp.asarray(lv.n_refs, jnp.int32),
+                        ref_dists=jnp.asarray(lv.ref_dists, jnp.float32),
+                        centre_dists=jnp.asarray(lv.centre_dists, jnp.float32),
+                        centre_on=jnp.asarray(lv.centre_on),
+                        cover_r=jnp.asarray(lv.cover_r, jnp.float32),
+                        parent_pos=jnp.asarray(lv.parent_pos, jnp.int32),
+                        parent_slot=jnp.asarray(lv.parent_slot, jnp.int32),
+                        ref_data=jnp.asarray(lv.ref_data, jnp.float32),
+                        node_of_row=jnp.asarray(lv.node_of_row, jnp.int32),
+                        leaf_parent_pos=jnp.asarray(lv.leaf_parent_pos, jnp.int32),
+                        leaf_parent_slot=jnp.asarray(
+                            lv.leaf_parent_slot, jnp.int32
+                        ),
+                    )
+                    for lv in self.levels
+                ),
+                leaves=_leaf_dev(self.leaf),
+            )
+        return self._device
+
+
+def _leaf_dev(leaf: _LeafTable) -> LeafDev:
+    return LeafDev(
+        leaf_len=jnp.asarray(leaf.lens, jnp.int32),
+        leaf_data=jnp.asarray(leaf.data, jnp.float32),
+        leaf_valid=jnp.asarray(leaf.valid),
+        leaf_of_row=jnp.asarray(leaf.leaf_of_row, jnp.int32),
+    )
+
+
+def encode_tree(tree: PartitionTree) -> EncodedForest:
+    """Breadth-first flatten of a built ``PartitionTree``.
+
+    Leaf ids are assigned root-attached first, then level by level in node
+    order — the walk concatenates its per-level leaf-survival gathers in
+    exactly that order."""
+    data32 = np.asarray(tree.data, np.float32)
+
+    # the degenerate k==0 wrapper (tiny-dataset root) evaluates no distances
+    # in the host walk — hoist its children so the table has no 0-ref rows
+    leaves: list[np.ndarray] = []
+    frontier: list[tuple[_Node, int, int]] = []  # (node, parent_pos, slot)
+
+    def _intake(child, parent_pos: int, slot: int, nxt, leaf_edges):
+        if child is None:
+            return
+        if isinstance(child, np.ndarray):
+            if len(child):
+                leaves.append(np.asarray(child, np.int64))
+                leaf_edges.append((parent_pos, slot))
+            return
+        nxt.append((child, parent_pos, slot))
+
+    root = tree.root
+    if len(root.ref_idx) == 0:
+        root_edges: list = []  # root-attached leaves are always alive
+        for ch in root.children:
+            _intake(ch, -1, -1, frontier, root_edges)
+    else:
+        frontier = [(root, -1, -1)]
+
+    levels: list[_Level] = []
+    while frontier:
+        nodes = [n for n, _, _ in frontier]
+        na = len(nodes)
+        kmax = max(len(n.ref_idx) for n in nodes)
+        ref_idx = np.full((na, kmax), -1, dtype=np.int64)
+        ref_dists = np.zeros((na, kmax, kmax), np.float32)
+        centre_dists = np.full((na, kmax), np.nan, np.float32)
+        cover_r = np.zeros((na, kmax), np.float32)
+        parent_pos = np.array([p for _, p, _ in frontier], dtype=np.int32)
+        parent_slot = np.array([s for _, _, s in frontier], dtype=np.int32)
+        centre_on = np.zeros(na, bool)
+        nxt: list[tuple[_Node, int, int]] = []
+        leaf_edges: list[tuple[int, int]] = []
+        for i, node in enumerate(nodes):
+            k = len(node.ref_idx)
+            ref_idx[i, :k] = node.ref_idx
+            ref_dists[i, :k, :k] = node.ref_dists
+            centre_dists[i, :k] = node.centre_dists
+            cover_r[i, :k] = node.cover_r
+            centre_on[i] = not np.any(np.isnan(node.centre_dists))
+            for j, child in enumerate(node.children):
+                _intake(child, i, j, nxt, leaf_edges)
+        ref_valid = ref_idx >= 0
+        rows = np.where(ref_valid, ref_idx, 0).reshape(-1)
+        ref_data = _pad_rows(
+            np.where(
+                ref_valid.reshape(-1, 1), data32[rows], np.float32(0.0)
+            ).astype(np.float32),
+            TILE_BLOCK,
+        )
+        node_of_row = np.full(ref_data.shape[0], -1, dtype=np.int32)
+        node_of_row[: na * kmax] = np.repeat(
+            np.arange(na, dtype=np.int32), kmax
+        )
+        levels.append(
+            _Level(
+                ref_idx=ref_idx,
+                ref_valid=ref_valid,
+                n_refs=ref_valid.sum(axis=1).astype(np.int32),
+                ref_dists=ref_dists,
+                centre_dists=centre_dists,
+                centre_on=centre_on,
+                cover_r=cover_r,
+                parent_pos=parent_pos,
+                parent_slot=parent_slot,
+                ref_data=ref_data,
+                node_of_row=node_of_row,
+                leaf_parent_pos=np.array(
+                    [p for p, _ in leaf_edges], dtype=np.int32
+                ),
+                leaf_parent_slot=np.array(
+                    [s for _, s in leaf_edges], dtype=np.int32
+                ),
+            )
+        )
+        frontier = nxt
+
+    return EncodedForest(
+        variant=tree.variant,
+        metric=tree.metric,
+        n_points=int(tree.data.shape[0]),
+        levels=levels,
+        leaf=_build_leaf_table(leaves, data32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# monotone family
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _MLevel:
+    p2_idx: np.ndarray        # (Na,) int64
+    delta: np.ndarray
+    theta: np.ndarray
+    h: np.ndarray
+    nx: np.ndarray
+    ny: np.ndarray
+    split: np.ndarray
+    parent_pos: np.ndarray
+    parent_right: np.ndarray
+    p2_data: np.ndarray
+    p2_valid: np.ndarray
+    leaf_parent_pos: np.ndarray
+    leaf_parent_right: np.ndarray
+
+
+@dataclasses.dataclass
+class EncodedMonotone:
+    """Array encoding of a ``MonotoneTree`` (closer/median/pca/lrt splits)."""
+
+    partition: str
+    select: str
+    metric: str
+    n_points: int
+    root_p1: int
+    root_p1_data: np.ndarray  # (1, dim) f32
+    levels: list[_MLevel]
+    leaf: _LeafTable
+    _device: MonotoneDev | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(lv.delta.shape[0] for lv in self.levels)
+
+    @property
+    def device(self) -> MonotoneDev:
+        if self._device is None:
+            self._device = MonotoneDev(
+                root_p1_data=jnp.asarray(self.root_p1_data, jnp.float32),
+                levels=tuple(
+                    MLevelDev(
+                        delta=jnp.asarray(lv.delta, jnp.float32),
+                        theta=jnp.asarray(lv.theta, jnp.float32),
+                        h=jnp.asarray(lv.h, jnp.float32),
+                        nx=jnp.asarray(lv.nx, jnp.float32),
+                        ny=jnp.asarray(lv.ny, jnp.float32),
+                        split=jnp.asarray(lv.split, jnp.float32),
+                        parent_pos=jnp.asarray(lv.parent_pos, jnp.int32),
+                        parent_right=jnp.asarray(lv.parent_right),
+                        p2_data=jnp.asarray(lv.p2_data, jnp.float32),
+                        p2_valid=jnp.asarray(lv.p2_valid),
+                        leaf_parent_pos=jnp.asarray(lv.leaf_parent_pos, jnp.int32),
+                        leaf_parent_right=jnp.asarray(lv.leaf_parent_right),
+                    )
+                    for lv in self.levels
+                ),
+                leaves=_leaf_dev(self.leaf),
+            )
+        return self._device
+
+
+def encode_monotone(tree: MonotoneTree) -> EncodedMonotone:
+    """Breadth-first flatten of a built ``MonotoneTree``.  Each node carries
+    one fresh pivot; the inherited pivot's identity is implicit in the
+    parent edge (left inherits the parent's p1-side distance, right the
+    fresh p2's), which is all the walk needs."""
+    data32 = np.asarray(tree.data, np.float32)
+
+    leaves: list[np.ndarray] = []
+    frontier: list[tuple[_MNode, int, bool]] = []
+
+    def _intake(child, parent_pos: int, right: bool, nxt, leaf_edges):
+        if child is None:
+            return
+        if isinstance(child, np.ndarray):
+            if len(child):
+                leaves.append(np.asarray(child, np.int64))
+                leaf_edges.append((parent_pos, right))
+            return
+        nxt.append((child, parent_pos, right))
+
+    root_edges: list = []
+    _intake(tree.root, -1, False, frontier, root_edges)
+
+    levels: list[_MLevel] = []
+    while frontier:
+        nodes = [n for n, _, _ in frontier]
+        na = len(nodes)
+        p2_idx = np.array([n.p2 for n in nodes], dtype=np.int64)
+        p2_data = _pad_rows(data32[p2_idx], TILE_BLOCK)
+        p2_valid = np.zeros(p2_data.shape[0], bool)
+        p2_valid[:na] = True
+        nxt: list[tuple[_MNode, int, bool]] = []
+        leaf_edges: list[tuple[int, bool]] = []
+        for i, node in enumerate(nodes):
+            _intake(node.left, i, False, nxt, leaf_edges)
+            _intake(node.right, i, True, nxt, leaf_edges)
+        levels.append(
+            _MLevel(
+                p2_idx=p2_idx,
+                delta=np.array([n.delta for n in nodes], np.float32),
+                theta=np.array([n.theta for n in nodes], np.float32),
+                h=np.array([n.h for n in nodes], np.float32),
+                nx=np.array([n.nx for n in nodes], np.float32),
+                ny=np.array([n.ny for n in nodes], np.float32),
+                split=np.array([n.split for n in nodes], np.float32),
+                parent_pos=np.array([p for _, p, _ in frontier], np.int32),
+                parent_right=np.array([r for _, _, r in frontier], bool),
+                p2_data=p2_data,
+                p2_valid=p2_valid,
+                leaf_parent_pos=np.array(
+                    [p for p, _ in leaf_edges], dtype=np.int32
+                ),
+                leaf_parent_right=np.array(
+                    [r for _, r in leaf_edges], dtype=bool
+                ),
+            )
+        )
+        frontier = nxt
+
+    return EncodedMonotone(
+        partition=tree.partition,
+        select=tree.select,
+        metric=tree.metric,
+        n_points=int(tree.data.shape[0]),
+        root_p1=int(tree.root_p1),
+        root_p1_data=data32[tree.root_p1][None, :],
+        levels=levels,
+        leaf=_build_leaf_table(leaves, data32),
+    )

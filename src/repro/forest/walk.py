@@ -1,0 +1,403 @@
+"""Jitted frontier-per-level batched range search over encoded forests.
+
+The host walks in ``core/tree.py`` / ``core/lrt.py`` pop one (node, active
+query subset) at a time.  This walker processes a whole LEVEL at once: the
+frontier is a dense (query x node-at-level) survival matrix, each level is
+
+    one metric-dispatched distance evaluation for every active
+    (query, frontier node) pair            -> reference/pivot hits
+    masked exclusion predicates            -> per-child survival
+    one gather                             -> the next level's frontier
+
+and surviving leaf buckets accumulate into a (query x leaf) candidate
+matrix checked by one masked exact phase at the end.  Every shape is static
+per tree, so the whole query path is ONE jitted call — no per-node host
+callbacks anywhere.
+
+Backends mirror the BSS engine: ``pallas`` routes the level distance
+evaluations and the leaf exact phase through the masked Pallas kernel family
+(``masked_pairwise_kernel_call`` — dead (query-tile x block) cells are
+skipped on the hardware), ``jnp`` computes the same dense shapes through
+XLA; ``auto`` picks per ``jax.default_backend()``.  Exclusion geometry is
+the SAME numpy/jnp-generic predicates of ``core/exclusion.py`` that the
+host walks consume — the forest walker is their third consumer, not a
+fourth copy.
+
+Distance accounting is analytic and exact: a query is charged ``k`` at
+every (query, node) frontier cell it keeps alive and ``len(bucket)`` per
+surviving leaf — precisely what ``DistanceCounter`` tallies in the host
+walk.  The *hardware* may evaluate more (a survived tile computes all its
+cells; that is the point of the dense engine), but the paper's figure of
+merit counts the walk's own decisions, identically to the oracle.  Result
+sets and per-query counts therefore match the host walks bit-for-bit
+whenever float32 and float64 agree on every predicate — the same contract
+``bss_query_batched`` has with its oracle.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exclusion, projection
+from repro.core.distances import get_metric
+from repro.core.exclusion import HILBERT, HYPERBOLIC
+from repro.core.backends import resolve_backend, tile_survival
+from repro.forest.encode import (
+    EncodedForest,
+    EncodedMonotone,
+    ForestDev,
+    LeafDev,
+    MonotoneDev,
+)
+from repro.kernels.pairwise_dist import (
+    KERNEL_METRICS,
+    masked_pairwise_kernel_call,
+)
+from repro.kernels.tiles import TILE_BLOCK, TILE_BQ
+
+__all__ = ["forest_range_search", "monotone_range_search"]
+
+
+# ---------------------------------------------------------------------------
+# shared masked distance plumbing
+# ---------------------------------------------------------------------------
+
+
+def _owner_alive(alive: jnp.ndarray, owner_of_row: jnp.ndarray) -> jnp.ndarray:
+    """(Q, n_owners) survival -> (Q, rows) per-row survival through an
+    owner-of-row map (-1 rows, i.e. padding, are never alive)."""
+    n_owners = alive.shape[1]
+    safe = jnp.clip(owner_of_row, 0, max(n_owners - 1, 0))
+    return jnp.where(owner_of_row[None, :] >= 0, alive[:, safe], False)
+
+
+def _masked_dists(
+    metric_name: str,
+    queries: jnp.ndarray,
+    rows_data: jnp.ndarray,
+    row_alive: jnp.ndarray,
+    *,
+    backend: str,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    """(Q, rows) metric distances; on the pallas backend dead
+    (query-tile x block) cells are skipped by the masked kernel (and come
+    back +inf), on jnp the dense pass runs through XLA.  Callers must mask
+    out rows they did not ask for — values there are garbage-or-inf."""
+    if backend == "pallas" and metric_name in KERNEL_METRICS:
+        block_alive = row_alive.reshape(
+            row_alive.shape[0], -1, TILE_BLOCK
+        ).any(axis=2)
+        tile_mask = tile_survival(block_alive, TILE_BQ)
+        return masked_pairwise_kernel_call(
+            metric_name, queries, rows_data, tile_mask,
+            bm=TILE_BQ, bn=TILE_BLOCK, interpret=interpret,
+        )
+    return get_metric(metric_name).pairwise(queries, rows_data)
+
+
+def _leaf_exact(
+    metric_name: str,
+    queries: jnp.ndarray,
+    leaves: LeafDev,
+    leaf_alive: jnp.ndarray,
+    t: jnp.ndarray,
+    *,
+    backend: str,
+    interpret: bool | None,
+) -> jnp.ndarray:
+    """(Q, leaf_rows) hit bitmask of the final exact-check phase."""
+    nq = queries.shape[0]
+    if leaf_alive.shape[1] == 0:
+        return jnp.zeros((nq, leaves.leaf_data.shape[0]), bool)
+    row_alive = _owner_alive(leaf_alive, leaves.leaf_of_row)
+    d = _masked_dists(
+        metric_name, queries, leaves.leaf_data, row_alive,
+        backend=backend, interpret=interpret,
+    )
+    return (d <= t) & leaves.leaf_valid[None, :] & row_alive
+
+
+def _count_alive(alive: jnp.ndarray, weight: jnp.ndarray) -> jnp.ndarray:
+    """Per-query distance-evaluation charge: sum of ``weight`` over the
+    query's alive cells (int32 — the host counter's integers exactly)."""
+    return jnp.sum(
+        jnp.where(alive, weight[None, :].astype(jnp.int32), 0), axis=1
+    )
+
+
+def _n_root_leaves(dev) -> int:
+    """Leaf buckets hanging directly off the root (always alive for every
+    query).  Encode assigns leaf ids root-attached first, then level by
+    level — so they are exactly the ids no per-level edge table claims."""
+    return dev.leaves.leaf_len.shape[0] - sum(
+        lv.leaf_parent_pos.shape[0] for lv in dev.levels
+    )
+
+
+# ---------------------------------------------------------------------------
+# n-ary partition-tree walker (all 12 variants)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "mechanism", "backend", "interpret"),
+)
+def _forest_walk_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    t: jnp.ndarray,
+    dev: ForestDev,
+    *,
+    mechanism: str,
+    backend: str,
+    interpret: bool | None,
+):
+    """Returns (per-level ref-hit bitmasks, leaf-row hit bitmask, counts)."""
+    nq = queries.shape[0]
+    counts = jnp.zeros((nq,), jnp.int32)
+    ref_hits = []
+    leaf_alive_parts = [jnp.ones((nq, _n_root_leaves(dev)), bool)]
+
+    alive = None  # (nq, Na_l) frontier; level 0 is fully active
+    dcent = None  # (nq, Na_l) inherited centre distance (NaN at the root)
+    for li, lv in enumerate(dev.levels):
+        na, kmax = lv.ref_valid.shape
+        if li == 0:
+            alive = jnp.ones((nq, na), bool)
+            dcent = jnp.full((nq, na), jnp.nan, jnp.float32)
+        counts = counts + _count_alive(alive, lv.n_refs)
+        row_alive = _owner_alive(alive, lv.node_of_row)
+        d = _masked_dists(
+            metric_name, queries, lv.ref_data, row_alive,
+            backend=backend, interpret=interpret,
+        )
+        dq = d[:, : na * kmax].reshape(nq, na, kmax)
+        dq = jnp.where(lv.ref_valid[None], dq, jnp.inf)  # pad slots inert
+        ref_hits.append(alive[:, :, None] & lv.ref_valid[None] & (dq <= t))
+        excl = exclusion.cover_radius_exclusion_mask(
+            dq, lv.cover_r[None], t, xp=jnp
+        )
+        excl |= exclusion.hyperplane_exclusion_mask(
+            dq, lv.ref_dists, t, mechanism, xp=jnp
+        )
+        # SAT centre witness where the node has one AND the walk carried the
+        # centre distance down (NaN dcent at the root compares False)
+        excl |= (
+            exclusion.centre_witness_exclusion_mask(
+                dq, dcent, lv.centre_dists, t, mechanism, xp=jnp
+            )
+            & lv.centre_on[None, :, None]
+        )
+        keep = alive[:, :, None] & lv.ref_valid[None] & ~excl
+        if lv.leaf_parent_pos.shape[0]:
+            leaf_alive_parts.append(
+                keep[:, lv.leaf_parent_pos, lv.leaf_parent_slot]
+            )
+        if li + 1 < len(dev.levels):
+            nxt = dev.levels[li + 1]
+            alive = keep[:, nxt.parent_pos, nxt.parent_slot]
+            dcent = dq[:, nxt.parent_pos, nxt.parent_slot]
+
+    leaf_alive = jnp.concatenate(leaf_alive_parts, axis=1)
+    counts = counts + _count_alive(leaf_alive, dev.leaves.leaf_len)
+    leaf_hit = _leaf_exact(
+        metric_name, queries, dev.leaves, leaf_alive, t,
+        backend=backend, interpret=interpret,
+    )
+    return tuple(ref_hits), leaf_hit, counts
+
+
+def forest_range_search(
+    forest: EncodedForest,
+    queries: np.ndarray,
+    t: float,
+    mechanism: str = HILBERT,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[list[list[int]], dict]:
+    """Batched exact range search over an encoded partition tree.
+
+    Returns (per-query hit lists of original dataset indices, stats).
+    ``stats["per_query_dists"]`` is the paper's figure of merit — identical
+    to ``DistanceCounter.per_query`` of the host ``tree.range_search``
+    whenever float32/float64 agree on every predicate."""
+    if mechanism not in (HILBERT, HYPERBOLIC):
+        raise ValueError(mechanism)
+    backend = resolve_backend(backend)
+    queries = np.asarray(queries, np.float32)
+    nq = queries.shape[0]
+    if nq == 0:
+        return [], _stats(forest, np.zeros(0, np.int64), backend)
+    ref_hits, leaf_hit, counts = _forest_walk_jit(
+        forest.metric,
+        jnp.asarray(queries),
+        jnp.float32(t),
+        forest.device,
+        mechanism=mechanism,
+        backend=backend,
+        interpret=interpret,
+    )
+    results: list[list[int]] = [[] for _ in range(nq)]
+    for lv, hit in zip(forest.levels, ref_hits):
+        q, n, s = np.nonzero(np.asarray(hit))
+        ids = lv.ref_idx[n, s]
+        for qi, rid in zip(q, ids):
+            results[qi].append(int(rid))
+    q, r = np.nonzero(np.asarray(leaf_hit))
+    ids = forest.leaf.member_of_row[r]
+    for qi, rid in zip(q, ids):
+        results[qi].append(int(rid))
+    return results, _stats(
+        forest, np.asarray(counts).astype(np.int64), backend
+    )
+
+
+def _stats(enc, per_query: np.ndarray, backend: str) -> dict:
+    return {
+        "per_query_dists": per_query,
+        "dists_per_query": float(per_query.mean()) if per_query.size else 0.0,
+        "n_levels": len(enc.levels),
+        "n_nodes": enc.n_nodes,
+        "n_leaves": enc.leaf.n_leaves,
+        "backend": backend,
+    }
+
+
+# ---------------------------------------------------------------------------
+# monotone binary walker (closer / median_x / median_y / pca / lrt)
+# ---------------------------------------------------------------------------
+
+
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "mechanism", "backend", "interpret"),
+)
+def _monotone_walk_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    t: jnp.ndarray,
+    dev: MonotoneDev,
+    *,
+    mechanism: str,
+    backend: str,
+    interpret: bool | None,
+):
+    """Returns (root hit, per-level p2-hit bitmasks, leaf-row hits, counts).
+
+    One NEW distance per (query, visited node) — the inherited pivot's
+    distance rides the frontier, exactly the Monotonous-Bisector-Tree
+    invariant the host walk exploits."""
+    nq = queries.shape[0]
+    metric = get_metric(metric_name)
+    d_root = metric.pairwise(queries, dev.root_p1_data)[:, 0]  # (nq,)
+    counts = jnp.ones((nq,), jnp.int32)  # everyone pays the root distance
+    root_hit = d_root <= t
+    p2_hits = []
+    leaf_alive_parts = [jnp.ones((nq, _n_root_leaves(dev)), bool)]
+
+    alive = None
+    dinh = None  # (nq, Na_l) inherited-pivot distance
+    for li, lv in enumerate(dev.levels):
+        na = lv.delta.shape[0]
+        if li == 0:
+            alive = jnp.ones((nq, na), bool)
+            dinh = jnp.broadcast_to(d_root[:, None], (nq, na))
+        counts = counts + jnp.sum(alive, axis=1, dtype=jnp.int32)
+        row_alive = _owner_alive(
+            alive,
+            jnp.where(
+                lv.p2_valid, jnp.arange(lv.p2_valid.shape[0], dtype=jnp.int32),
+                -1,
+            ),
+        )
+        d = _masked_dists(
+            metric_name, queries, lv.p2_data, row_alive,
+            backend=backend, interpret=interpret,
+        )
+        d2 = d[:, :na]
+        d1 = dinh
+        p2_hits.append(alive & (d2 <= t))
+        if mechanism == HYPERBOLIC:
+            margin = exclusion.hyperbolic_margin(d1, d2, xp=jnp)
+        else:
+            x, y = projection.project(d1, d2, lv.delta[None, :], xp=jnp)
+            margin = exclusion.planar_margin(
+                x, y, lv.theta[None, :], lv.h[None, :],
+                lv.nx[None, :], lv.ny[None, :], lv.split[None, :], xp=jnp,
+            )
+        keep_l = alive & (margin < t)    # cannot exclude left unless m >= t
+        keep_r = alive & (margin > -t)
+        if lv.leaf_parent_pos.shape[0]:
+            pos, right = lv.leaf_parent_pos, lv.leaf_parent_right
+            leaf_alive_parts.append(
+                jnp.where(right[None, :], keep_r[:, pos], keep_l[:, pos])
+            )
+        if li + 1 < len(dev.levels):
+            nxt = dev.levels[li + 1]
+            pos, right = nxt.parent_pos, nxt.parent_right
+            alive = jnp.where(right[None, :], keep_r[:, pos], keep_l[:, pos])
+            dinh = jnp.where(right[None, :], d2[:, pos], d1[:, pos])
+
+    leaf_alive = jnp.concatenate(leaf_alive_parts, axis=1)
+    counts = counts + _count_alive(leaf_alive, dev.leaves.leaf_len)
+    leaf_hit = _leaf_exact(
+        metric_name, queries, dev.leaves, leaf_alive, t,
+        backend=backend, interpret=interpret,
+    )
+    return root_hit, tuple(p2_hits), leaf_hit, counts
+
+
+def monotone_range_search(
+    forest: EncodedMonotone,
+    queries: np.ndarray,
+    t: float,
+    mechanism: str = HILBERT,
+    *,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[list[list[int]], dict]:
+    """Batched exact range search over an encoded monotone tree; counterpart
+    of ``lrt.range_search_monotone`` with the same mechanism restriction
+    (Hyperbolic is only sound for the 'closer' split)."""
+    if mechanism == HYPERBOLIC and forest.partition != "closer":
+        raise ValueError(
+            "hyperbolic exclusion is only sound for the 'closer' split"
+        )
+    if mechanism not in (HILBERT, HYPERBOLIC):
+        raise ValueError(mechanism)
+    backend = resolve_backend(backend)
+    queries = np.asarray(queries, np.float32)
+    nq = queries.shape[0]
+    if nq == 0:
+        return [], _stats(forest, np.zeros(0, np.int64), backend)
+    root_hit, p2_hits, leaf_hit, counts = _monotone_walk_jit(
+        forest.metric,
+        jnp.asarray(queries),
+        jnp.float32(t),
+        forest.device,
+        mechanism=mechanism,
+        backend=backend,
+        interpret=interpret,
+    )
+    results: list[list[int]] = [[] for _ in range(nq)]
+    for qi in np.nonzero(np.asarray(root_hit))[0]:
+        results[qi].append(forest.root_p1)
+    for lv, hit in zip(forest.levels, p2_hits):
+        q, n = np.nonzero(np.asarray(hit))
+        ids = lv.p2_idx[n]
+        for qi, rid in zip(q, ids):
+            results[qi].append(int(rid))
+    q, r = np.nonzero(np.asarray(leaf_hit))
+    ids = forest.leaf.member_of_row[r]
+    for qi, rid in zip(q, ids):
+        results[qi].append(int(rid))
+    return results, _stats(
+        forest, np.asarray(counts).astype(np.int64), backend
+    )
