@@ -20,12 +20,13 @@ trajectory.
 
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
 
-from benchmarks.paper_common import FULL, load_space, row, timed
+from benchmarks.paper_common import (
+    FULL, load_space, row, timed, write_bench_json,
+)
 from repro.core import flat_index, tree
 from repro.core.npdist import pairwise_np
 from repro.data import metricsets
@@ -257,16 +258,13 @@ def main() -> None:
         rows, results = run_all_metrics(seed=args.seed)
         for r in rows:
             print(r, flush=True)
-        payload = {
+        write_bench_json(args.out, {
             "bench": "bss_metrics",
             "seed": args.seed,
             "wall_s": round(time.time() - t0, 1),
             "full": FULL,
             "metrics": results,
-        }
-        with open(args.out, "w") as fh:
-            json.dump(payload, fh, indent=2)
-        print(f"# wrote {args.out}", flush=True)
+        })
     else:
         for r in run(seed=args.seed):
             print(r, flush=True)

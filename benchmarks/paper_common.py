@@ -8,6 +8,7 @@ at two scales in tests/test_paper_claims.py).
 
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -54,3 +55,27 @@ def forest_search(search_fn, enc, q, t, mech):
 
 def row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def device_stamp() -> dict:
+    """Device-environment fields stamped into every BENCH_*.json record:
+    the archived perf trajectory mixes single- and multi-device runs (the
+    sharded-matrix CI job simulates an 8-device host mesh), and rows are
+    only comparable within the same device regime."""
+    import jax
+
+    from repro.launch.simdevices import FORCE_FLAG
+
+    return {
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.local_device_count(),
+        "devices_simulated": FORCE_FLAG in os.environ.get("XLA_FLAGS", ""),
+    }
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Every benchmark's JSON artifact goes through here — one place that
+    stamps the device environment into the record."""
+    with open(path, "w") as fh:
+        json.dump({**device_stamp(), **payload}, fh, indent=2)
+    print(f"# wrote {path}", flush=True)

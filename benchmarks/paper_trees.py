@@ -26,12 +26,13 @@ artifact the CI forest-matrix job archives.
 
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
 
-from benchmarks.paper_common import FULL, forest_search, load_space, row, timed
+from benchmarks.paper_common import (
+    FULL, forest_search, load_space, row, timed, write_bench_json,
+)
 from repro.core import tree
 from repro.forest import encode_tree, forest_range_search
 
@@ -162,16 +163,13 @@ def main() -> None:
             if not vres[mech]["match"]
         ]
         if args.out:
-            payload = {
+            write_bench_json(args.out, {
                 "bench": "trees_forest",
                 "seed": args.seed,
                 "wall_s": round(time.time() - t0, 1),
                 "full": FULL,
                 "datasets": results,
-            }
-            with open(args.out, "w") as fh:
-                json.dump(payload, fh, indent=2)
-            print(f"# wrote {args.out}", flush=True)
+            })
         if mismatches:
             # the sweep IS the oracle-equivalence gate at benchmark scale —
             # a recorded divergence must fail the CI job, not just land in

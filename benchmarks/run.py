@@ -15,6 +15,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bss_engine,
+        bss_sharded,
         paper_lrt,
         paper_scatter,
         paper_trees,
@@ -32,6 +33,7 @@ def main() -> None:
         "unbalance": paper_unbalance.run,  # §6 future work, implemented
         "bss": bss_engine.run,            # beyond-paper TPU engine
         "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep
+        "bss_sharded": bss_sharded.run,   # multi-device mesh sweep
         "retrieval": retrieval_serving.run,  # serving integration
         "roofline": roofline.run,         # dry-run derived terms
     }

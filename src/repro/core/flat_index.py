@@ -91,6 +91,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core import projection
 from repro.core.backends import resolve_backend, tile_survival
@@ -161,7 +162,16 @@ class BSSIndex:
     deltas: np.ndarray        # (M,)
     boxes: np.ndarray         # (n_blocks, M, 4) = x_lo, x_hi, y_lo, y_hi
     block: int
+    # when set, device arrays are born with a NamedSharding over the mesh's
+    # data axes (corpus blocks partitioned, reference tables replicated) and
+    # the batched query paths route through the sharded engine
+    mesh: Mesh | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
     _device: BSSDeviceArrays | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _sharded: object | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
 
@@ -179,6 +189,12 @@ class BSSIndex:
 
     @property
     def device(self) -> BSSDeviceArrays:
+        """Device-resident mirror, built once.  With a mesh attached this is
+        the SHARDED mirror (block count padded to the shard count, arrays
+        placed with their NamedSharding at birth — never re-laid-out per
+        query); without one, plain single-device arrays."""
+        if self.mesh is not None:
+            return self.sharded().dev
         if self._device is None:
             self._device = BSSDeviceArrays(
                 data=jnp.asarray(self.data, jnp.float32),
@@ -189,6 +205,21 @@ class BSSIndex:
                 valid=jnp.asarray(self.valid),
             )
         return self._device
+
+    def sharded(self, mesh: Mesh | None = None):
+        """The :class:`~repro.parallel.shard_index.ShardedBSSIndex` view of
+        this index over ``mesh`` (default: the mesh given at build time),
+        cached per mesh."""
+        mesh = mesh if mesh is not None else self.mesh
+        if mesh is None:
+            raise ValueError(
+                "no mesh: pass one here or build with build_bss(mesh=...)"
+            )
+        if self._sharded is None or self._sharded.mesh is not mesh:
+            from repro.parallel.shard_index import ShardedBSSIndex
+
+            self._sharded = ShardedBSSIndex(self, mesh)
+        return self._sharded
 
 
 def _project_all(dp: np.ndarray, pairs: np.ndarray, deltas: np.ndarray):
@@ -210,7 +241,12 @@ def build_bss(
     n_pairs: int = 24,
     block: int = 128,
     seed: int = 0,
+    mesh: Mesh | None = None,
 ) -> BSSIndex:
+    """Build the blocked index (module docstring).  With ``mesh`` the device
+    mirror is born sharded over the mesh's data axes and the batched query
+    paths serve through the sharded engine (``repro.parallel.shard_index``);
+    the host arrays and the numpy oracle are unaffected."""
     metric = get_metric(metric_name)  # validates; registers power names
     if not metric.four_point:
         raise ValueError(
@@ -294,6 +330,7 @@ def build_bss(
         deltas=deltas,
         boxes=boxes,
         block=block,
+        mesh=mesh,
     )
 
 
@@ -654,7 +691,18 @@ def bss_query_batched(
     (query, block) cells are gathered (``_cells_exact_jit``); above it one
     dense per-query-masked pass wins (``_dense_hit_mask_jit``).  Either
     way only compact hits / a bitmask cross back to the host — never the
-    distance matrix."""
+    distance matrix.
+
+    A mesh-built index (``build_bss(mesh=...)``) serves through the sharded
+    engine — one shard-local fused pass per device, hit bitmasks
+    concatenated back in corpus order; results and stats are identical."""
+    if index.mesh is not None:
+        from repro.parallel.shard_index import sharded_query_batched
+
+        return sharded_query_batched(
+            index.sharded(), queries, t, bq=bq, backend=backend,
+            interpret=interpret,
+        )
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -872,7 +920,19 @@ def bss_knn_batched(
 
     Returns (indices (Q, k) original ids sorted by ascending distance — -1
     when the corpus holds fewer than k valid points, distances (Q, k), stats).
+
+    A mesh-built index (``build_bss(mesh=...)``) serves through the sharded
+    engine: per-shard rounds merged by all-gather + global top-k under the
+    same radius schedule — results and distance counts are identical.
     """
+    if index.mesh is not None:
+        from repro.parallel.shard_index import sharded_knn_batched
+
+        return sharded_knn_batched(
+            index.sharded(), queries, k, r0=r0, growth=growth,
+            max_rounds=max_rounds, bq=bq, backend=backend,
+            interpret=interpret,
+        )
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))

@@ -1,0 +1,30 @@
+"""Simulated multi-device host environments (one CPU process as a mesh).
+
+``--xla_force_host_platform_device_count`` must be set before jax first
+initialises, so anything that needs a simulated mesh spawns a subprocess
+with the flag in ``XLA_FLAGS``.  The env assembly lives HERE — one copy
+shared by the test shim (``tests/multidevice_shim.py``) and the sharded
+benchmark (``benchmarks/bss_sharded.py``): XLA rejects duplicate flags, so
+any forcing flag inherited from the caller's environment (e.g. the
+sharded-matrix CI job's own 8-device setting) must be replaced, not
+appended to.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+__all__ = ["FORCE_FLAG", "simulated_device_env"]
+
+
+def simulated_device_env(n_devices: int, base: dict | None = None) -> dict:
+    """A copy of ``base`` (default: ``os.environ``) whose ``XLA_FLAGS``
+    force ``n_devices`` simulated host devices, replacing any forcing flag
+    already present."""
+    env = dict(os.environ if base is None else base)
+    flags = re.sub(rf"{FORCE_FLAG}=\d+", "", env.get("XLA_FLAGS", ""))
+    env["XLA_FLAGS"] = " ".join([*flags.split(), f"{FORCE_FLAG}={n_devices}"])
+    return env

@@ -1,0 +1,435 @@
+"""Sharded BSS: the fused engine partitioned over a device mesh.
+
+``ShardedBSSIndex`` takes a built :class:`~repro.core.flat_index.BSSIndex`
+and partitions its corpus BLOCKS across the mesh's data axes — block-granular,
+so every shard is itself a valid blocked kernel corpus (block-aligned data
+rows, per-block boxes, per-slot validity).  Queries and the reference-point
+tables (pivots, pairs, deltas) are replicated; the shard-local arrays are
+born with a ``NamedSharding`` once, so repeated queries pay no per-call
+re-layout.
+
+Query paths (both run the EXISTING fused single-device code shard-local
+under ``shard_map`` — same kernels, same bound math, same masking):
+
+* ``sharded_query_batched`` — range search.  Each shard runs the fused pass
+  (planar lower bound -> tile survival -> masked exact phase) over its own
+  blocks and emits a per-shard hit BITMASK; the out-spec concatenates the
+  bitmasks back in corpus order, so host-side hit extraction is identical to
+  the single-device engine's.
+
+* ``sharded_knn_batched`` — radius-deepening kNN.  Every round each shard
+  computes its masked exact distances and a per-shard ``lax.top_k``; the
+  cross-device merge all-gathers the (distance, global position) candidate
+  lists and runs a second ``top_k`` over the concatenation.  The shrinking
+  radius stays GLOBAL (driven by the merged kth-nearest-so-far), so each
+  shard's planar exclusion remains sound — a shard never prunes a block some
+  other shard's candidates couldn't already beat.  The host driver mirrors
+  ``bss_knn_batched``'s radius schedule step for step, which is what makes
+  the per-query distance accounting identical to the single-device engine.
+
+Block-count padding: when ``n_blocks`` is not a multiple of the shard
+count, empty padding blocks are appended — zero data rows marked invalid,
+and boxes carrying the same (min=+big, max=-big) empty-box sentinel a
+fully-padded block would get in ``build_bss``, so their planar bound is
++inf and they are excluded at any finite radius.  All stats are reported
+over the REAL blocks only; results and per-query distance counts are
+asserted (tests, benchmarks) to be identical to the single-device fused
+engine and the numpy oracle.
+
+Tie-breaking note: ``lax.top_k`` prefers the earliest index on equal
+values.  The merge concatenates candidate lists shard-major (shard 0's
+candidates first, each list in ascending-position order for ties), so on
+equal distances the merged ``top_k`` selects the smallest global position —
+exactly the single-device ``top_k``'s choice.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.backends import resolve_backend, tile_survival
+from repro.core.flat_index import (
+    _DEFAULT_BQ,
+    _batched_stats,
+    _engine_metric,
+    _engine_queries,
+    _fused_lower_bounds,
+    _masked_exact_dists,
+    _valid_per_block,
+    BSSDeviceArrays,
+    BSSIndex,
+)
+from repro.parallel.sharding import dp_axes, named
+
+__all__ = [
+    "ShardedBSSIndex",
+    "shard_bss",
+    "sharded_query_batched",
+    "sharded_knn_batched",
+]
+
+# the empty-box sentinel build_bss uses for all-invalid slots: point_to_box
+# against (min=+big, max=-big) overflows to +inf in float32, so a padding
+# block is excluded by ANY finite radius
+_BIG = np.float32(3.4e38)
+
+
+class ShardedBSSIndex:
+    """Block-granular partition of a built ``BSSIndex`` over a device mesh.
+
+    The mesh must expose at least one data axis (``("data",)`` — or
+    ``("pod", "data")``, over whose product the blocks are partitioned).
+    Construction pads the block count up to a multiple of the shard count,
+    places the padded arrays with their ``NamedSharding`` once, and caches
+    the jitted ``shard_map`` callables per (path, metric, backend) key.
+    """
+
+    def __init__(self, index: BSSIndex, mesh: Mesh):
+        axes = dp_axes(mesh)
+        if not axes:
+            raise ValueError(
+                f"mesh {mesh.axis_names} has no data axis; the sharded BSS "
+                f"engine partitions corpus blocks over ('data',) (optionally "
+                f"('pod', 'data'))"
+            )
+        self.index = index
+        self.mesh = mesh
+        self.axes = axes
+        self.n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+
+        block = index.block
+        n_blocks = index.n_blocks
+        self.n_blocks_pad = -(-n_blocks // self.n_shards) * self.n_shards
+        pad_b = self.n_blocks_pad - n_blocks
+        dim = index.data.shape[1]
+        m = index.pairs.shape[0]
+        data = index.data
+        valid = index.valid
+        boxes = index.boxes
+        perm = index.perm
+        if pad_b:
+            data = np.concatenate(
+                [data, np.zeros((pad_b * block, dim), np.float32)]
+            )
+            valid = np.concatenate([valid, np.zeros(pad_b * block, bool)])
+            empty = np.tile(
+                np.array([_BIG, -_BIG, _BIG, -_BIG], np.float32),
+                (pad_b, m, 1),
+            )
+            boxes = np.concatenate([boxes, empty])
+            perm = np.concatenate(
+                [perm, np.full(pad_b * block, -1, np.int64)]
+            )
+        # original ids for the padded layout (padding slots are -1, exactly
+        # like the partial-block padding of the single-device layout)
+        self.perm = perm
+        self.n_pad = self.n_blocks_pad * block
+        self.rows_per_shard = self.n_pad // self.n_shards
+
+        put = lambda a, spec: jax.device_put(a, named(mesh, spec))  # noqa: E731
+        self.dev = BSSDeviceArrays(
+            data=put(jnp.asarray(data, jnp.float32), P(axes, None)),
+            pivots=put(jnp.asarray(index.pivots, jnp.float32), P()),
+            pairs=put(jnp.asarray(index.pairs, jnp.int32), P()),
+            deltas=put(jnp.asarray(index.deltas, jnp.float32), P()),
+            boxes=put(jnp.asarray(boxes, jnp.float32), P(axes, None, None)),
+            valid=put(jnp.asarray(valid), P(axes)),
+        )
+        self._fns: dict = {}
+
+    # ------------------------------------------------------------- callables
+
+    def _range_fn(self, metric: str, backend: str, bq: int, interpret):
+        key = ("range", metric, backend, bq, interpret)
+        if key not in self._fns:
+            axes, block = self.axes, self.index.block
+
+            def local(q, t, data_l, valid_l, boxes_l, pivots, pairs, deltas):
+                lb = _fused_lower_bounds(
+                    metric, q, pivots, pairs, deltas, boxes_l,
+                    backend=backend, bq=bq, interpret=interpret,
+                )
+                alive = lb <= t
+                tmask = tile_survival(alive, bq)
+                dist = _masked_exact_dists(
+                    metric, q, data_l, valid_l, tmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )
+                return dist <= t, alive, tmask
+
+            self._fns[key] = jax.jit(shard_map(
+                local, self.mesh,
+                in_specs=(
+                    P(), P(), P(axes, None), P(axes), P(axes, None, None),
+                    P(), P(), P(),
+                ),
+                out_specs=(P(None, axes), P(None, axes), P(None, axes)),
+                check_rep=False,
+            ))
+        return self._fns[key]
+
+    def _lb_fn(self, metric: str, backend: str, bq: int, interpret):
+        key = ("lb", metric, backend, bq, interpret)
+        if key not in self._fns:
+            axes = self.axes
+
+            def local(q, boxes_l, pivots, pairs, deltas):
+                return _fused_lower_bounds(
+                    metric, q, pivots, pairs, deltas, boxes_l,
+                    backend=backend, bq=bq, interpret=interpret,
+                )
+
+            self._fns[key] = jax.jit(shard_map(
+                local, self.mesh,
+                in_specs=(P(), P(axes, None, None), P(), P(), P()),
+                out_specs=P(None, axes),
+                check_rep=False,
+            ))
+        return self._fns[key]
+
+    def _knn_round_fn(self, metric: str, backend: str, bq: int, interpret,
+                      k: int):
+        key = ("knn", metric, backend, bq, interpret, k)
+        if key not in self._fns:
+            axes, block = self.axes, self.index.block
+            mesh, rows = self.mesh, self.rows_per_shard
+            # a shard can contribute at most min(k, rows) candidates of the
+            # true global top-k, so the per-shard top_k (and the all-gather)
+            # can stay that narrow even when k exceeds a shard's row count
+            k_local = min(k, rows)
+
+            def local(q, radii, lb_l, data_l, valid_l):
+                alive = lb_l <= radii[:, None]
+                tmask = tile_survival(alive, bq)
+                dist = _masked_exact_dists(
+                    metric, q, data_l, valid_l, tmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )  # (Q, rows), +inf where pruned/padding
+                neg, li = jax.lax.top_k(-dist, k_local)
+                # local -> global positions in the padded permuted layout
+                off = jnp.int32(0)
+                for a in axes:
+                    off = off * mesh.shape[a] + jax.lax.axis_index(a)
+                gi = li + off * rows
+                allneg = jax.lax.all_gather(neg, axes)  # (S, Q, k_local)
+                allidx = jax.lax.all_gather(gi, axes)
+                nq = q.shape[0]
+                allneg = jnp.moveaxis(allneg, 0, 1).reshape(nq, -1)
+                allidx = jnp.moveaxis(allidx, 0, 1).reshape(nq, -1)
+                neg2, sel = jax.lax.top_k(allneg, k)  # global k smallest
+                cand_idx = jnp.take_along_axis(allidx, sel, axis=1)
+                return cand_idx, -neg2, alive, tmask
+
+            self._fns[key] = jax.jit(shard_map(
+                local, self.mesh,
+                in_specs=(
+                    P(), P(), P(None, axes), P(axes, None), P(axes),
+                ),
+                out_specs=(
+                    P(None, None), P(None, None), P(None, axes),
+                    P(None, axes),
+                ),
+                check_rep=False,
+            ))
+        return self._fns[key]
+
+
+def shard_bss(index: BSSIndex, mesh: Mesh) -> ShardedBSSIndex:
+    """Partition a built index's blocks over the mesh (see class docs)."""
+    return ShardedBSSIndex(index, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Range search
+# ---------------------------------------------------------------------------
+
+
+def sharded_query_batched(
+    sidx: ShardedBSSIndex,
+    queries: np.ndarray,
+    t: float,
+    *,
+    bq: int = _DEFAULT_BQ,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[list[list[int]], dict]:
+    """Exact range search, one fused shard-local pass per device.
+
+    Hit lists (indices AND per-query order) and the distance accounting are
+    identical to ``bss_query_batched`` / the numpy oracle: the per-shard
+    planar bounds are the same elementwise math over a block slice, and the
+    concatenated hit bitmask is extracted exactly like the single-device
+    dense path's."""
+    backend = resolve_backend(backend)
+    index = sidx.index
+    metric_eng = _engine_metric(index.metric_name)
+    queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
+    nq = queries.shape[0]
+    if nq == 0:
+        empty = np.zeros((0, index.n_blocks), bool)
+        stats = _batched_stats(index, empty, empty)
+        stats["n_shards"] = sidx.n_shards
+        return [], stats
+    fn = sidx._range_fn(metric_eng, backend, bq, interpret)
+    hit, alive, tmask = fn(
+        jnp.asarray(queries), jnp.float32(t),
+        sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
+        sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
+    )
+    hit = np.asarray(hit)
+    qidx, pidx = np.nonzero(hit)  # row-major: ascending position per query
+    orig = sidx.perm[pidx]
+    counts = hit.sum(axis=1)
+    per_query = np.split(orig, np.cumsum(counts)[:-1])
+    results = [r.tolist() for r in per_query]
+    # padding-block columns are never alive (their bound is +inf); stats are
+    # reported over the REAL blocks so they compare 1:1 with the
+    # single-device engine and the oracle
+    alive = np.asarray(alive)[:, : index.n_blocks]
+    tmask = np.asarray(tmask)[:, : index.n_blocks]
+    stats = _batched_stats(index, alive, tmask)
+    stats["n_shards"] = sidx.n_shards
+    return results, stats
+
+
+# ---------------------------------------------------------------------------
+# kNN
+# ---------------------------------------------------------------------------
+
+
+def sharded_knn_batched(
+    sidx: ShardedBSSIndex,
+    queries: np.ndarray,
+    k: int,
+    *,
+    r0: float | None = None,
+    growth: float = 2.0,
+    max_rounds: int = 8,
+    bq: int = _DEFAULT_BQ,
+    backend: str = "auto",
+    interpret: bool | None = None,
+) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Exact batched kNN over the sharded index.
+
+    The host driver mirrors ``bss_knn_batched`` step for step — same initial
+    per-query radius (read off the sorted REAL-block bounds), same
+    tighten-and-widen schedule, same exhaustive fallback — so the per-round
+    alive sets over real blocks (and therefore the per-query distance
+    counts) are identical to the single-device engine's.  Only the round
+    body differs: each shard evaluates its own masked exact phase and a
+    per-shard ``top_k``, merged across the mesh by all-gather + global
+    ``top_k`` (see module docstring for the tie-break argument); the
+    shrinking radius is driven by the MERGED kth-nearest-so-far, keeping
+    per-shard exclusion globally sound."""
+    backend = resolve_backend(backend)
+    index = sidx.index
+    metric_eng = _engine_metric(index.metric_name)
+    queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
+    nq = queries.shape[0]
+    k = int(k)
+    if k <= 0:
+        raise ValueError(f"k must be positive, got {k}")
+    empty_stats = {
+        "rounds": 0, "pivot_dists_per_query": 0.0,
+        "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+        "tiles_computed": 0, "n_blocks": int(index.n_blocks),
+        "n_shards": sidx.n_shards,
+    }
+    if nq == 0:
+        return (
+            np.zeros((0, k), np.int64), np.zeros((0, k), np.float32),
+            dict(empty_stats),
+        )
+    k_run = min(k, index.n_valid)
+    if k_run == 0:
+        return (
+            np.full((nq, k), -1, np.int64),
+            np.full((nq, k), np.inf, np.float32),
+            dict(empty_stats),
+        )
+    qj = jnp.asarray(queries)
+    n_blocks = index.n_blocks
+
+    # radius-independent planar bounds, computed once shard-local and kept
+    # device-sharded for the rounds; the host copy (REAL columns only —
+    # padding bounds are +inf) drives the same initial-radius and widening
+    # schedule as the single-device engine
+    lb_dev = sidx._lb_fn(metric_eng, backend, bq, interpret)(
+        qj, sidx.dev.boxes, sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
+    )
+    lb_np = np.asarray(lb_dev)[:, :n_blocks]
+    lb_sorted = np.sort(lb_np, axis=1)
+    if r0 is None:
+        j0 = min(n_blocks - 1, max(0, math.ceil(2 * k / index.block) - 1))
+        radii = lb_sorted[:, j0].astype(np.float32)
+    else:
+        radii = np.full(nq, float(r0), np.float32)
+
+    round_fn = sidx._knn_round_fn(metric_eng, backend, bq, interpret, k_run)
+    valid_pb = _valid_per_block(index)
+    total_exact = np.zeros(nq, np.int64)
+    tiles_total = 0
+    done = np.zeros(nq, bool)
+    cand_idx = np.full((nq, k_run), 0, np.int64)
+    cand_dist = np.full((nq, k_run), np.inf, np.float32)
+    rounds = 0
+    for rounds in range(1, max_rounds + 2):
+        if rounds == max_rounds + 1:
+            radii = np.where(done, radii, np.inf).astype(np.float32)
+        ci, cd, alive, tmask = round_fn(
+            qj, jnp.asarray(radii), lb_dev, sidx.dev.data, sidx.dev.valid,
+        )
+        ci, cd = np.asarray(ci), np.asarray(cd)
+        # real-block columns only: identical to the single-device alive set
+        # (padding is only ever admitted by the radius=inf fallback round,
+        # where its zero valid points still contribute no distances)
+        alive = np.asarray(alive)[:, :n_blocks]
+        tiles_round = int(np.asarray(tmask)[:, :n_blocks].sum())
+        kth = cd[:, -1]
+        dn = np.isfinite(kth) & ((kth <= radii) | alive.all(axis=1))
+        upd = ~done  # freeze finished queries (their results are final)
+        cand_idx[upd] = ci[upd]
+        cand_dist[upd] = cd[upd]
+        total_exact[upd] += alive[upd].astype(np.int64) @ valid_pb
+        tiles_total += tiles_round
+        done = done | dn
+        if done.all():
+            break
+        # identical tighten-and-widen schedule to bss_knn_batched
+        n_alive = alive.sum(axis=1)
+        j_next = np.minimum(
+            n_blocks - 1,
+            np.maximum(np.maximum(2 * n_alive, n_alive + 1), 1),
+        )
+        widened = np.maximum(lb_sorted[np.arange(nq), j_next], radii * growth)
+        radii = np.where(
+            done, np.float32(-1.0),
+            np.where(np.isfinite(kth), np.minimum(kth, widened), widened),
+        ).astype(np.float32)
+        radii = np.where(
+            ~done & (n_alive > n_blocks // 2), np.float32(np.inf), radii
+        )
+
+    n_pivots = index.pivots.shape[0]
+    stats = {
+        "rounds": rounds,
+        "pivot_dists_per_query": float(n_pivots),
+        "exact_dists_per_query": float(total_exact.mean()),
+        "dists_per_query": float(n_pivots + total_exact.mean()),
+        "tiles_computed": tiles_total,
+        "n_blocks": int(n_blocks),
+        "n_shards": sidx.n_shards,
+    }
+    orig = np.where(np.isfinite(cand_dist), sidx.perm[cand_idx], -1)
+    if k_run < k:
+        orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)
+        cand_dist = np.pad(
+            cand_dist, ((0, 0), (0, k - k_run)), constant_values=np.inf
+        )
+    return orig, cand_dist, stats

@@ -81,9 +81,19 @@ class RetrievalServer:
                  n_pivots: int = 16, n_pairs: int = 24, block: int = 128,
                  seed: int = 0, backend: str = "auto", index: str = "bss",
                  forest_variant: str = "hpt_fft_log",
-                 forest_mechanism: str = HILBERT):
+                 forest_mechanism: str = HILBERT, mesh=None):
+        """``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis) shards
+        the BSS corpus blocks across the mesh's devices: every range / top_k
+        call then runs one fused pass per shard with a cross-device merge
+        (``repro.parallel.shard_index``), results identical to single-device
+        serving.  BSS only — the forest walker is not sharded yet."""
         if index not in ("bss", "forest"):
             raise ValueError(f"index must be bss|forest, got {index!r}")
+        if mesh is not None and index != "bss":
+            raise ValueError(
+                "mesh= shards the BSS engine; forest serving is single-device"
+                " (ROADMAP work)"
+            )
         corpus = np.array(corpus_embeddings, np.float32, copy=True)
         self.metric = metric
         if metric == "cosine":
@@ -106,7 +116,7 @@ class RetrievalServer:
         else:
             self.index = flat_index.build_bss(
                 metric, corpus, n_pivots=n_pivots, n_pairs=n_pairs,
-                block=block, seed=seed,
+                block=block, seed=seed, mesh=mesh,
             )
         self.stats = ServeStats()
 

@@ -1,0 +1,56 @@
+"""Shared subprocess harness for tests that need a simulated multi-device
+XLA host platform.
+
+``--xla_force_host_platform_device_count`` must be set before jax
+initialises, and the main pytest process must keep its launch-default
+device view (smoke tests expect a single device, per the dry-run
+contract) — so every multi-device scenario runs as ``python -c`` in a
+subprocess whose ``XLA_FLAGS`` THIS helper controls.  Scripts are
+prefixed with a probe that prints a sentinel and exits cleanly when the
+requested device count is unavailable (e.g. a non-CPU default platform
+ignores the forcing flag); the helper turns the sentinel into
+``pytest.skip``, so the tests degrade cleanly everywhere.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.simdevices import simulated_device_env
+
+_SENTINEL = "MULTIDEVICE_UNAVAILABLE"
+
+
+def preamble(n_devices: int) -> str:
+    """Script prefix: src on the path, jax imported, device-count probe."""
+    return textwrap.dedent(f"""\
+        import sys
+        sys.path.insert(0, "src")
+        import jax
+        if jax.local_device_count() < {n_devices}:
+            print("{_SENTINEL}", jax.local_device_count())
+            raise SystemExit(0)
+    """)
+
+
+def run_simulated_mesh(
+    script: str, n_devices: int, *argv: str, timeout: int = 600
+) -> subprocess.CompletedProcess:
+    """Run ``script`` in a subprocess under ``XLA_FLAGS`` forcing
+    ``n_devices`` simulated host devices (env assembly shared with the
+    sharded benchmark — see ``repro.launch.simdevices``).  Skips the
+    calling test when the devices can't be simulated; otherwise returns
+    the completed process for the caller's own assertions."""
+    env = simulated_device_env(n_devices)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         preamble(n_devices) + textwrap.dedent(script), *argv],
+        capture_output=True, text=True, timeout=timeout, cwd=".", env=env,
+    )
+    if _SENTINEL in out.stdout:
+        pytest.skip(f"cannot simulate {n_devices} XLA host devices")
+    return out

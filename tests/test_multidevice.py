@@ -1,18 +1,12 @@
 """Multi-device behaviours that need more than one XLA device: run in a
-subprocess with ``--xla_force_host_platform_device_count=4`` (kept OUT of
+subprocess on a simulated host mesh via ``multidevice_shim`` (kept OUT of
 this process — smoke tests must see 1 device, per the dry-run contract)."""
 
-import subprocess
-import sys
-import textwrap
-
 import pytest
+from multidevice_shim import run_simulated_mesh
 
-_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+_SCRIPT = """
     import sys
-    sys.path.insert(0, "src")
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -58,13 +52,10 @@ _SCRIPT = textwrap.dedent("""
         state, metrics = step(state, batch)
         assert np.isfinite(float(metrics["loss"]))
     print("MULTIDEVICE_OK")
-""")
+"""
 
 
 @pytest.mark.slow
 def test_elastic_reshard_and_sharded_step(tmp_path):
-    out = subprocess.run(
-        [sys.executable, "-c", _SCRIPT, str(tmp_path / "ckpt")],
-        capture_output=True, text=True, timeout=600, cwd=".",
-    )
+    out = run_simulated_mesh(_SCRIPT, 4, str(tmp_path / "ckpt"))
     assert "MULTIDEVICE_OK" in out.stdout, out.stdout + "\n" + out.stderr
