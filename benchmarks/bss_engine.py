@@ -20,7 +20,7 @@ trajectory.
 
 from __future__ import annotations
 
-import time
+from benchmarks.paper_common import now
 
 import numpy as np
 
@@ -254,14 +254,14 @@ def main() -> None:
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.all_metrics:
-        t0 = time.time()
+        t0 = now()
         rows, results = run_all_metrics(seed=args.seed)
         for r in rows:
             print(r, flush=True)
         write_bench_json(args.out, {
             "bench": "bss_metrics",
             "seed": args.seed,
-            "wall_s": round(time.time() - t0, 1),
+            "wall_s": round(now() - t0, 1),
             "full": FULL,
             "metrics": results,
         })

@@ -24,7 +24,7 @@ from __future__ import annotations
 import json
 import subprocess
 import sys
-import time
+from benchmarks.paper_common import now
 
 from repro.launch.simdevices import simulated_device_env
 
@@ -181,14 +181,14 @@ def main() -> None:
     from benchmarks.paper_common import FULL, write_bench_json
 
     print("name,us_per_call,derived")
-    t0 = time.time()
+    t0 = now()
     rows, results = _sweep(tuple(args.devices), args.seed)
     for r in rows:
         print(r, flush=True)
     write_bench_json(args.out, {
         "bench": "bss_sharded",
         "seed": args.seed,
-        "wall_s": round(time.time() - t0, 1),
+        "wall_s": round(now() - t0, 1),
         "full": FULL,
         "rows": rows,
         "sweep": results,

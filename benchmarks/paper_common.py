@@ -10,12 +10,17 @@ from __future__ import annotations
 
 import json
 import os
-import time
 
 import numpy as np
 
 from repro.core import tree
 from repro.data import metricsets
+
+# THE benchmark clock: monotonic time.perf_counter (wall-clock time.time
+# steps under NTP and has coarse resolution on some platforms).  One shared
+# helper — the serving stack keeps deadlines on the same clock, so import
+# it from there rather than growing a second copy.
+from repro.serve.queue import now
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -40,9 +45,9 @@ def load_space(name: str, seed: int = 0):
 
 
 def timed(fn, *args, **kw):
-    t0 = time.time()
+    t0 = now()
     out = fn(*args, **kw)
-    return out, time.time() - t0
+    return out, now() - t0
 
 
 def forest_search(search_fn, enc, q, t, mech):

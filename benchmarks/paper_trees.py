@@ -26,7 +26,7 @@ artifact the CI forest-matrix job archives.
 
 from __future__ import annotations
 
-import time
+from benchmarks.paper_common import now
 
 import numpy as np
 
@@ -147,7 +147,7 @@ def main() -> None:
                     help="write BENCH_trees.json (only with --backend both)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    t0 = time.time()
+    t0 = now()
     if args.backend == "both":
         rows, results = sweep_both(
             datasets=tuple(args.datasets), seed=args.seed,
@@ -166,7 +166,7 @@ def main() -> None:
             write_bench_json(args.out, {
                 "bench": "trees_forest",
                 "seed": args.seed,
-                "wall_s": round(time.time() - t0, 1),
+                "wall_s": round(now() - t0, 1),
                 "full": FULL,
                 "datasets": results,
             })
@@ -179,7 +179,7 @@ def main() -> None:
         for r in run(datasets=tuple(args.datasets), seed=args.seed,
                      backend=args.backend):
             print(r, flush=True)
-    print(f"# finished in {time.time() - t0:.1f}s", flush=True)
+    print(f"# finished in {now() - t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":

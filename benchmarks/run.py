@@ -9,7 +9,7 @@ engines.  Prints ``name,us_per_call,derived`` CSV (harness contract).
 from __future__ import annotations
 
 import sys
-import time
+from benchmarks.paper_common import now
 
 
 def main() -> None:
@@ -35,18 +35,19 @@ def main() -> None:
         "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep
         "bss_sharded": bss_sharded.run,   # multi-device mesh sweep
         "retrieval": retrieval_serving.run,  # serving integration
+        "retrieval_async": retrieval_serving.run_async,  # async front, Poisson
         "roofline": roofline.run,         # dry-run derived terms
     }
     pick = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")
     for name in pick:
-        t0 = time.time()
+        t0 = now()
         try:
             for r in suites[name]():
                 print(r, flush=True)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
-        print(f"# suite {name} finished in {time.time() - t0:.1f}s", flush=True)
+        print(f"# suite {name} finished in {now() - t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":

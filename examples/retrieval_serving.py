@@ -10,7 +10,6 @@ end-to-end example serves a small model with batched requests):
 """
 
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -20,6 +19,7 @@ from repro.configs.registry import get_arch
 from repro.core.npdist import pairwise_np
 from repro.data.pipeline import ClickStream
 from repro.optim import adamw
+from repro.serve.queue import now
 from repro.serve.retrieval import RetrievalServer
 from repro.train.loop import TrainLoop, TrainLoopConfig
 
@@ -59,9 +59,9 @@ def main() -> None:
     print(f"indexed {args.corpus} items in {server.index.n_blocks} blocks")
 
     # 4. serve
-    t0 = time.time()
+    t0 = now()
     top = server.top_k(users, args.k)
-    dt = time.time() - t0
+    dt = now() - t0
 
     # verify exactness on a subsample
     d = pairwise_np("l2", users[:16] / np.linalg.norm(users[:16], axis=1,

@@ -1,11 +1,19 @@
 """Shared plumbing of the batched query engines (BSS scan + device forest):
-backend selection and query-tile survival.
+backend selection, query-tile survival, and the serving front's shape
+buckets.
 
 Both engines tile their work as (query-tile x corpus-block) cells fed to the
 masked Pallas kernels on TPU (``backend="pallas"``) or an equivalent fused
 jnp graph elsewhere (``"jnp"``); ``"auto"`` picks per the jax default
-backend.  These two helpers are the contract between an engine's per-query
+backend.  These helpers are the contract between an engine's per-query
 survival logic and the kernels' tile granularity — one copy, two engines.
+
+The bucket ladder is the serving-side half of the same contract: the async
+front (``repro.serve.front``) pads every micro-batch up to one of a fixed
+ladder of query counts, so the jitted engines see at most ``len(buckets)``
+distinct batch shapes per (kind, metric) — recompiles are bounded by the
+ladder, not the traffic.  ``jit_cache_size`` is the observability hook the
+compile-guard tests (and the front's telemetry) count those lowerings with.
 """
 
 from __future__ import annotations
@@ -13,7 +21,43 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["resolve_backend", "tile_survival"]
+__all__ = [
+    "resolve_backend",
+    "tile_survival",
+    "DEFAULT_BUCKETS",
+    "bucket_for",
+    "jit_cache_size",
+]
+
+# default micro-batch shape ladder of the serving front: 8 covers trickle
+# traffic, 512 is past the point where the fused engines are
+# throughput-bound; ladders are always sorted ascending
+DEFAULT_BUCKETS = (8, 32, 128, 512)
+
+
+def bucket_for(n: int, buckets=DEFAULT_BUCKETS) -> int:
+    """Smallest bucket that fits ``n`` queries (``buckets`` ascending).
+    The caller pads its batch up to the returned size, so every jit sees
+    only ladder shapes."""
+    if n <= 0:
+        raise ValueError(f"need at least one query, got {n}")
+    for b in buckets:
+        if n <= b:
+            return int(b)
+    raise ValueError(
+        f"batch of {n} exceeds the largest bucket {buckets[-1]}; "
+        f"split it before dispatch"
+    )
+
+
+def jit_cache_size(fn) -> int:
+    """Number of distinct lowerings a ``jax.jit``-wrapped callable holds —
+    the compile count the shape-bucket guard bounds.  Returns -1 when the
+    jax version exposes no cache hook (callers should skip, not fail)."""
+    probe = getattr(fn, "_cache_size", None)
+    if probe is None:
+        return -1
+    return int(probe())
 
 
 def resolve_backend(backend: str) -> str:

@@ -383,18 +383,36 @@ def _exact_counts(index: BSSIndex, alive: np.ndarray) -> np.ndarray:
     return alive.astype(np.int64) @ _valid_per_block(index)
 
 
+def _per_query_t(t, nq: int) -> np.ndarray:
+    """Range thresholds as a (Q,) float32 vector: a scalar ``t`` broadcasts
+    to every query; a vector carries PER-QUERY radii (the serving front
+    mixes thresholds inside one micro-batch this way, and marks its padding
+    rows with a negative radius — the planar bound is >= 0, so such a row
+    survives no block, evaluates no distances and hits nothing)."""
+    t_arr = np.asarray(t, np.float32)
+    if t_arr.ndim == 0:
+        return np.full(nq, float(t_arr), np.float32)
+    if t_arr.shape != (nq,):
+        raise ValueError(
+            f"per-query t must have shape ({nq},), got {t_arr.shape}"
+        )
+    return t_arr
+
+
 def bss_query(
-    index: BSSIndex, queries: np.ndarray, t: float
+    index: BSSIndex, queries: np.ndarray, t
 ) -> tuple[list[list[int]], dict]:
     """Exact range search — the NUMPY ORACLE path (see module docstring).
 
+    ``t`` is a scalar threshold or a (Q,) vector of per-query radii.
     Returns per-query hit lists (original indices) and stats including the
     paper's figure of merit (distances/query: P pivot distances + the VALID
     points of each surviving block)."""
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
+    t_vec = _per_query_t(t, nq)
     lb = bss_lower_bounds(index, queries)  # (Q, B)
-    alive = lb <= t
+    alive = lb <= t_vec[:, None]
     results: list[list[int]] = [[] for _ in range(nq)]
     bsz = index.block
     data = index.data
@@ -403,7 +421,7 @@ def bss_query(
         qrows = np.nonzero(alive[:, b])[0]
         blk = data[b * bsz : (b + 1) * bsz]
         d = pairwise_np(index.metric_name, queries[qrows], blk)
-        hits = d <= t
+        hits = d <= t_vec[qrows][:, None]
         for r, qi in enumerate(qrows):
             for off in np.nonzero(hits[r])[0]:
                 orig = index.perm[b * bsz + off]
@@ -415,6 +433,7 @@ def bss_query(
         "pivot_dists_per_query": float(n_pivots),
         "exact_dists_per_query": float(exact.mean()),
         "dists_per_query": float(n_pivots + exact.mean()),
+        "per_query_dists": n_pivots + exact,
         "block_exclusion_rate": float(1.0 - alive.mean()),
         "n_blocks": int(index.n_blocks),
     }
@@ -547,14 +566,15 @@ def _cells_exact_jit(
     the masked Pallas kernel's tile skipping: only the C surviving
     (query, block) cells are gathered and evaluated, and hits leave the
     device as a fixed-capacity compact list instead of a dense (Q, N)
-    matrix.  Returns (hit_q (cap,), hit_pos (cap,), n_hits); entries past
-    n_hits are -1.  Row-major over (cell, offset) with cells sorted by
-    (query, block), so per-query hits come out in ascending position order —
-    the oracle's order."""
+    matrix.  ``t`` is the (Q,) per-query radius vector (each cell tests
+    against its own query's radius).  Returns (hit_q (cap,), hit_pos (cap,),
+    n_hits); entries past n_hits are -1.  Row-major over (cell, offset) with
+    cells sorted by (query, block), so per-query hits come out in ascending
+    position order — the oracle's order."""
     d, pvalid = _gather_cell_dists(
         metric_name, queries, data, valid, qidx, bidx, block
     )
-    hit = (d <= t) & pvalid & cell_valid[:, None]
+    hit = (d <= t[qidx][:, None]) & pvalid & cell_valid[:, None]
     flat = hit.reshape(-1)
     n_hits = jnp.sum(flat)
     (pos,) = jnp.nonzero(flat, size=cap, fill_value=-1)
@@ -592,19 +612,24 @@ def _dense_hit_mask_jit(
     the test runs in the squared domain rearranged as
     ``|p|^2 - 2 q.p <= t^2 - |q|^2`` (no sqrt, and the f32 distance matrix
     itself is never materialised as an output) — masked by the per-query
-    block survival.  Bools are 4x cheaper than the distances to move, and
-    position extraction is a single host ``np.nonzero`` over the mask
-    (XLA's sized ``nonzero`` costs seconds at this size; numpy's scan is
-    milliseconds)."""
+    block survival.  ``t`` is the (Q,) per-query radius vector (a negative
+    entry, e.g. a serving-front padding row, hits nothing).  Bools are 4x
+    cheaper than the distances to move, and position extraction is a single
+    host ``np.nonzero`` over the mask (XLA's sized ``nonzero`` costs seconds
+    at this size; numpy's scan is milliseconds)."""
     nq = queries.shape[0]
     if metric_name == "l2":
         qf = queries.astype(jnp.float32)
         df = data.astype(jnp.float32)
         s = -2.0 * (qf @ df.T) + jnp.sum(df * df, axis=-1)[None, :]
-        thresh = t * t - jnp.sum(qf * qf, axis=-1)  # (Q,)
+        # t < 0 must hit nothing even though t*t > 0: send its threshold
+        # to -inf (the squared-domain rearrangement is sign-blind).
+        thresh = jnp.where(
+            t >= 0, t * t - jnp.sum(qf * qf, axis=-1), -jnp.inf
+        )  # (Q,)
         raw_hit = s <= thresh[:, None]
     else:
-        raw_hit = get_metric(metric_name).pairwise(queries, data) <= t
+        raw_hit = get_metric(metric_name).pairwise(queries, data) <= t[:, None]
     hit = (
         raw_hit.reshape(nq, -1, block)
         & alive[:, :, None]
@@ -631,15 +656,16 @@ def _query_batched_jit(
     """One fused range-search pass.  Returns (dist (Q, n_pad), alive (Q, B),
     tile_mask (Qtiles, B)).
 
-    dist is +inf wherever the planar bound excluded the cell (or padding);
-    every finite entry is an exact metric distance.  Exactness: a tile
-    survives when ANY of its queries has lb <= t, so no true hit of any
-    query is ever pruned (per-query hits are re-filtered by d <= t)."""
+    ``t`` is the (Q,) per-query radius vector.  dist is +inf wherever the
+    planar bound excluded the cell (or padding); every finite entry is an
+    exact metric distance.  Exactness: a tile survives when ANY of its
+    queries has lb <= its own t, so no true hit of any query is ever pruned
+    (per-query hits are re-filtered by d <= t on the host)."""
     lb = _fused_lower_bounds(
         metric_name, queries, dev.pivots, dev.pairs, dev.deltas, dev.boxes,
         backend=backend, bq=bq, interpret=interpret,
     )  # (Q, B)
-    alive = lb <= t
+    alive = lb <= t[:, None]
     tile_mask = _tile_survival(alive, bq)  # (Qtiles, B)
     dist = _masked_exact_dists(
         metric_name, queries, dev.data, dev.valid, tile_mask,
@@ -661,6 +687,9 @@ def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) ->
         "pivot_dists_per_query": float(n_pivots),
         "exact_dists_per_query": mean_exact,
         "dists_per_query": float(n_pivots) + mean_exact,
+        # per-request accounting for the serving front: each query's OWN
+        # charge (pivot distances + its surviving blocks' valid points)
+        "per_query_dists": n_pivots + exact,
         "block_exclusion_rate": float(1.0 - alive.mean()) if alive.size else 1.0,
         "tiles_computed": int(tile_mask.sum()),
         "tile_exclusion_rate": (
@@ -673,13 +702,29 @@ def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) ->
 def bss_query_batched(
     index: BSSIndex,
     queries: np.ndarray,
-    t: float,
+    t,
     *,
     bq: int = _DEFAULT_BQ,
     backend: str = "auto",
     interpret: bool | None = None,
+    realisation: str = "adaptive",
 ) -> tuple[list[list[int]], dict]:
     """Exact range search through the fused jitted engine.
+
+    ``t`` is a scalar threshold or a (Q,) vector of PER-QUERY radii — the
+    serving front mixes thresholds inside one micro-batch this way; each
+    query's survival, hits and distance accounting use only its own radius,
+    so every row is exactly the single-threshold engine's row (a negative
+    radius excludes its row from everything — the front's padding).
+
+    ``realisation="dense"`` pins the jnp backend to the dense exact phase:
+    the sparse cell-gather realisation pads its alive-cell count to a
+    DATA-DEPENDENT power of two, so a latency-sensitive caller (the async
+    serving front) would pay an unpredictable mid-stream recompile whenever
+    traffic produces a fresh shape class — the dense pass's shapes are
+    fixed by (Q, N) alone, keeping compile count bounded by the front's
+    bucket ladder.  Either realisation is exact; "adaptive" (default)
+    picks by survivor density as before.
 
     Bit-equal to the ``bss_query`` oracle's hit lists (same indices, same
     per-query order) whenever float32 and float64 agree on ``d <= t`` —
@@ -703,6 +748,10 @@ def bss_query_batched(
             index.sharded(), queries, t, bq=bq, backend=backend,
             interpret=interpret,
         )
+    if realisation not in ("adaptive", "dense"):
+        raise ValueError(
+            f"realisation must be adaptive|dense, got {realisation!r}"
+        )
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -713,6 +762,7 @@ def bss_query_batched(
             np.zeros((0, index.n_blocks), bool),
             np.zeros((0, index.n_blocks), bool),
         )
+    t_vec = _per_query_t(t, nq)
     dev = index.device
     if backend == "jnp":
         qj = jnp.asarray(queries)
@@ -722,12 +772,12 @@ def bss_query_batched(
                 dev.boxes,
             )
         )
-        alive = lb <= t
-        if alive.mean() > _DENSE_ALIVE_FRAC:
+        alive = lb <= t_vec[:, None]
+        if realisation == "dense" or alive.mean() > _DENSE_ALIVE_FRAC:
             mask = np.asarray(
                 _dense_hit_mask_jit(
                     metric_eng, qj, dev.data, dev.valid,
-                    jnp.asarray(alive), jnp.float32(t), block=index.block,
+                    jnp.asarray(alive), jnp.asarray(t_vec), block=index.block,
                 )
             )
             hit_q, hit_pos = np.nonzero(mask)  # (query, position) ascending
@@ -742,7 +792,7 @@ def bss_query_batched(
             while True:
                 hit_q, hit_pos, n_hits = _cells_exact_jit(
                     metric_eng, qj, dev.data, dev.valid,
-                    qidx_p, bidx_p, cell_valid, jnp.float32(t),
+                    qidx_p, bidx_p, cell_valid, jnp.asarray(t_vec),
                     block=index.block, cap=cap,
                 )
                 n_hits = int(n_hits)
@@ -761,7 +811,7 @@ def bss_query_batched(
     dist, alive, tile_mask = _query_batched_jit(
         metric_eng,
         jnp.asarray(queries),
-        jnp.float32(t),
+        jnp.asarray(t_vec),
         dev,
         block=index.block,
         bq=bq,
@@ -769,7 +819,7 @@ def bss_query_batched(
         interpret=interpret,
     )
     dist = np.asarray(dist)
-    hit = dist <= t
+    hit = dist <= t_vec[:, None]
     qidx, pidx = np.nonzero(hit)  # row-major: pidx ascending within a query
     orig = index.perm[pidx]
     counts = hit.sum(axis=1)
@@ -888,9 +938,19 @@ def bss_knn_batched(
     bq: int = _DEFAULT_BQ,
     backend: str = "auto",
     interpret: bool | None = None,
+    realisation: str = "adaptive",
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Exact batched kNN: the range-search reduction run as jitted
     radius-deepening rounds over all queries at once.
+
+    ``realisation="dense"`` pins every jnp round to the dense masked pass
+    (no sparse cell-gather): shapes depend only on (Q, N, k), so a serving
+    front's compile count stays bounded by its bucket ladder — see
+    ``bss_query_batched``.  Both realisations are exact; they may disagree
+    in the last ulp of a distance, which can shift the radius schedule (and
+    so the per-query distance COUNTS, never the results) — count-parity
+    contracts should pin one realisation (the sharded engine and its tests
+    pin dense).
 
     Round scheme (each round is ONE jitted call, fixed shapes, no recompiles):
       * every query carries its own radius; blocks with planar bound above it
@@ -933,6 +993,10 @@ def bss_knn_batched(
             max_rounds=max_rounds, bq=bq, backend=backend,
             interpret=interpret,
         )
+    if realisation not in ("adaptive", "dense"):
+        raise ValueError(
+            f"realisation must be adaptive|dense, got {realisation!r}"
+        )
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -946,6 +1010,7 @@ def bss_knn_batched(
             np.zeros((0, k), np.float32),
             {"rounds": 0, "pivot_dists_per_query": 0.0,
              "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+             "per_query_dists": np.zeros(0, np.int64),
              "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
         )
     # clamp to the VALID corpus size: with k_run > n_valid the kth distance
@@ -957,6 +1022,7 @@ def bss_knn_batched(
             np.full((nq, k), np.inf, np.float32),
             {"rounds": 0, "pivot_dists_per_query": 0.0,
              "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+             "per_query_dists": np.zeros(nq, np.int64),
              "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
         )
     dev = index.device
@@ -991,7 +1057,8 @@ def bss_knn_batched(
             # block, so the round below is guaranteed final for them.
             radii = np.where(done, radii, np.inf).astype(np.float32)
         alive_host = lb_np <= radii[:, None]  # identical to the device test
-        if backend == "jnp" and alive_host.mean() <= _DENSE_ALIVE_FRAC:
+        if (backend == "jnp" and realisation != "dense"
+                and alive_host.mean() <= _DENSE_ALIVE_FRAC):
             # sparse round: gather only the alive cells (adaptive, like the
             # range path); done/alive/tiles derived on host
             qidx, bidx = np.nonzero(alive_host)
@@ -1060,6 +1127,7 @@ def bss_knn_batched(
         "pivot_dists_per_query": float(n_pivots),
         "exact_dists_per_query": float(total_exact.mean()),
         "dists_per_query": float(n_pivots + total_exact.mean()),
+        "per_query_dists": n_pivots + total_exact,
         "tiles_computed": tiles_total,
         "n_blocks": int(index.n_blocks),
     }

@@ -61,6 +61,7 @@ from repro.core.flat_index import (
     _engine_queries,
     _fused_lower_bounds,
     _masked_exact_dists,
+    _per_query_t,
     _valid_per_block,
     BSSDeviceArrays,
     BSSIndex,
@@ -151,17 +152,20 @@ class ShardedBSSIndex:
             axes, block = self.axes, self.index.block
 
             def local(q, t, data_l, valid_l, boxes_l, pivots, pairs, deltas):
+                # t is the replicated (Q,) per-query radius vector — each
+                # query's survival and hit test use only its own radius,
+                # exactly like the single-device engine
                 lb = _fused_lower_bounds(
                     metric, q, pivots, pairs, deltas, boxes_l,
                     backend=backend, bq=bq, interpret=interpret,
                 )
-                alive = lb <= t
+                alive = lb <= t[:, None]
                 tmask = tile_survival(alive, bq)
                 dist = _masked_exact_dists(
                     metric, q, data_l, valid_l, tmask,
                     backend=backend, block=block, bq=bq, interpret=interpret,
                 )
-                return dist <= t, alive, tmask
+                return dist <= t[:, None], alive, tmask
 
             self._fns[key] = jax.jit(shard_map(
                 local, self.mesh,
@@ -253,13 +257,17 @@ def shard_bss(index: BSSIndex, mesh: Mesh) -> ShardedBSSIndex:
 def sharded_query_batched(
     sidx: ShardedBSSIndex,
     queries: np.ndarray,
-    t: float,
+    t,
     *,
     bq: int = _DEFAULT_BQ,
     backend: str = "auto",
     interpret: bool | None = None,
 ) -> tuple[list[list[int]], dict]:
     """Exact range search, one fused shard-local pass per device.
+
+    ``t`` is a scalar threshold or a (Q,) vector of per-query radii (the
+    serving front's mixed-threshold micro-batches; a negative radius —
+    padding — excludes its row everywhere), replicated across shards.
 
     Hit lists (indices AND per-query order) and the distance accounting are
     identical to ``bss_query_batched`` / the numpy oracle: the per-shard
@@ -276,9 +284,10 @@ def sharded_query_batched(
         stats = _batched_stats(index, empty, empty)
         stats["n_shards"] = sidx.n_shards
         return [], stats
+    t_vec = _per_query_t(t, nq)
     fn = sidx._range_fn(metric_eng, backend, bq, interpret)
     hit, alive, tmask = fn(
-        jnp.asarray(queries), jnp.float32(t),
+        jnp.asarray(queries), jnp.asarray(t_vec),
         sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
         sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
     )
@@ -344,14 +353,14 @@ def sharded_knn_batched(
     if nq == 0:
         return (
             np.zeros((0, k), np.int64), np.zeros((0, k), np.float32),
-            dict(empty_stats),
+            {**empty_stats, "per_query_dists": np.zeros(0, np.int64)},
         )
     k_run = min(k, index.n_valid)
     if k_run == 0:
         return (
             np.full((nq, k), -1, np.int64),
             np.full((nq, k), np.inf, np.float32),
-            dict(empty_stats),
+            {**empty_stats, "per_query_dists": np.zeros(nq, np.int64)},
         )
     qj = jnp.asarray(queries)
     n_blocks = index.n_blocks
@@ -422,6 +431,7 @@ def sharded_knn_batched(
         "pivot_dists_per_query": float(n_pivots),
         "exact_dists_per_query": float(total_exact.mean()),
         "dists_per_query": float(n_pivots + total_exact.mean()),
+        "per_query_dists": n_pivots + total_exact,
         "tiles_computed": tiles_total,
         "n_blocks": int(n_blocks),
         "n_shards": sidx.n_shards,

@@ -1,0 +1,455 @@
+"""Async serving front: deadline micro-batching + shape-bucketed dispatch
+over the fused engines.
+
+The fused paths (``bss_query_batched`` / ``bss_knn_batched`` / the forest
+walkers — and the sharded engine, automatically, when the index was built
+with a mesh) only earn their keep on BATCHES; a stream of single queries
+each paying a full engine dispatch wastes them.  This front is the piece
+that assembles those batches from live traffic:
+
+* ``submit(query, kind="range"|"knn", ...)`` admits one request and
+  returns a ``concurrent.futures.Future`` immediately (driver-threaded —
+  no asyncio anywhere near the engine path);
+* a single driver thread collects compatible requests into micro-batches
+  under a deadline / max-batch policy: the batch dispatches when the
+  OLDEST queued request has waited ``max_delay_s``, or earlier the moment
+  the batch is full;
+* every batch is padded up to a fixed ladder of shape buckets
+  (``repro.core.backends.DEFAULT_BUCKETS``), so the jitted engines see at
+  most ``len(buckets)`` distinct batch shapes per (kind, metric) — jit
+  recompiles are bounded by the ladder, not by the traffic's batch-size
+  distribution;
+* results demux back to the per-request futures, each carrying its own
+  engine accounting (``ServeResult``).
+
+Exactness is inherited, not re-proven: the front never post-processes
+engine output beyond row demuxing.  BSS range batches mix PER-REQUEST
+thresholds through the engine's per-query radii; padding rows ride with
+radius -1, which the planar bound (>= 0) can never meet — padded rows
+survive no block, evaluate no distance and hit nothing (asserted by the
+compile-guard tests).  kNN and forest-range batches group on their scalar
+engine parameters (k / r0 / max_rounds; the walker's single t), and their
+padding rows duplicate the batch's first query — per-query rows of those
+engines are independent, so real rows are untouched and the duplicate's
+cost is bounded by the bucket rounding (reported as ``padding_waste``).
+
+Admission is a bounded queue with a load-shed policy (block until space,
+or fail fast with ``ShedError``), plus an optional exact-hit LRU result
+cache keyed on the request's quantized (float32) query bytes and its
+dispatch parameters.  ``stats()`` snapshots the whole pipeline: queue
+wait, batch sizes, padding waste, engine time, shed/cache counters.
+
+Host-side by design (and recorded as such in the ROADMAP): the queue, the
+driver thread, the cache and the demux all run in numpy/threading; only
+the engine call inside ``_dispatch`` touches jax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict, deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from repro.core import flat_index
+from repro.core.backends import DEFAULT_BUCKETS, bucket_for
+from repro.core.exclusion import HILBERT
+from repro.forest import (
+    EncodedForest,
+    EncodedMonotone,
+    forest_range_search,
+    monotone_range_search,
+)
+from repro.serve.queue import (
+    BoundedRequestQueue,
+    Request,
+    ShedError,
+    nearest_rank,
+    now,
+)
+
+__all__ = ["ServingFront", "ServeResult", "ShedError"]
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """What a request's future resolves to: the engine result rows for this
+    request plus its slice of the batch telemetry."""
+
+    hits: list[int] | None = None        # range: original corpus indices
+    indices: np.ndarray | None = None    # knn: (k,) original ids, -1 padded
+    distances: np.ndarray | None = None  # knn: (k,) ascending
+    n_dists: int = 0                     # this query's own distance charge
+    queue_wait_s: float = 0.0            # admission -> dispatch
+    engine_s: float = 0.0                # the batch's engine wall time
+    batch_size: int = 0                  # real requests in the batch
+    padded_to: int = 0                   # bucket the batch dispatched at
+    cache_hit: bool = False
+
+
+def _copy_result(res: ServeResult) -> ServeResult:
+    """Fresh hits list / result arrays: cache entries and client results
+    must never alias (a client sorting its hit list in place must not
+    corrupt what the next cache hit is served)."""
+    return dataclasses.replace(
+        res,
+        hits=None if res.hits is None else list(res.hits),
+        indices=None if res.indices is None else res.indices.copy(),
+        distances=None if res.distances is None else res.distances.copy(),
+    )
+
+
+class _LRU:
+    """Exact-hit result cache: quantized query bytes + dispatch params ->
+    finished ServeResult.  Plain OrderedDict LRU under the front's lock;
+    entries are defensively copied on both sides (see ``_copy_result``)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._d: OrderedDict[bytes, ServeResult] = OrderedDict()
+
+    def get(self, key: bytes) -> ServeResult | None:
+        res = self._d.get(key)
+        if res is None:
+            return None
+        self._d.move_to_end(key)
+        return _copy_result(res)
+
+    def put(self, key: bytes, res: ServeResult) -> None:
+        self._d[key] = _copy_result(res)
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+
+class ServingFront:
+    """Deadline-based micro-batching front over a built index.
+
+    ``index`` is a :class:`~repro.core.flat_index.BSSIndex` (range + kNN;
+    a mesh-built index serves through the sharded engine automatically) or
+    an encoded forest (range only — kNN on trees is ROADMAP work, exactly
+    as on :class:`~repro.serve.retrieval.RetrievalServer`).
+
+    ``prep`` optionally maps raw query batches into the index's engine
+    space (e.g. a cosine forest's unit-sphere normalisation); the BSS
+    engines do their own prep, so BSS fronts leave it None and feed the
+    engines exactly what a direct call would — bit-identity preserved.
+
+    ``realisation`` (default "dense") pins the jnp backend's exact phase
+    to the dense realisation: the adaptive sparse path pads its alive-cell
+    count to a data-dependent power of two, and a fresh shape class means
+    an unpredictable mid-stream recompile — exactly what the bucket ladder
+    exists to prevent.  "adaptive" restores the engine default (better
+    arithmetic at very low survivor density, unbounded shape classes).
+    """
+
+    def __init__(
+        self,
+        index,
+        *,
+        buckets: tuple = DEFAULT_BUCKETS,
+        max_delay_s: float = 0.002,
+        max_queue: int = 1024,
+        admission: str = "block",
+        cache_size: int = 0,
+        backend: str = "auto",
+        interpret: bool | None = None,
+        realisation: str = "dense",
+        mechanism: str = HILBERT,
+        prep=None,
+        start: bool = True,
+    ):
+        if isinstance(index, flat_index.BSSIndex):
+            self._engine = "bss"
+        elif isinstance(index, (EncodedForest, EncodedMonotone)):
+            self._engine = "forest"
+        else:
+            raise TypeError(
+                f"index must be a BSSIndex or an encoded forest, got "
+                f"{type(index).__name__}"
+            )
+        if not buckets or list(buckets) != sorted(set(int(b) for b in buckets)):
+            raise ValueError(
+                f"buckets must be a strictly ascending ladder, got {buckets!r}"
+            )
+        if admission not in ("block", "shed"):
+            raise ValueError(
+                f"admission must be block|shed, got {admission!r}"
+            )
+        self.index = index
+        self.buckets = tuple(int(b) for b in buckets)
+        self.max_delay_s = float(max_delay_s)
+        self.admission = admission
+        self.backend = backend
+        self.interpret = interpret
+        self.realisation = realisation
+        self.mechanism = mechanism
+        self.prep = prep
+        self._queue = BoundedRequestQueue(max_queue)
+        self._cache = _LRU(cache_size) if cache_size > 0 else None
+        self._lock = threading.Lock()  # telemetry + cache
+        # telemetry: scalar tallies + a bounded window for percentiles
+        self._n = dict(
+            submitted=0, completed=0, shed=0, cache_hits=0, errors=0,
+            batches=0, rows=0, padded_rows=0, dispatches=0,
+        )
+        self._per_bucket: dict[int, int] = {}
+        self._waits: deque[float] = deque(maxlen=4096)
+        self._engine_s_total = 0.0
+        self._thread: threading.Thread | None = None
+        if start:
+            self.start()
+
+    # ------------------------------------------------------------ lifecycle
+
+    def start(self) -> None:
+        if self._thread is not None:
+            return
+        self._thread = threading.Thread(
+            target=self._drive, name="serving-front-driver", daemon=True
+        )
+        self._thread.start()
+
+    def close(self) -> None:
+        """Stop admitting, drain the queue (every pending future resolves),
+        and join the driver.  Idempotent."""
+        self._queue.close()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "ServingFront":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ------------------------------------------------------------- admission
+
+    def submit(
+        self,
+        query: np.ndarray,
+        kind: str = "range",
+        *,
+        t: float | None = None,
+        k: int | None = None,
+        r0: float | None = None,
+        max_rounds: int = 8,
+        timeout: float | None = None,
+    ) -> Future:
+        """Admit one query; returns a Future resolving to ``ServeResult``.
+
+        ``kind="range"`` needs ``t`` (a metric distance; per-request — BSS
+        batches mix thresholds); ``kind="knn"`` needs ``k`` (requests
+        sharing (k, r0, max_rounds) batch together).  Admission follows the
+        front's policy: "block" waits for queue space (up to ``timeout``),
+        "shed" fails fast — either way a rejected request raises
+        :class:`ShedError` out of ``submit`` itself, never a half-admitted
+        future."""
+        q = np.asarray(query, np.float32)
+        if q.ndim != 1:
+            raise ValueError(
+                f"submit takes ONE query vector (the front does the "
+                f"batching), got shape {q.shape}"
+            )
+        if kind == "range":
+            if t is None:
+                raise ValueError("range requests need t=")
+            t = float(t)
+            if t < 0:
+                raise ValueError(
+                    f"t must be >= 0 (negative radii are the engine's "
+                    f"padding sentinel), got {t}"
+                )
+            group = ("range", t) if self._engine == "forest" else ("range",)
+        elif kind == "knn":
+            if self._engine == "forest":
+                from repro.serve.retrieval import FOREST_KNN_ERROR
+
+                raise NotImplementedError(FOREST_KNN_ERROR)
+            if k is None or int(k) <= 0:
+                raise ValueError(f"knn requests need a positive k, got {k}")
+            k = int(k)
+            group = ("knn", k, None if r0 is None else float(r0),
+                     int(max_rounds))
+        else:
+            raise ValueError(f"kind must be range|knn, got {kind!r}")
+
+        fut: Future = Future()
+        key = None
+        if self._cache is not None:
+            # the kind's FULL dispatch signature and nothing else: the BSS
+            # range group key omits t (mixed-threshold batching), so t must
+            # join the key there; knn's group already carries k/r0/
+            # max_rounds, and a stray parameter of the OTHER kind must not
+            # split logically identical requests across cache entries
+            params = (group, t) if kind == "range" else group
+            key = repr(params).encode() + q.tobytes()
+            with self._lock:
+                hit = self._cache.get(key)
+            if hit is not None:
+                with self._lock:
+                    self._n["submitted"] += 1
+                    self._n["cache_hits"] += 1
+                    self._n["completed"] += 1
+                fut.set_result(dataclasses.replace(hit, cache_hit=True))
+                return fut
+        req = Request(
+            query=q, kind=kind, group=group, future=fut, t_submit=now(),
+            t=t, k=k, cache_key=key,
+        )
+        try:
+            self._queue.put(req, policy=self.admission, timeout=timeout)
+        except ShedError:
+            with self._lock:
+                self._n["submitted"] += 1
+                self._n["shed"] += 1
+            raise
+        with self._lock:
+            self._n["submitted"] += 1
+        return fut
+
+    def submit_many(self, queries: np.ndarray, kind: str = "range",
+                    **kw) -> list[Future]:
+        """Convenience fan-in: one ``submit`` per row (shared params)."""
+        return [self.submit(q, kind, **kw) for q in np.asarray(queries)]
+
+    # -------------------------------------------------------------- driver
+
+    def _drive(self) -> None:
+        while True:
+            group = self._queue.next_group(self.buckets[-1], self.max_delay_s)
+            if not group:
+                return  # closed and drained
+            try:
+                self._dispatch(group)
+            except Exception as e:  # noqa: BLE001 — resolve, never wedge
+                with self._lock:
+                    self._n["errors"] += 1
+                for r in group:
+                    try:
+                        # a client cancel can race the done() check; an
+                        # InvalidStateError here must not kill the driver
+                        if not r.future.done():
+                            r.future.set_exception(e)
+                    except Exception:  # noqa: BLE001
+                        pass
+
+    @staticmethod
+    def _resolve(fut: Future, res: ServeResult) -> bool:
+        """Set a result, tolerating client-side cancellation (a cancelled
+        future must never poison the rest of its micro-batch)."""
+        if fut.cancelled():
+            return False
+        try:
+            fut.set_result(res)
+            return True
+        except Exception:  # noqa: BLE001 — cancel racing the set
+            return False
+
+    def _dispatch(self, group: list[Request]) -> None:
+        """One engine call for one compatible micro-batch: pad to the
+        bucket, run the fused path, demux rows to futures."""
+        # clients may have cancelled queued futures (the standard timeout
+        # move); drop them before spending engine time
+        group = [r for r in group if not r.future.cancelled()]
+        if not group:
+            return
+        n = len(group)
+        bucket = bucket_for(n, self.buckets)
+        pad = bucket - n
+        qs = np.stack([r.query for r in group])
+        if pad:
+            # duplicate the first row: always a valid engine input (zeros
+            # are not, for the probability-space metrics); BSS range pads
+            # are additionally killed by their -1 radius below
+            qs = np.concatenate([qs, np.repeat(qs[:1], pad, axis=0)])
+        if self.prep is not None:
+            qs = self.prep(qs)
+        head = group[0]
+        t_wait = now()
+        if head.kind == "range" and self._engine == "bss":
+            t_vec = np.array(
+                [r.t for r in group] + [-1.0] * pad, np.float32
+            )
+            hits, stats = flat_index.bss_query_batched(
+                self.index, qs, t_vec, backend=self.backend,
+                interpret=self.interpret, realisation=self.realisation,
+            )
+        elif head.kind == "range":  # forest: scalar-t walker
+            search = (
+                monotone_range_search
+                if isinstance(self.index, EncodedMonotone)
+                else forest_range_search
+            )
+            hits, stats = search(
+                self.index, qs, head.t, self.mechanism,
+                backend=self.backend, interpret=self.interpret,
+            )
+        else:  # knn
+            _, k, r0, max_rounds = head.group
+            idx, dist, stats = flat_index.bss_knn_batched(
+                self.index, qs, k, r0=r0, max_rounds=max_rounds,
+                backend=self.backend, interpret=self.interpret,
+                realisation=self.realisation,
+            )
+        engine_s = now() - t_wait
+        per_q = np.asarray(stats["per_query_dists"])
+
+        with self._lock:
+            self._n["batches"] += 1
+            self._n["rows"] += bucket
+            self._n["padded_rows"] += pad
+            self._per_bucket[bucket] = self._per_bucket.get(bucket, 0) + 1
+            self._engine_s_total += engine_s
+        for i, r in enumerate(group):
+            wait = t_wait - r.t_submit
+            res = ServeResult(
+                n_dists=int(per_q[i]), queue_wait_s=wait,
+                engine_s=engine_s, batch_size=n, padded_to=bucket,
+            )
+            if r.kind == "range":
+                res.hits = hits[i]
+            else:
+                res.indices = idx[i]
+                res.distances = dist[i]
+            if not self._resolve(r.future, res):
+                continue
+            with self._lock:
+                self._n["completed"] += 1
+                self._waits.append(wait)
+                if self._cache is not None and r.cache_key is not None:
+                    self._cache.put(r.cache_key, res)
+
+    # ------------------------------------------------------------ telemetry
+
+    def stats(self) -> dict:
+        """Snapshot of the pipeline telemetry (host-side counters only —
+        never blocks on the engine)."""
+        with self._lock:
+            waits = list(self._waits)
+            n = dict(self._n)
+            per_bucket = dict(self._per_bucket)
+            engine_s = self._engine_s_total
+
+        def pct(p: float) -> float:
+            return nearest_rank(waits, p)
+
+        rows = n["rows"]
+        return {
+            **n,
+            "queue_depth": len(self._queue),
+            "per_bucket_batches": per_bucket,
+            "batch_size_mean": (
+                (rows - n["padded_rows"]) / n["batches"] if n["batches"] else 0.0
+            ),
+            "padding_waste": n["padded_rows"] / rows if rows else 0.0,
+            "queue_wait_s": {
+                "mean": sum(waits) / len(waits) if waits else 0.0,
+                "p50": pct(0.50), "p95": pct(0.95), "max": pct(1.0),
+            },
+            "engine_s_total": engine_s,
+            "engine_s_per_batch": engine_s / n["batches"] if n["batches"] else 0.0,
+        }

@@ -36,7 +36,6 @@ server raises.
 from __future__ import annotations
 
 import dataclasses
-import time
 
 import numpy as np
 
@@ -44,8 +43,20 @@ from repro.core import flat_index, tree
 from repro.core.exclusion import HILBERT
 from repro.core.npdist import pairwise_np
 from repro.forest import encode_tree, forest_range_search
+from repro.serve.queue import now
 
-__all__ = ["RetrievalServer", "score_to_distance", "distance_to_score"]
+__all__ = ["RetrievalServer", "score_to_distance", "distance_to_score",
+           "FOREST_KNN_ERROR"]
+
+# The one message every forest-kNN refusal raises (RetrievalServer.top_k and
+# the async front's submit alike): point at the backend that CAN serve it
+# and at the ROADMAP item that will make the walker serve it natively.
+FOREST_KNN_ERROR = (
+    "top_k serving runs on the BSS engine — rebuild with index='bss'; the "
+    "forest walker is a range engine, and its radius-deepening kNN "
+    "reduction (like bss_knn_batched's) is the open 'forest kNN' ROADMAP "
+    "item"
+)
 
 
 def score_to_distance(score: np.ndarray) -> np.ndarray:
@@ -130,7 +141,7 @@ class RetrievalServer:
         self.stats.n_queries += nq
         self.stats.total_dists += dists_per_query * nq
         self.stats.exhaustive_dists += nq * self.corpus.shape[0]
-        self.stats.total_seconds += time.time() - t0
+        self.stats.total_seconds += now() - t0
 
     def range_query(self, user_embeddings: np.ndarray, min_score: float):
         """All items with dot-score >= min_score — exact, one fused pass.
@@ -149,7 +160,7 @@ class RetrievalServer:
         """All items within metric distance t — exact, one fused pass
         (BSS masked scan or jitted forest walk, per ``index=``)."""
         q = self._prep(user_embeddings)
-        t0 = time.time()
+        t0 = now()
         if self.index_kind == "forest":
             hits, s = forest_range_search(
                 self.index, q, float(t), self.forest_mechanism,
@@ -170,19 +181,34 @@ class RetrievalServer:
         ``bss_knn_batched``).  ``t0_guess`` optionally seeds the radius
         (None = the engine's per-query scale-free estimate)."""
         if self.index_kind == "forest":
-            raise NotImplementedError(
-                "top_k serving runs on the BSS engine (index='bss'); the "
-                "forest walker serves range queries — its radius-deepening "
-                "kNN reduction is ROADMAP work"
-            )
+            raise NotImplementedError(FOREST_KNN_ERROR)
         q = self._prep(user_embeddings)
-        t0 = time.time()
+        t0 = now()
         idx, dists, s = flat_index.bss_knn_batched(
             self.index, q, k, r0=t0_guess, max_rounds=max_rounds,
             backend=self.backend,
         )
         self._account(len(q), s["dists_per_query"], t0)
         return [idx[i] for i in range(idx.shape[0])]
+
+    def async_front(self, **kw):
+        """An :class:`~repro.serve.front.ServingFront` over this server's
+        index: per-request ``submit(...) -> Future`` with deadline
+        micro-batching in front of the same fused engines (sharded ones on
+        a mesh-built index).  Thresholds are metric DISTANCES (the engine
+        space — use ``score_to_distance`` for the cosine/min-score
+        specialisation).  Keyword args pass through to ``ServingFront``;
+        the caller owns the front's lifecycle (``with server.async_front()
+        as front: ...``)."""
+        from repro.serve.front import ServingFront
+
+        if self.index_kind == "forest":
+            kw.setdefault("mechanism", self.forest_mechanism)
+            if self.metric == "cosine":
+                # the tree was built on the normalised corpus under the l2
+                # engine metric, so raw queries need the same mapping
+                kw.setdefault("prep", self._prep)
+        return ServingFront(self.index, backend=self.backend, **kw)
 
     def top_k_oracle(self, user_embeddings: np.ndarray, k: int) -> list:
         """Brute-force reference (numpy float64) — for tests/benchmarks.

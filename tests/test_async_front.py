@@ -1,0 +1,404 @@
+"""Async serving front vs direct engine calls.
+
+The contract under test (the ISSUE-5 acceptance bar): for interleaved
+range+kNN request streams, the front returns hits and per-query distance
+counts BIT-IDENTICAL to direct ``bss_query_batched`` / ``bss_knn_batched``
+/ forest-walker calls — over l2/cosine/jsd, bucketed batch sizes including
+1 and beyond the largest bucket, and a mesh-built index on a simulated
+8-device mesh — with jit compile counts bounded by the bucket ladder and
+padding rows provably excluded from the distance accounting.
+
+References are pinned to ``realisation="dense"`` (what the front itself
+dispatches, and the same pin the sharded tests use): the adaptive sparse
+path may differ in the last ulp, which never changes results but can shift
+a kNN radius schedule by one comparison.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import pytest
+from multidevice_shim import run_simulated_mesh
+
+from repro.core import flat_index
+from repro.core.backends import jit_cache_size
+from repro.core.npdist import pairwise_np
+from repro.serve.front import ServingFront, ShedError
+
+DIM = 16
+
+
+def _space(metric: str, n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, DIM)).astype(np.float32) + 1e-3
+    if metric == "jsd":
+        x /= x.sum(axis=1, keepdims=True)
+    return x
+
+
+def _snap(dvals: np.ndarray, frac: float) -> float:
+    """Threshold near the given quantile, snapped to a well-separated gap
+    midpoint so float32 engines agree on every d <= t (the idiom of
+    tests/test_bss_engine.py)."""
+    vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+    i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+    for j in range(i, len(vals) - 1):
+        if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+            return float(0.5 * (vals[j] + vals[j + 1]))
+    return float(vals[-1] + 1.0)
+
+
+@functools.lru_cache(maxsize=None)
+def _built(metric: str):
+    """(index, queries, [t_small, t_mid, t_large]) per metric, cached."""
+    data = _space(metric, 1640, seed=3)
+    db, q = data[:1600], data[1600:]
+    idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10, block=64,
+                               seed=5)
+    d = pairwise_np(metric, q, db)
+    return idx, q, [_snap(d, 0.01), _snap(d, 0.03), _snap(d, 0.06)]
+
+
+def _drain(futs, timeout=120):
+    return [f.result(timeout=timeout) for f in futs]
+
+
+# --------------------------------------------------------- bit-identity
+
+
+@pytest.mark.parametrize("metric", ["l2", "cosine", "jsd"])
+def test_interleaved_stream_bit_identical(metric):
+    """Mixed range (three per-request thresholds) + kNN stream through the
+    front == direct engine calls, row for row: hits, kNN neighbours and
+    distances, and per-query distance counts."""
+    idx, q, ts = _built(metric)
+    k = 4
+    reqs = [("range", ts[i % 3]) if i % 3 != 1 else ("knn", k)
+            for i in range(len(q))]
+    with ServingFront(idx, buckets=(8, 32), max_delay_s=0.05) as front:
+        futs = [
+            front.submit(q[i], kind, t=arg) if kind == "range"
+            else front.submit(q[i], kind, k=arg)
+            for i, (kind, arg) in enumerate(reqs)
+        ]
+        res = _drain(futs)
+
+    r_rows = [i for i, (kind, _) in enumerate(reqs) if kind == "range"]
+    k_rows = [i for i, (kind, _) in enumerate(reqs) if kind == "knn"]
+    t_vec = np.array([reqs[i][1] for i in r_rows], np.float32)
+    ref_hits, ref_stats = flat_index.bss_query_batched(
+        idx, q[r_rows], t_vec, realisation="dense"
+    )
+    for j, i in enumerate(r_rows):
+        assert res[i].hits == ref_hits[j], (metric, i)
+        assert res[i].n_dists == ref_stats["per_query_dists"][j], (metric, i)
+    ref_i, ref_d, ref_ks = flat_index.bss_knn_batched(
+        idx, q[k_rows], k, realisation="dense"
+    )
+    for j, i in enumerate(k_rows):
+        assert (res[i].indices == ref_i[j]).all(), (metric, i)
+        assert (res[i].distances == ref_d[j]).all(), (metric, i)
+        assert res[i].n_dists == ref_ks["per_query_dists"][j], (metric, i)
+
+    # a batch-1 direct call is the same row too (the front may have served
+    # it inside any bucket)
+    i = r_rows[0]
+    h1, s1 = flat_index.bss_query_batched(
+        idx, q[i : i + 1], float(reqs[i][1]), realisation="dense"
+    )
+    assert res[i].hits == h1[0]
+    assert res[i].n_dists == s1["per_query_dists"][0]
+
+
+def test_batch_sizes_one_and_beyond_largest_bucket():
+    """A lone request rides the smallest bucket; a burst larger than the
+    top bucket splits into ladder-sized dispatches — results identical to
+    per-request direct calls either way."""
+    idx, q, ts = _built("l2")
+    t = ts[1]
+    with ServingFront(idx, buckets=(4, 8), max_delay_s=0.02) as front:
+        lone = front.submit(q[0], "range", t=t).result(timeout=120)
+        futs = [front.submit(qv, "range", t=t) for qv in q[:21]]
+        res = _drain(futs)
+        stats = front.stats()
+    assert lone.batch_size == 1 and lone.padded_to == 4
+    ref, ref_s = flat_index.bss_query_batched(
+        idx, q[:21], t, realisation="dense"
+    )
+    for i in range(21):
+        assert res[i].hits == ref[i]
+        assert res[i].n_dists == ref_s["per_query_dists"][i]
+        assert res[i].padded_to in (4, 8)
+    # 21 requests can never fit one 8-bucket dispatch
+    assert stats["batches"] >= 4
+    assert set(stats["per_bucket_batches"]) <= {4, 8}
+
+
+# ------------------------------------------- compile guard + padding proof
+
+
+def test_padded_rows_provably_excluded_from_counts():
+    """The front's padding contract at the engine level: rows with a
+    negative radius survive no block, are charged only the unavoidable
+    pivot distances, and hit nothing — and the real rows are exactly the
+    unpadded call's rows."""
+    idx, q, ts = _built("l2")
+    n_pivots = idx.pivots.shape[0]
+    t_vec = np.full(8, ts[1], np.float32)
+    t_vec[5:] = -1.0
+    qpad = np.concatenate([q[:5], np.repeat(q[:1], 3, axis=0)])
+    hits, stats = flat_index.bss_query_batched(
+        idx, qpad, t_vec, realisation="dense"
+    )
+    assert (stats["per_query_dists"][5:] == n_pivots).all()
+    assert all(hits[i] == [] for i in range(5, 8))
+    ref, ref_s = flat_index.bss_query_batched(
+        idx, q[:5], ts[1], realisation="dense"
+    )
+    assert hits[:5] == ref
+    assert (stats["per_query_dists"][:5] == ref_s["per_query_dists"]).all()
+    # the oracle agrees on the whole padded batch, padding rows included
+    oracle, oracle_s = flat_index.bss_query(idx, qpad, t_vec)
+    assert hits == oracle
+    assert (oracle_s["per_query_dists"] == stats["per_query_dists"]).all()
+
+
+def _sweep_sizes(front, q, t, k, n_max):
+    """Submit range+knn waves of every batch size 1..n_max, draining each
+    wave so group sizes are deterministic."""
+    for n in range(1, n_max + 1):
+        _drain([front.submit(qv, "range", t=t) for qv in q[:n]])
+        _drain([front.submit(qv, "knn", k=k) for qv in q[:n]])
+
+
+def test_compile_guard_jnp_backend():
+    """Sweeping batch sizes 1..10 through a (4, 8) ladder compiles each
+    jitted engine entry point at most len(buckets) times per (kind,
+    metric): the dense realisation's shapes are fixed by the bucket."""
+    idx, q, ts = _built("l2")
+    fns = {
+        "range/lb": flat_index._lower_bounds_jit,
+        "range/dense": flat_index._dense_hit_mask_jit,
+        "knn/lb": flat_index._knn_lb_jit,
+        "knn/round": flat_index._knn_round_jit,
+    }
+    before = {name: jit_cache_size(fn) for name, fn in fns.items()}
+    if any(v < 0 for v in before.values()):
+        pytest.skip("this jax exposes no jit cache hook")
+    with ServingFront(idx, buckets=(4, 8), max_delay_s=0.02,
+                      backend="jnp") as front:
+        _sweep_sizes(front, q, ts[1], 3, n_max=10)
+    for name, fn in fns.items():
+        grew = jit_cache_size(fn) - before[name]
+        assert grew <= 2, (name, grew)
+
+
+def test_compile_guard_pallas_interpret():
+    """Same bound through the Pallas kernel path (interpret mode): the
+    fused range pass is one jit whose cache grows by at most the ladder."""
+    db = _space("l2", 320, seed=11)
+    q = _space("l2", 12, seed=12)
+    idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=64,
+                               seed=13)
+    t = _snap(pairwise_np("l2", q, db), 0.05)
+    before = jit_cache_size(flat_index._query_batched_jit)
+    if before < 0:
+        pytest.skip("this jax exposes no jit cache hook")
+    sizes = (1, 3, 4, 5, 8)
+    results = {}
+    with ServingFront(idx, buckets=(4, 8), max_delay_s=0.02,
+                      backend="pallas", interpret=True) as front:
+        for n in sizes:
+            results[n] = _drain(
+                [front.submit(qv, "range", t=t) for qv in q[:n]]
+            )
+    # bound first: the reference calls below compile UNBUCKETED shapes
+    assert jit_cache_size(flat_index._query_batched_jit) - before <= 2
+    for n in sizes:
+        ref, _ = flat_index.bss_query_batched(
+            idx, q[:n], t, backend="pallas", interpret=True
+        )
+        assert [r.hits for r in results[n]] == ref, n
+
+
+# ----------------------------------------------------------------- forest
+
+
+def test_forest_front_groups_by_threshold():
+    """A forest front serves range streams through the jitted walker —
+    per-request results and counts equal to direct walker calls — and
+    groups per threshold (the walker takes one scalar t)."""
+    from repro.core import tree
+    from repro.forest import encode_tree, forest_range_search
+
+    db = _space("l2", 700, seed=21)
+    q = _space("l2", 10, seed=22)
+    tr = tree.build_tree("hpt_fft_log", "l2", db, seed=23)
+    enc = encode_tree(tr)
+    d = pairwise_np("l2", q, db)
+    t1, t2 = _snap(d, 0.02), _snap(d, 0.05)
+    with ServingFront(enc, buckets=(8, 32), max_delay_s=0.05) as front:
+        futs = [front.submit(q[i], "range", t=(t1 if i % 2 else t2))
+                for i in range(len(q))]
+        res = _drain(futs)
+        with pytest.raises(NotImplementedError, match="BSS.*ROADMAP"):
+            front.submit(q[0], "knn", k=3)
+        stats = front.stats()
+    assert stats["batches"] == 2  # one dispatch per distinct threshold
+    for i in range(len(q)):
+        t_i = t1 if i % 2 else t2
+        ref, ref_s = forest_range_search(enc, q[i : i + 1], t_i)
+        assert res[i].hits == ref[0], i
+        assert res[i].n_dists == ref_s["per_query_dists"][0], i
+
+
+# ------------------------------------------- admission, cache, lifecycle
+
+
+def test_admission_shed_and_block_timeout():
+    idx, q, ts = _built("l2")
+    front = ServingFront(idx, max_queue=2, admission="shed", start=False)
+    front.submit(q[0], "range", t=ts[0])
+    front.submit(q[1], "range", t=ts[0])
+    with pytest.raises(ShedError, match="shed"):
+        front.submit(q[2], "range", t=ts[0])
+    assert front.stats()["shed"] == 1
+    assert front.stats()["submitted"] == 3
+    front.close()
+
+    blk = ServingFront(idx, max_queue=1, admission="block", start=False)
+    blk.submit(q[0], "range", t=ts[0])
+    with pytest.raises(ShedError, match="timed out"):
+        blk.submit(q[1], "range", t=ts[0], timeout=0.05)
+    blk.close()
+
+
+def test_exact_hit_lru_cache():
+    idx, q, ts = _built("l2")
+    with ServingFront(idx, cache_size=4, max_delay_s=0.005) as front:
+        first = front.submit(q[0], "range", t=ts[1]).result(timeout=120)
+        again = front.submit(q[0], "range", t=ts[1]).result(timeout=120)
+        other_t = front.submit(q[0], "range", t=ts[2]).result(timeout=120)
+        stats = front.stats()
+    assert not first.cache_hit and again.cache_hit
+    assert again.hits == first.hits and again.n_dists == first.n_dists
+    assert not other_t.cache_hit  # params are part of the key
+    assert stats["cache_hits"] == 1
+    assert stats["batches"] == 2  # the hit never reached the engine
+
+
+def test_validation_and_lifecycle():
+    idx, q, ts = _built("l2")
+    front = ServingFront(idx, start=False)
+    with pytest.raises(ValueError, match="ONE query"):
+        front.submit(q[:2], "range", t=ts[0])
+    with pytest.raises(ValueError, match="need t="):
+        front.submit(q[0], "range")
+    with pytest.raises(ValueError, match="padding sentinel"):
+        front.submit(q[0], "range", t=-0.5)
+    with pytest.raises(ValueError, match="positive k"):
+        front.submit(q[0], "knn")
+    with pytest.raises(ValueError, match="kind"):
+        front.submit(q[0], "nearest", t=ts[0])
+    front.close()
+    front.close()  # idempotent
+    with pytest.raises(ShedError, match="closed"):
+        front.submit(q[0], "range", t=ts[0])
+    with pytest.raises(TypeError, match="BSSIndex"):
+        ServingFront(object())
+    with pytest.raises(ValueError, match="ladder"):
+        ServingFront(idx, buckets=(8, 4), start=False)
+    with pytest.raises(ValueError, match="admission"):
+        ServingFront(idx, admission="drop", start=False)
+
+
+def test_cancelled_future_does_not_poison_batch():
+    """A client cancelling a queued future (the standard timeout move) must
+    not affect the other requests in its micro-batch."""
+    idx, q, ts = _built("l2")
+    front = ServingFront(idx, buckets=(8,), max_delay_s=0.5, start=False)
+    futs = [front.submit(qv, "range", t=ts[1]) for qv in q[:6]]
+    assert futs[2].cancel() and futs[4].cancel()
+    front.start()
+    res = [futs[i].result(timeout=120) for i in range(6) if i not in (2, 4)]
+    front.close()
+    ref, _ = flat_index.bss_query_batched(
+        idx, q[:6], ts[1], realisation="dense"
+    )
+    for r, i in zip(res, (0, 1, 3, 5)):
+        assert r.hits == ref[i], i
+    assert front.stats()["errors"] == 0
+
+
+def test_queue_wait_and_padding_telemetry():
+    idx, q, ts = _built("l2")
+    with ServingFront(idx, buckets=(8, 32), max_delay_s=0.01) as front:
+        res = _drain([front.submit(qv, "range", t=ts[1]) for qv in q[:5]])
+        stats = front.stats()
+    assert all(r.queue_wait_s >= 0.0 for r in res)
+    assert all(r.engine_s > 0.0 for r in res)
+    assert stats["completed"] == 5
+    assert stats["padded_rows"] >= 3  # 5 real rows in 8-buckets minimum
+    assert 0.0 < stats["padding_waste"] < 1.0
+    assert stats["queue_wait_s"]["p95"] >= stats["queue_wait_s"]["p50"] >= 0
+
+
+# ------------------------------------------------------------ mesh-built
+
+_MESH_FRONT = """
+    import numpy as np
+    from jax.sharding import Mesh
+    from repro.core import flat_index
+    from repro.core.npdist import pairwise_np
+    from repro.serve.front import ServingFront
+
+    def snap(dvals, frac):
+        vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+        i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+        for j in range(i, len(vals) - 1):
+            if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+                return float(0.5 * (vals[j] + vals[j + 1]))
+        return float(vals[-1] + 1.0)
+
+    rng = np.random.default_rng(7)
+    x = rng.random((1400, 12)).astype(np.float32)
+    db, q = x[:1376], x[1376:]
+    mesh = Mesh(np.array(jax.devices()[:8]), ("data",))
+    idx = flat_index.build_bss("l2", db, n_pivots=8, n_pairs=10, block=64,
+                               seed=9, mesh=mesh)
+    d = pairwise_np("l2", q, db)
+    t1, t2 = snap(d, 0.02), snap(d, 0.05)
+    k = 3
+    with ServingFront(idx, buckets=(8, 32), max_delay_s=0.05) as front:
+        futs = [
+            front.submit(q[i], "knn", k=k) if i % 3 == 1
+            else front.submit(q[i], "range", t=(t1 if i % 3 else t2))
+            for i in range(len(q))
+        ]
+        res = [f.result(timeout=300) for f in futs]
+    r_rows = [i for i in range(len(q)) if i % 3 != 1]
+    k_rows = [i for i in range(len(q)) if i % 3 == 1]
+    t_vec = np.array([t1 if i % 3 else t2 for i in r_rows], np.float32)
+    ref, rs = flat_index.bss_query_batched(idx, q[r_rows], t_vec)
+    assert rs["n_shards"] == 8
+    for j, i in enumerate(r_rows):
+        assert res[i].hits == ref[j], i
+        assert res[i].n_dists == rs["per_query_dists"][j], i
+    ki, kd, ks = flat_index.bss_knn_batched(idx, q[k_rows], k)
+    for j, i in enumerate(k_rows):
+        assert (res[i].indices == ki[j]).all(), i
+        assert (res[i].distances == kd[j]).all(), i
+        assert res[i].n_dists == ks["per_query_dists"][j], i
+    print("MESH_FRONT_OK")
+"""
+
+
+def test_front_on_mesh_built_index():
+    """The front over a mesh-built index serves through the sharded engine
+    (8 simulated devices): interleaved mixed-threshold range + kNN, rows
+    and counts identical to direct sharded calls."""
+    out = run_simulated_mesh(_MESH_FRONT, 8, timeout=900)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "MESH_FRONT_OK" in out.stdout

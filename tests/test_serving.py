@@ -102,3 +102,54 @@ def test_score_distance_duality():
     assert np.all(np.diff(d) <= 1e-9)
     np.testing.assert_allclose(d[-1], 0.0, atol=1e-6)
     np.testing.assert_allclose(d[0], 2.0, atol=1e-6)
+
+
+def test_forest_top_k_raises_not_implemented():
+    """Regression for the serving contract: kNN on a forest server raises
+    NotImplementedError whose message points at the BSS backend and the
+    ROADMAP item — the same message the async front raises."""
+    rng = np.random.default_rng(3)
+    corpus = rng.normal(size=(400, 16))
+    server = RetrievalServer(corpus, metric="l2", index="forest", seed=1)
+    with pytest.raises(NotImplementedError, match="index='bss'"):
+        server.top_k(rng.normal(size=(2, 16)), k=3)
+    with pytest.raises(NotImplementedError, match="ROADMAP"):
+        server.top_k(rng.normal(size=(2, 16)), k=3)
+    # range serving on the same server still works
+    d = pairwise_np("l2", rng.normal(size=(2, 16)).astype(np.float32),
+                    server.corpus)
+    hits = server.range_by_distance(rng.normal(size=(2, 16)),
+                                    float(np.quantile(d, 0.01)))
+    assert len(hits) == 2
+
+
+def test_server_async_front_matches_sync_paths():
+    """RetrievalServer.async_front: per-request futures over the same
+    index; results match the server's own batched calls (cosine BSS server
+    and a forest server with the cosine prep)."""
+    rng = np.random.default_rng(4)
+    corpus = rng.normal(size=(1200, 16))
+    server = RetrievalServer(corpus, n_pivots=10, n_pairs=12, block=64)
+    q = rng.normal(size=(12, 16))
+    t = float(score_to_distance(np.asarray(0.85)))
+    sync_hits = server.range_by_distance(q, t)
+    sync_top = server.top_k(q, k=4)
+    with server.async_front(max_delay_s=0.02) as front:
+        rres = [f.result(timeout=120)
+                for f in front.submit_many(q, "range", t=t)]
+        kres = [f.result(timeout=120)
+                for f in front.submit_many(q, "knn", k=4)]
+    for i in range(len(q)):
+        assert sorted(rres[i].hits) == sorted(sync_hits[i]), i
+        assert set(kres[i].indices.tolist()) == set(
+            np.asarray(sync_top[i]).tolist()), i
+
+    f_server = RetrievalServer(corpus[:600], index="forest", seed=2,
+                               n_pivots=10)
+    f_sync = f_server.range_by_distance(q, t)
+    with f_server.async_front(max_delay_s=0.02) as front:
+        assert front.prep is not None  # cosine forest: queries need the map
+        fres = [f.result(timeout=120)
+                for f in front.submit_many(q, "range", t=t)]
+    for i in range(len(q)):
+        assert sorted(fres[i].hits) == sorted(f_sync[i]), i
