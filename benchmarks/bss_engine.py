@@ -212,6 +212,155 @@ def run_metrics(seed: int = 0) -> list[str]:
     return rows
 
 
+def run_all_precision(seed: int = 0, n: int | None = None, nq: int = 128,
+                      k: int = 10):
+    """fp32 vs bf16 exact phase for every supermetric: bit-identity of hits,
+    kNN results and per-query distance counts, plus the HBM-traffic model
+    the mode exists for.  Both byte models are analytic from the engine
+    telemetry and both are archived:
+
+    * ``bytes_ratio`` (headline) — the paper-aligned PER-EVALUATION model,
+      the same accounting convention as ``per_query_dists``: every counted
+      distance evaluation streams one corpus row at the storage width, and
+      every re-checked band point re-streams its fp32 row (charged a full
+      un-amortised fetch — pessimistic for the re-check):
+
+          fp32:  sum(per_query_dists) * dim * 4
+          bf16:  sum(per_query_dists) * dim * 2
+                 + sum(per_query_recheck) * dim * 4
+
+      The band is a ~eps-wide shell (a few points per query against ~10^3
+      evaluations), so this ratio sits just above 0.5 — the halved corpus
+      stream the mode exists for.
+
+    * ``tile_bytes_ratio`` — the dense-kernel STREAM model: every computed
+      (query-tile, block) grid cell streams one corpus block, re-checked
+      tiles re-stream it in fp32 (tiles_computed/recheck_tiles * block *
+      dim * width).  NOTE: a query tile is ``TILE_BQ`` (128) queries, so at
+      benchmark scale the union of their bands touches nearly every
+      surviving block and this view saturates — it bounds the re-check
+      traffic of the tile-granular kernel realisation from above, it does
+      not measure the band's true (point-sparse) volume.
+
+    ``realisation`` is pinned to "dense" so both precisions run the same
+    shape class and the tile counts are comparable.  Returns (csv rows,
+    results dict for BENCH_bss_bf16.json)."""
+    n = n or (16_384 if FULL else 4_096)
+    rows, results = [], {}
+    kw = dict(realisation="dense")
+    for metric in SUPERMETRICS:
+        db, q, t = _metric_space(metric, n, nq, seed)
+        idx, dt_build = timed(
+            flat_index.build_bss, metric, db, n_pivots=16, n_pairs=24,
+            block=128, seed=seed,
+        )
+        dim = int(idx.data.shape[1])
+        block = int(idx.data.shape[0] // idx.n_blocks)
+        tile_bytes = block * dim  # values per streamed corpus block
+
+        for fn in (flat_index.bss_query_batched,):  # warm both jit caches
+            fn(idx, q, t, **kw)
+            fn(idx, q, t, precision="bf16", **kw)
+        (h32, s32), dt32 = timed(
+            flat_index.bss_query_batched, idx, q, t, **kw
+        )
+        (h16, s16), dt16 = timed(
+            flat_index.bss_query_batched, idx, q, t, precision="bf16", **kw
+        )
+        range_ident = h32 == h16 and np.array_equal(
+            s32["per_query_dists"], s16["per_query_dists"]
+        )
+        r_evals = int(np.asarray(s32["per_query_dists"]).sum())
+        r_recheck = int(np.asarray(s16["per_query_recheck"]).sum())
+        rp32 = r_evals * dim * 4
+        rp16 = r_evals * dim * 2 + r_recheck * dim * 4
+        rb32 = s32["tiles_computed"] * tile_bytes * 4
+        rb16 = (s16["tiles_computed"] * tile_bytes * 2
+                + s16["recheck_tiles"] * tile_bytes * 4)
+
+        flat_index.bss_knn_batched(idx, q, k, **kw)  # warm-up
+        flat_index.bss_knn_batched(idx, q, k, precision="bf16", **kw)
+        (i32, d32, k32), dtk32 = timed(
+            flat_index.bss_knn_batched, idx, q, k, **kw
+        )
+        (i16, d16, k16), dtk16 = timed(
+            flat_index.bss_knn_batched, idx, q, k, precision="bf16", **kw
+        )
+        knn_ident = (
+            np.array_equal(i32, i16)
+            and np.array_equal(d32, d16)
+            and np.array_equal(k32["per_query_dists"], k16["per_query_dists"])
+            and k32["rounds"] == k16["rounds"]
+        )
+        k_evals = int(np.asarray(k32["per_query_dists"]).sum())
+        k_recheck = int(np.asarray(k16["per_query_recheck"]).sum())
+        kp32 = k_evals * dim * 4
+        kp16 = k_evals * dim * 2 + k_recheck * dim * 4
+        kb32 = k32["tiles_computed"] * tile_bytes * 4
+        kb16 = (k16["tiles_computed"] * tile_bytes * 2
+                + k16["recheck_tiles"] * tile_bytes * 4)
+
+        results[metric] = {
+            "corpus": int(n),
+            "queries": int(nq),
+            "build_s": round(dt_build, 3),
+            "band_eps": s16["band_eps"],
+            "range": {
+                "bit_identical": bool(range_ident),
+                "tiles_computed": int(s16["tiles_computed"]),
+                "recheck_tiles": int(s16["recheck_tiles"]),
+                "recheck_points_per_query": round(
+                    s16["recheck_points_per_query"], 2
+                ),
+                "corpus_bytes_fp32": int(rp32),
+                "corpus_bytes_bf16": int(rp16),
+                "bytes_ratio": round(rp16 / max(rp32, 1), 4),
+                "tile_bytes_fp32": int(rb32),
+                "tile_bytes_bf16": int(rb16),
+                "tile_bytes_ratio": round(rb16 / max(rb32, 1), 4),
+                "us_per_query_fp32": round(dt32 / nq * 1e6, 1),
+                "us_per_query_bf16": round(dt16 / nq * 1e6, 1),
+                "speedup": round(dt32 / max(dt16, 1e-9), 2),
+            },
+            "knn": {
+                "k": k,
+                "bit_identical": bool(knn_ident),
+                "rounds": int(k16["rounds"]),
+                "tiles_computed": int(k16["tiles_computed"]),
+                "recheck_tiles": int(k16["recheck_tiles"]),
+                "corpus_bytes_fp32": int(kp32),
+                "corpus_bytes_bf16": int(kp16),
+                "bytes_ratio": round(kp16 / max(kp32, 1), 4),
+                "tile_bytes_fp32": int(kb32),
+                "tile_bytes_bf16": int(kb16),
+                "tile_bytes_ratio": round(kb16 / max(kb32, 1), 4),
+                "us_per_query_fp32": round(dtk32 / nq * 1e6, 1),
+                "us_per_query_bf16": round(dtk16 / nq * 1e6, 1),
+                "speedup": round(dtk32 / max(dtk16, 1e-9), 2),
+            },
+        }
+        rows.append(row(
+            f"bss/bf16/{metric}/range", dt16 / nq * 1e6,
+            f"bit_identical={range_ident};"
+            f"bytes_ratio={rp16 / max(rp32, 1):.3f};"
+            f"recheck_per_query={s16['recheck_points_per_query']:.1f};"
+            f"band_eps={s16['band_eps']:.3g};corpus={n}",
+        ))
+        rows.append(row(
+            f"bss/bf16/{metric}/knn{k}", dtk16 / nq * 1e6,
+            f"bit_identical={knn_ident};"
+            f"bytes_ratio={kp16 / max(kp32, 1):.3f};"
+            f"rounds={k16['rounds']}",
+        ))
+    return rows, results
+
+
+def run_precision(seed: int = 0) -> list[str]:
+    """Suite entry point (harness contract: rows only)."""
+    rows, _ = run_all_precision(seed=seed)
+    return rows
+
+
 def _scale_row(seed: int) -> str:
     """65k-point corpus (112-d colors surrogate, the paper's colors
     dimensionality), 1k queries at ~5 hits/query: fused engine vs the
@@ -249,8 +398,11 @@ def main() -> None:
     ap.add_argument("--all-metrics", action="store_true",
                     help="sweep l2/cosine/jsd/triangular and write "
                          "BENCH_bss_metrics.json")
+    ap.add_argument("--precision", action="store_true",
+                    help="fp32-vs-bf16 exact-phase sweep (bit-identity + "
+                         "bytes-moved) and write BENCH_bss_bf16.json")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="BENCH_bss_metrics.json")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.all_metrics:
@@ -258,8 +410,20 @@ def main() -> None:
         rows, results = run_all_metrics(seed=args.seed)
         for r in rows:
             print(r, flush=True)
-        write_bench_json(args.out, {
+        write_bench_json(args.out or "BENCH_bss_metrics.json", {
             "bench": "bss_metrics",
+            "seed": args.seed,
+            "wall_s": round(now() - t0, 1),
+            "full": FULL,
+            "metrics": results,
+        })
+    elif args.precision:
+        t0 = now()
+        rows, results = run_all_precision(seed=args.seed)
+        for r in rows:
+            print(r, flush=True)
+        write_bench_json(args.out or "BENCH_bss_bf16.json", {
+            "bench": "bss_bf16",
             "seed": args.seed,
             "wall_s": round(now() - t0, 1),
             "full": FULL,

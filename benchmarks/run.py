@@ -33,6 +33,7 @@ def main() -> None:
         "unbalance": paper_unbalance.run,  # §6 future work, implemented
         "bss": bss_engine.run,            # beyond-paper TPU engine
         "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep
+        "bss_bf16": bss_engine.run_precision,  # fp32-vs-bf16 exact phase
         "bss_sharded": bss_sharded.run,   # multi-device mesh sweep
         "retrieval": retrieval_serving.run,  # serving integration
         "retrieval_async": retrieval_serving.run_async,  # async front, Poisson

@@ -145,3 +145,19 @@ print(
     f"p95 queue wait {1e3 * fstats['queue_wait_s']['p95']:.1f}ms) — "
     f"results == direct engine calls"
 )
+
+# 10. bf16 exact phase: precision="bf16" streams a bfloat16 mirror of the
+#     corpus through the exact phase (half the HBM bytes per evaluated
+#     point) and re-checks only the comparison-margin boundary band
+#     |d - t| <= eps in fp32 — so hits, kNN results AND per-query distance
+#     counts stay bit-identical to the fp32 engine.  eps comes from the
+#     measured rounding displacement: eps = 2*max_p d(p, p~) + a small
+#     fp32-arithmetic term (see repro/core/precision.py).
+h16, s16 = flat_index.bss_query_batched(idx, queries, t, precision="bf16")
+assert h16 == hits  # bit-identical to the fp32 engine of step 4
+assert (s16["per_query_dists"] == stats["per_query_dists"]).all()
+print(
+    f"bf16 exact phase: hits + counts == fp32 engine, band eps="
+    f"{s16['band_eps']:.2e}, {s16['recheck_points_per_query']:.1f} "
+    f"fp32 re-checked points/query"
+)

@@ -174,6 +174,17 @@ class BSSIndex:
     _sharded: object | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
+    # bf16 exact-phase mirror (lazy): the corpus rounded to bfloat16 for the
+    # halved-HBM scan, plus the derived comparison margin.  Reference tables
+    # (pivots / deltas / boxes) deliberately stay fp32: rounding them would
+    # perturb the survival sets and break the bit-identical-counts contract,
+    # and they are a rounding-error of the corpus traffic anyway.
+    _bf16: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _bf16_eps: float | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
 
     @property
     def n_blocks(self) -> int:
@@ -205,6 +216,28 @@ class BSSIndex:
                 valid=jnp.asarray(self.valid),
             )
         return self._device
+
+    @property
+    def device_bf16(self) -> jnp.ndarray:
+        """(n_pad, dim) bfloat16 corpus mirror, built once.  The tile
+        kernels upcast to fp32 on entry, so streaming this halves corpus
+        HBM traffic with fp32 accumulation unchanged."""
+        if self._bf16 is None:
+            self._bf16 = jnp.asarray(self.data, jnp.bfloat16)
+        return self._bf16
+
+    def bf16_margin(self) -> float:
+        """Conservative threshold margin for the bf16 phase (derivation in
+        ``repro.core.precision``): measured in the ENGINE metric over the
+        engine-space corpus (already unit-normalised for cosine), computed
+        once per index."""
+        if self._bf16_eps is None:
+            from repro.core.precision import bf16_margin
+
+            self._bf16_eps = bf16_margin(
+                _engine_metric(self.metric_name), self.data, self.valid
+            )
+        return self._bf16_eps
 
     def sharded(self, mesh: Mesh | None = None):
         """The :class:`~repro.parallel.shard_index.ShardedBSSIndex` view of
@@ -674,6 +707,112 @@ def _query_batched_jit(
     return dist, alive, tile_mask
 
 
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "block", "bq", "backend", "interpret"),
+)
+def _query_batched_bf16_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    t: jnp.ndarray,
+    dev: BSSDeviceArrays,
+    data16: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    block: int,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+):
+    """One fused bf16 range pass with fp32 boundary re-check.
+
+    The bound phase is UNTOUCHED (fp32 reference tables), so ``alive`` /
+    ``tile_mask`` — and with them the paper's distance counts — are
+    bit-identical to the fp32 engine's.  The scan streams the bf16 corpus
+    (fp32 accumulation inside the kernels); with ``eps`` the derived margin
+    (``repro.core.precision``):
+
+      * ``d16 <= t - eps``  — SURE hit, no fp32 needed (margin soundness);
+      * ``t - eps < d16 <= t + eps`` — boundary band: the fp32 corpus is
+        re-scanned ONLY for tiles containing a band cell, through the same
+        masked-kernel machinery, so every consulted fp32 value is the very
+        value the fp32 engine computes — the final hit set is bit-identical;
+      * everything else — sure miss (no true hit can have d16 > t + eps).
+
+    Returns (hit (Q, n_pad) bool, alive (Q, B), tile_mask, recheck_tiles
+    scalar, band_counts (Q,) int32)."""
+    lb = _fused_lower_bounds(
+        metric_name, queries, dev.pivots, dev.pairs, dev.deltas, dev.boxes,
+        backend=backend, bq=bq, interpret=interpret,
+    )
+    alive = lb <= t[:, None]
+    tile_mask = _tile_survival(alive, bq)
+    d16 = _masked_exact_dists(
+        metric_name, queries, data16, dev.valid, tile_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )
+    t_col = t[:, None]
+    sure = d16 <= t_col - eps
+    band = (d16 <= t_col + eps) & ~sure
+    band_blocks = band.reshape(queries.shape[0], -1, block).any(axis=2)
+    recheck_mask = _tile_survival(band_blocks, bq) & tile_mask
+    d32 = _masked_exact_dists(
+        metric_name, queries, dev.data, dev.valid, recheck_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )
+    hit = sure | (band & (d32 <= t_col))
+    return (
+        hit, alive, tile_mask, jnp.sum(recheck_mask),
+        jnp.sum(band, axis=1, dtype=jnp.int32),
+    )
+
+
+@partial(jax.jit, static_argnames=("metric_name", "block", "cap"))
+def _cells_exact_bf16_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data16: jnp.ndarray,
+    valid: jnp.ndarray,
+    qidx: jnp.ndarray,
+    bidx: jnp.ndarray,
+    cell_valid: jnp.ndarray,
+    t: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    block: int,
+    cap: int,
+):
+    """Sparse (cell-gather) realisation of the bf16 range phase: like
+    ``_cells_exact_jit`` but over the bf16 corpus.  Emits a compact list of
+    the hits from cells with NO boundary-band point (``d16 <= t - eps``
+    everywhere it fires — final by margin soundness) plus per-cell band
+    flags: cells holding any ``t - eps < d16 <= t + eps`` point go back
+    through the fp32 ``_cells_exact_jit`` (same gather shapes as the fp32
+    engine, so every re-checked value is bit-identical to what that engine
+    computes, and within a band cell its hit mask IS the fp32 engine's).
+    Returns (hit_q, hit_pos, n_hits, band_cell (C,), band_counts (Q,))."""
+    d, pvalid = _gather_cell_dists(
+        metric_name, queries, data16, valid, qidx, bidx, block
+    )
+    ok = pvalid & cell_valid[:, None]
+    tq = t[qidx][:, None]
+    sure = (d <= tq - eps) & ok
+    band = (d <= tq + eps) & ok & ~sure
+    band_cell = band.any(axis=1)  # (C,)
+    flat = (sure & ~band_cell[:, None]).reshape(-1)
+    n_hits = jnp.sum(flat)
+    (pos,) = jnp.nonzero(flat, size=cap, fill_value=-1)
+    cell = pos // block
+    off = pos % block
+    hit_q = jnp.where(pos >= 0, qidx[cell], -1)
+    hit_pos = jnp.where(pos >= 0, bidx[cell] * block + off, -1)
+    nq = queries.shape[0]
+    band_counts = jnp.zeros(nq, jnp.int32).at[
+        jnp.clip(qidx, 0, nq - 1)
+    ].add(jnp.sum(band, axis=1, dtype=jnp.int32))
+    return hit_q, hit_pos, n_hits, band_cell, band_counts
+
+
 def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) -> dict:
     """The paper's figure of merit for a fused pass.  ``alive`` counts each
     query's own surviving blocks (the oracle's accounting, comparable across
@@ -708,8 +847,19 @@ def bss_query_batched(
     backend: str = "auto",
     interpret: bool | None = None,
     realisation: str = "adaptive",
+    precision: str = "fp32",
 ) -> tuple[list[list[int]], dict]:
     """Exact range search through the fused jitted engine.
+
+    ``precision="bf16"`` streams the bfloat16 corpus mirror through the
+    exact phase (half the corpus HBM traffic; fp32 accumulation unchanged)
+    and re-checks the boundary band ``|d16 - t| <= eps`` against the fp32
+    corpus — hits AND per-query distance counts stay bit-identical to the
+    fp32 engine (margin derivation: ``repro.core.precision``).  Stats gain
+    ``band_eps`` / ``recheck_tiles`` / ``per_query_recheck`` telemetry;
+    the paper's figure of merit (``per_query_dists``) is charged exactly as
+    in fp32 — re-checked points are reported separately, never double
+    counted.
 
     ``t`` is a scalar threshold or a (Q,) vector of PER-QUERY radii — the
     serving front mixes thresholds inside one micro-batch this way; each
@@ -746,24 +896,34 @@ def bss_query_batched(
 
         return sharded_query_batched(
             index.sharded(), queries, t, bq=bq, backend=backend,
-            interpret=interpret,
+            interpret=interpret, precision=precision,
         )
     if realisation not in ("adaptive", "dense"):
         raise ValueError(
             f"realisation must be adaptive|dense, got {realisation!r}"
         )
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     nq = queries.shape[0]
     if nq == 0:
-        return [], _batched_stats(
+        stats = _batched_stats(
             index,
             np.zeros((0, index.n_blocks), bool),
             np.zeros((0, index.n_blocks), bool),
         )
+        stats["precision"] = precision
+        return [], stats
     t_vec = _per_query_t(t, nq)
     dev = index.device
+    if precision == "bf16":
+        return _query_batched_bf16(
+            index, metric_eng, queries, t_vec, dev,
+            bq=bq, backend=backend, interpret=interpret,
+            realisation=realisation,
+        )
     if backend == "jnp":
         qj = jnp.asarray(queries)
         lb = np.asarray(
@@ -807,6 +967,7 @@ def bss_query_batched(
         results = [r.tolist() for r in per_query]
         tile_mask = np.asarray(_tile_survival(jnp.asarray(alive), bq))
         stats = _batched_stats(index, alive, tile_mask)
+        stats["precision"] = "fp32"
         return results, stats
     dist, alive, tile_mask = _query_batched_jit(
         metric_eng,
@@ -826,7 +987,130 @@ def bss_query_batched(
     per_query = np.split(orig, np.cumsum(counts)[:-1])
     results = [r.tolist() for r in per_query]
     stats = _batched_stats(index, np.asarray(alive), np.asarray(tile_mask))
+    stats["precision"] = "fp32"
     return results, stats
+
+
+def _bf16_stats(stats: dict, eps: float, recheck_tiles: int,
+                per_query_recheck: np.ndarray) -> dict:
+    """Augment an engine stats dict with the bf16 re-check telemetry.  The
+    existing keys (the paper's figure of merit included) are bit-identical
+    to the fp32 engine's; the re-check volume is reported SEPARATELY so the
+    count-parity contract survives."""
+    stats["precision"] = "bf16"
+    stats["band_eps"] = float(eps)
+    stats["recheck_tiles"] = int(recheck_tiles)
+    stats["per_query_recheck"] = np.asarray(per_query_recheck, np.int64)
+    stats["recheck_points_per_query"] = (
+        float(stats["per_query_recheck"].mean())
+        if stats["per_query_recheck"].size else 0.0
+    )
+    return stats
+
+
+def _query_batched_bf16(
+    index: BSSIndex,
+    metric_eng: str,
+    queries: np.ndarray,
+    t_vec: np.ndarray,
+    dev: BSSDeviceArrays,
+    *,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+    realisation: str,
+) -> tuple[list[list[int]], dict]:
+    """Host driver for the bf16 range phase (both realisations); see
+    ``_query_batched_bf16_jit`` for the dense scheme and
+    ``_cells_exact_bf16_jit`` for the sparse one."""
+    nq = queries.shape[0]
+    eps = index.bf16_margin()
+    data16 = index.device_bf16
+    qj = jnp.asarray(queries)
+    eps_j = jnp.float32(eps)
+    if backend == "jnp" and realisation != "dense":
+        lb = np.asarray(
+            _lower_bounds_jit(
+                metric_eng, qj, dev.pivots, dev.pairs, dev.deltas, dev.boxes,
+            )
+        )
+        alive = lb <= t_vec[:, None]
+        # Same adaptive branch condition as fp32 (it reads only the fp32
+        # bound phase), so both precisions pick the same realisation.
+        if alive.mean() <= _DENSE_ALIVE_FRAC:
+            qidx, bidx = np.nonzero(alive)  # sorted by (query, block)
+            c = len(qidx)
+            c_pad = _next_pow2(c)
+            qidx_p = np.pad(qidx, (0, c_pad - c)).astype(np.int32)
+            bidx_p = np.pad(bidx, (0, c_pad - c)).astype(np.int32)
+            cell_valid = jnp.asarray(np.arange(c_pad) < c)
+            tj = jnp.asarray(t_vec)
+            cap = _next_pow2(8 * max(nq, 1), lo=1024)
+            while True:
+                hit_q, hit_pos, n_hits, band_cell, band_counts = (
+                    _cells_exact_bf16_jit(
+                        metric_eng, qj, data16, dev.valid,
+                        jnp.asarray(qidx_p), jnp.asarray(bidx_p),
+                        cell_valid, tj, eps_j,
+                        block=index.block, cap=cap,
+                    )
+                )
+                n_hits = int(n_hits)
+                if n_hits <= cap:
+                    break
+                cap = _next_pow2(n_hits)
+            hit_q = np.asarray(hit_q)[:n_hits]
+            hit_pos = np.asarray(hit_pos)[:n_hits]
+            band_counts = np.asarray(band_counts)
+            # fp32 re-check of every band CELL through the fp32 engine's own
+            # sparse realisation — values and hit masks bit-identical to it.
+            band_cells = np.nonzero(np.asarray(band_cell))[0]
+            if band_cells.size:
+                q2 = qidx_p[band_cells]
+                b2 = bidx_p[band_cells]
+                c2 = len(band_cells)
+                c2_pad = _next_pow2(c2)
+                cap2 = _next_pow2(8 * max(nq, 1), lo=1024)
+                while True:
+                    rq, rp, n_r = _cells_exact_jit(
+                        metric_eng, qj, dev.data, dev.valid,
+                        jnp.asarray(np.pad(q2, (0, c2_pad - c2)), jnp.int32),
+                        jnp.asarray(np.pad(b2, (0, c2_pad - c2)), jnp.int32),
+                        jnp.asarray(np.arange(c2_pad) < c2), tj,
+                        block=index.block, cap=cap2,
+                    )
+                    n_r = int(n_r)
+                    if n_r <= cap2:
+                        break
+                    cap2 = _next_pow2(n_r)
+                hit_q = np.concatenate([hit_q, np.asarray(rq)[:n_r]])
+                hit_pos = np.concatenate([hit_pos, np.asarray(rp)[:n_r]])
+                order = np.lexsort((hit_pos, hit_q))
+                hit_q = hit_q[order]
+                hit_pos = hit_pos[order]
+            orig = index.perm[hit_pos]
+            counts = np.bincount(hit_q, minlength=nq)
+            per_query = np.split(orig, np.cumsum(counts)[:-1])
+            results = [r.tolist() for r in per_query]
+            tile_mask = np.asarray(_tile_survival(jnp.asarray(alive), bq))
+            stats = _batched_stats(index, alive, tile_mask)
+            return results, _bf16_stats(stats, eps, 0, band_counts)
+    hit, alive, tile_mask, recheck_tiles, band_counts = (
+        _query_batched_bf16_jit(
+            metric_eng, qj, jnp.asarray(t_vec), dev, data16, eps_j,
+            block=index.block, bq=bq, backend=backend, interpret=interpret,
+        )
+    )
+    hit = np.asarray(hit)
+    hit_q, hit_pos = np.nonzero(hit)  # row-major: positions ascending
+    orig = index.perm[hit_pos]
+    counts = hit.sum(axis=1)
+    per_query = np.split(orig, np.cumsum(counts)[:-1])
+    results = [r.tolist() for r in per_query]
+    stats = _batched_stats(index, np.asarray(alive), np.asarray(tile_mask))
+    return results, _bf16_stats(
+        stats, eps, int(recheck_tiles), np.asarray(band_counts)
+    )
 
 
 @partial(
@@ -872,6 +1156,66 @@ def _knn_round_jit(
     return cand_idx, cand_dist, kth, done, alive, tile_mask
 
 
+@partial(
+    jax.jit,
+    static_argnames=("metric_name", "block", "bq", "k", "backend", "interpret"),
+)
+def _knn_round_bf16_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    radii: jnp.ndarray,
+    lb: jnp.ndarray,
+    dev: BSSDeviceArrays,
+    data16: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    k: int,
+    block: int,
+    bq: int,
+    backend: str,
+    interpret: bool | None,
+):
+    """One bf16 radius-deepening round with fp32 boundary re-check.
+
+    The bf16 scan's own kth-smallest distance ``kth16`` bounds the fp32
+    kth within ``eps`` (sorted order statistics of pointwise-eps-close
+    vectors), so every member of the fp32 top-k satisfies
+    ``d16 <= kth16 + 2*eps`` — that band is re-checked against the fp32
+    corpus and the top-k re-taken over the fp32 values (+inf outside the
+    band; everything excluded is strictly beyond the fp32 kth, ties at the
+    kth included, so selection AND tie order match the fp32 round exactly).
+    The ``isfinite`` guard keeps the band inside the computed tile set:
+    when fewer than k cells are computed, ``kth16`` is +inf and the band is
+    exactly the computed cells — again the fp32 round's pool.  Outputs are
+    bit-identical to ``_knn_round_jit``, so the radius schedule (and with
+    it the per-query distance counts) never diverges."""
+    alive = lb <= radii[:, None]
+    tile_mask = _tile_survival(alive, bq)
+    d16 = _masked_exact_dists(
+        metric_name, queries, data16, dev.valid, tile_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )
+    neg16, _ = jax.lax.top_k(-d16, k)
+    kth16 = -neg16[:, -1]
+    bthr = jnp.where(jnp.isfinite(kth16), kth16 + 2.0 * eps, jnp.inf)
+    band = (d16 <= bthr[:, None]) & jnp.isfinite(d16)
+    band_blocks = band.reshape(queries.shape[0], -1, block).any(axis=2)
+    recheck_mask = _tile_survival(band_blocks, bq) & tile_mask
+    d32 = _masked_exact_dists(
+        metric_name, queries, dev.data, dev.valid, recheck_mask,
+        backend=backend, block=block, bq=bq, interpret=interpret,
+    )
+    dist = jnp.where(band, d32, jnp.inf)
+    neg, cand_idx = jax.lax.top_k(-dist, k)
+    cand_dist = -neg
+    kth = cand_dist[:, -1]
+    done = jnp.isfinite(kth) & ((kth <= radii) | jnp.all(alive, axis=1))
+    return (
+        cand_idx, cand_dist, kth, done, alive, tile_mask,
+        jnp.sum(recheck_mask), jnp.sum(band, axis=1, dtype=jnp.int32),
+    )
+
+
 @partial(jax.jit, static_argnames=("metric_name", "k", "block"))
 def _knn_round_cells_jit(
     metric_name: str,
@@ -911,6 +1255,48 @@ def _knn_round_cells_jit(
     return cand_idx, -neg
 
 
+@partial(jax.jit, static_argnames=("metric_name", "k", "block"))
+def _knn_round_cells_bf16_jit(
+    metric_name: str,
+    queries: jnp.ndarray,
+    data16: jnp.ndarray,
+    valid: jnp.ndarray,
+    qidx: jnp.ndarray,
+    bidx: jnp.ndarray,
+    cell_valid: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    k: int,
+    block: int,
+):
+    """bf16 half of a sparse kNN round: gather the alive cells from the
+    bf16 corpus, find each query's bf16 kth, and flag the (query, block)
+    cells holding any point inside the re-check band
+    ``d16 <= kth16 + 2*eps`` (containment argument in
+    ``_knn_round_bf16_jit``).  The caller then runs the UNCHANGED fp32
+    ``_knn_round_cells_jit`` over just those cells — identical gather
+    shapes, so its candidate values, indices and tie order are exactly the
+    fp32 round's.  Returns (band_cell (C,) bool, band_counts (Q,) int32)."""
+    d, pvalid = _gather_cell_dists(
+        metric_name, queries, data16, valid, qidx, bidx, block
+    )
+    d = jnp.where(pvalid & cell_valid[:, None], d, jnp.inf)
+    nq = queries.shape[0]
+    n_blocks = data16.shape[0] // block
+    dense16 = jnp.full((nq, n_blocks, block), jnp.inf, jnp.float32)
+    dense16 = dense16.at[qidx, bidx].min(d)
+    neg16, _ = jax.lax.top_k(-dense16.reshape(nq, -1), k)
+    kth16 = -neg16[:, -1]
+    bthr = jnp.where(jnp.isfinite(kth16), kth16 + 2.0 * eps, jnp.inf)
+    qi = jnp.clip(qidx, 0, nq - 1)
+    band = (d <= bthr[qi][:, None]) & jnp.isfinite(d)  # (C, block)
+    band_cell = band.any(axis=1)
+    band_counts = jnp.zeros(nq, jnp.int32).at[qi].add(
+        jnp.sum(band, axis=1, dtype=jnp.int32)
+    )
+    return band_cell, band_counts
+
+
 @partial(jax.jit, static_argnames=("metric_name", "bq", "backend", "interpret"))
 def _knn_lb_jit(
     metric_name: str,
@@ -939,9 +1325,18 @@ def bss_knn_batched(
     backend: str = "auto",
     interpret: bool | None = None,
     realisation: str = "adaptive",
+    precision: str = "fp32",
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Exact batched kNN: the range-search reduction run as jitted
     radius-deepening rounds over all queries at once.
+
+    ``precision="bf16"`` runs every round's scan over the bfloat16 corpus
+    mirror and re-checks the per-round radius band
+    ``d16 <= kth16 + 2*eps`` against the fp32 corpus
+    (``_knn_round_bf16_jit``) — candidates, distances, the radius schedule
+    and the per-query distance counts are bit-identical to the fp32 engine;
+    stats gain the re-check telemetry (``band_eps`` / ``recheck_tiles`` /
+    ``per_query_recheck``).
 
     ``realisation="dense"`` pins every jnp round to the dense masked pass
     (no sparse cell-gather): shapes depend only on (Q, N, k), so a serving
@@ -991,12 +1386,14 @@ def bss_knn_batched(
         return sharded_knn_batched(
             index.sharded(), queries, k, r0=r0, growth=growth,
             max_rounds=max_rounds, bq=bq, backend=backend,
-            interpret=interpret,
+            interpret=interpret, precision=precision,
         )
     if realisation not in ("adaptive", "dense"):
         raise ValueError(
             f"realisation must be adaptive|dense, got {realisation!r}"
         )
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
     backend = _resolve_backend(backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -1011,7 +1408,8 @@ def bss_knn_batched(
             {"rounds": 0, "pivot_dists_per_query": 0.0,
              "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
              "per_query_dists": np.zeros(0, np.int64),
-             "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
+             "tiles_computed": 0, "n_blocks": int(index.n_blocks),
+             "precision": precision},
         )
     # clamp to the VALID corpus size: with k_run > n_valid the kth distance
     # would stay inf and no round could ever finish early
@@ -1023,10 +1421,17 @@ def bss_knn_batched(
             {"rounds": 0, "pivot_dists_per_query": 0.0,
              "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
              "per_query_dists": np.zeros(nq, np.int64),
-             "tiles_computed": 0, "n_blocks": int(index.n_blocks)},
+             "tiles_computed": 0, "n_blocks": int(index.n_blocks),
+             "precision": precision},
         )
     dev = index.device
     qj = jnp.asarray(queries)
+    bf16 = precision == "bf16"
+    eps = index.bf16_margin() if bf16 else 0.0
+    eps_j = jnp.float32(eps)
+    data16 = index.device_bf16 if bf16 else None
+    recheck_pq = np.zeros(nq, np.int64)
+    recheck_tiles_total = 0
 
     # The (Q, B) planar bounds are radius-independent: compute them once
     # (through the selected backend) and reuse across every round — the
@@ -1060,14 +1465,34 @@ def bss_knn_batched(
         if (backend == "jnp" and realisation != "dense"
                 and alive_host.mean() <= _DENSE_ALIVE_FRAC):
             # sparse round: gather only the alive cells (adaptive, like the
-            # range path); done/alive/tiles derived on host
+            # range path; the branch condition reads only the fp32 bound
+            # phase, so both precisions take it identically);
+            # done/alive/tiles derived on host
             qidx, bidx = np.nonzero(alive_host)
             c = len(qidx)
             c_pad = _next_pow2(c)
+            qidx_p = np.pad(qidx, (0, c_pad - c)).astype(np.int32)
+            bidx_p = np.pad(bidx, (0, c_pad - c)).astype(np.int32)
+            if bf16:
+                # bf16 scan picks the band cells; the UNCHANGED fp32 round
+                # below then runs over just those cells — its values, tie
+                # order and outputs are exactly the fp32 round's.
+                band_cell, band_counts = _knn_round_cells_bf16_jit(
+                    metric_eng, qj, data16, dev.valid,
+                    jnp.asarray(qidx_p), jnp.asarray(bidx_p),
+                    jnp.asarray(np.arange(c_pad) < c), eps_j,
+                    k=k_run, block=index.block,
+                )
+                sel = np.nonzero(np.asarray(band_cell))[0]
+                recheck_pq += np.where(~done, np.asarray(band_counts), 0)
+                qidx_p, bidx_p = qidx_p[sel], bidx_p[sel]
+                c = len(sel)
+                c_pad = _next_pow2(c)
+                qidx_p = np.pad(qidx_p, (0, c_pad - c)).astype(np.int32)
+                bidx_p = np.pad(bidx_p, (0, c_pad - c)).astype(np.int32)
             ci, cd = _knn_round_cells_jit(
                 metric_eng, qj, dev.data, dev.valid,
-                jnp.asarray(np.pad(qidx, (0, c_pad - c)), jnp.int32),
-                jnp.asarray(np.pad(bidx, (0, c_pad - c)), jnp.int32),
+                jnp.asarray(qidx_p), jnp.asarray(bidx_p),
                 jnp.asarray(np.arange(c_pad) < c),
                 k=k_run, block=index.block,
             )
@@ -1080,6 +1505,22 @@ def bss_knn_batched(
             tiles_round = int(
                 np.asarray(_tile_survival(jnp.asarray(alive_host), bq)).sum()
             )
+        elif bf16:
+            (ci, cd, kth, dn, alive, tile_mask, rtiles, band_counts) = (
+                _knn_round_bf16_jit(
+                    metric_eng, qj, jnp.asarray(radii), lb_dev, dev,
+                    data16, eps_j,
+                    k=k_run, block=index.block, bq=bq, backend=backend,
+                    interpret=interpret,
+                )
+            )
+            ci, cd, kth, dn, alive = (
+                np.asarray(ci), np.asarray(cd), np.asarray(kth),
+                np.asarray(dn), np.asarray(alive),
+            )
+            tiles_round = int(np.asarray(tile_mask).sum())
+            recheck_tiles_total += int(rtiles)
+            recheck_pq += np.where(~done, np.asarray(band_counts), 0)
         else:
             ci, cd, kth, dn, alive, tile_mask = _knn_round_jit(
                 metric_eng, qj, jnp.asarray(radii), lb_dev, dev,
@@ -1130,7 +1571,10 @@ def bss_knn_batched(
         "per_query_dists": n_pivots + total_exact,
         "tiles_computed": tiles_total,
         "n_blocks": int(index.n_blocks),
+        "precision": precision,
     }
+    if bf16:
+        _bf16_stats(stats, eps, recheck_tiles_total, recheck_pq)
     orig = np.where(np.isfinite(cand_dist), index.perm[cand_idx], -1)
     if k_run < k:  # corpus smaller than k: pad out to the requested width
         orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)

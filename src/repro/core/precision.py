@@ -1,0 +1,134 @@
+"""Mixed-precision margins for the bf16 exact phase.
+
+The engines can stream a bfloat16 mirror of the corpus through the masked
+tile kernels (halving corpus HBM traffic; accumulation stays fp32 — every
+kernel upcasts on entry) WITHOUT giving up exactness, because every
+threshold comparison against a bf16-phase distance is widened by a
+conservative margin ``eps`` and the resulting boundary band is re-checked
+against the fp32 corpus.  This module derives that margin.
+
+Derivation (recorded in ROADMAP.md):  write ``p~`` for the bf16 rounding of
+corpus point ``p``.  All supermetrics here are genuine metrics, so the
+triangle inequality gives ``|d(q, p~) - d(q, p)| <= d(p, p~)`` for every
+query ``q``.  At mirror time we compute ``r_max = max_p d(p, p~)`` EXACTLY,
+in float64, over the real (valid) corpus rows — no modelling of bf16's
+2^-9 relative step is needed; the realised rounding displacement is
+measured per point in the metric itself.  The engine evaluates
+``d16 ~= d(q, p~)`` in fp32 arithmetic, so a second (much smaller) term
+bounds fp32 accumulation noise: ``ARITH_ULPS * eps_f32 * sqrt(dim) *
+scale`` with a per-metric magnitude ``scale``.  The margin
+
+    eps = 2 * r_max + ARITH_ULPS * eps_f32 * sqrt(dim) * scale
+
+then guarantees, with the factor-2 headroom on the provable term:
+
+* range:  every true hit (``d(q,p) <= t``) has ``d16 <= t + eps`` — the
+  bf16 phase can never falsely exclude; and every sure hit
+  (``d16 <= t - eps``) satisfies ``d(q,p) <= t`` — no fp32 re-check needed
+  outside the band ``t - eps < d16 <= t + eps``.
+* kNN:  ``|kth16 - kth32| <= eps`` (sorted order statistics of two
+  pointwise-eps-close vectors), so the true top-k all lie inside the band
+  ``d16 <= kth16 + 2*eps``.
+
+bf16 rounding dominates: its relative step (2^-9) exceeds fp32's (2^-24)
+by ~3e4, so the measured ``2*r_max`` term is the margin for any realistic
+corpus and the arithmetic term is a positivity floor.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+__all__ = ["ARITH_ULPS", "bf16_round_np", "bf16_margin"]
+
+# headroom multiplier on fp32 accumulation noise (heuristic floor; the
+# property tests in tests/test_bf16_precision.py exercise it across random
+# corpora on all four supermetrics)
+ARITH_ULPS = 64.0
+
+_F32_EPS = float(np.finfo(np.float32).eps)
+_EPS = 1e-12  # probability-simplex guard, mirrors npdist._EPS
+
+
+def bf16_round_np(a: np.ndarray) -> np.ndarray:
+    """Round-to-nearest-even through bfloat16, returned as float32 — the
+    exact values the engine's bf16 corpus mirror holds."""
+    a32 = np.asarray(a, np.float32)
+    try:
+        import ml_dtypes  # bundled with jax
+
+        return a32.astype(ml_dtypes.bfloat16).astype(np.float32)
+    except (ImportError, TypeError):  # pragma: no cover - defensive
+        import jax.numpy as jnp
+
+        return np.asarray(
+            jnp.asarray(a32).astype(jnp.bfloat16).astype(jnp.float32)
+        )
+
+
+def _xlogx(v: np.ndarray) -> np.ndarray:
+    return np.where(v > _EPS, v * np.log(np.maximum(v, _EPS)), 0.0)
+
+
+def _rowwise(metric_name: str, a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """d(a[i], b[i]) per row, float64, matching ``npdist.pairwise_np``'s
+    guards exactly (these ARE the diagonal of the oracle)."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    if metric_name == "l2":
+        return np.linalg.norm(a - b, axis=1)
+    if metric_name == "cosine":
+        an = a / np.maximum(np.linalg.norm(a, axis=1, keepdims=True), _EPS)
+        bn = b / np.maximum(np.linalg.norm(b, axis=1, keepdims=True), _EPS)
+        cos = np.clip(np.sum(an * bn, axis=1), -1.0, 1.0)
+        return np.sqrt(np.maximum(2.0 - 2.0 * cos, 0.0))
+    if metric_name == "jsd":
+        m = 0.5 * (a + b)
+        js = np.sum(0.5 * _xlogx(a) + 0.5 * _xlogx(b) - _xlogx(m), axis=1)
+        return np.sqrt(np.maximum(js, 0.0) / np.log(2.0))
+    if metric_name == "triangular":
+        s = np.maximum(a + b, _EPS)
+        return np.sqrt(np.maximum(0.5 * np.sum((a - b) ** 2 / s, axis=1), 0.0))
+    # power transforms and anything else: chunked diagonal of the oracle
+    from repro.core.npdist import pairwise_np
+
+    out = np.empty(a.shape[0], np.float64)
+    chunk = 64
+    for lo in range(0, a.shape[0], chunk):
+        hi = min(lo + chunk, a.shape[0])
+        out[lo:hi] = np.diagonal(pairwise_np(metric_name, a[lo:hi], b[lo:hi]))
+    return out
+
+
+def _arith_scale(metric_name: str, data64: np.ndarray) -> float:
+    """Magnitude scale for the fp32-accumulation noise term."""
+    if metric_name in ("jsd", "triangular"):
+        return 1.0  # distances live in [0, 1]
+    if metric_name == "cosine":
+        return 2.0  # distances live in [0, 2]
+    norms = np.linalg.norm(data64, axis=1)
+    return 1.0 + (float(norms.max()) if norms.size else 0.0)
+
+
+def bf16_margin(
+    metric_name: str, data: np.ndarray, valid: np.ndarray | None = None
+) -> float:
+    """Conservative comparison margin for bf16-phase distances against the
+    corpus ``data`` (engine space: already normalised for cosine-as-l2),
+    restricted to ``valid`` rows (padding rows are never hits and must not
+    inflate the band)."""
+    data = np.asarray(data, np.float32)
+    if valid is not None:
+        data = data[np.asarray(valid, bool)]
+    dim = int(data.shape[1]) if data.ndim == 2 else 1
+    if data.size == 0:
+        return float(_F32_EPS)
+    data64 = np.asarray(data, np.float64)
+    r = _rowwise(metric_name, data64, bf16_round_np(data).astype(np.float64))
+    eps = 2.0 * float(r.max()) + ARITH_ULPS * _F32_EPS * math.sqrt(dim) * (
+        _arith_scale(metric_name, data64)
+    )
+    # round UP into fp32 so the jitted comparisons inherit the guarantee
+    return float(np.nextafter(np.float32(eps), np.float32(np.inf)))

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lrt import MonotoneTree, _MNode
+from repro.core.precision import bf16_margin as _bf16_margin
 from repro.core.tree import PartitionTree, _Node
 from repro.kernels.tiles import TILE_BLOCK
 
@@ -190,8 +191,32 @@ class _Level:
     leaf_parent_slot: np.ndarray
 
 
+class _LeafBf16Mixin:
+    """Lazy bf16 mirror of the leaf-bucket table + its comparison margin.
+
+    Only the LEAF data gets a bf16 twin: the walk's exclusion predicates
+    (reference/pivot distances, cover radii, hyperplane margins) stay fp32 so
+    pruning decisions — and with them the analytic distance counts, the
+    paper's figure of merit — are bit-identical across precisions.  The
+    margin is measured over valid leaf rows only (padding must not inflate
+    the re-check band)."""
+
+    @property
+    def leaf_bf16(self) -> jnp.ndarray:
+        if self._leaf16 is None:
+            self._leaf16 = jnp.asarray(self.leaf.data, jnp.bfloat16)
+        return self._leaf16
+
+    def bf16_eps(self) -> float:
+        if self._bf16_eps is None:
+            self._bf16_eps = _bf16_margin(
+                self.metric, self.leaf.data, self.leaf.valid
+            )
+        return self._bf16_eps
+
+
 @dataclasses.dataclass
-class EncodedForest:
+class EncodedForest(_LeafBf16Mixin):
     """Array encoding of a ``PartitionTree`` (any of the 12 variants)."""
 
     variant: str
@@ -200,6 +225,12 @@ class EncodedForest:
     levels: list[_Level]
     leaf: _LeafTable
     _device: ForestDev | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _leaf16: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _bf16_eps: float | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
 
@@ -365,7 +396,7 @@ class _MLevel:
 
 
 @dataclasses.dataclass
-class EncodedMonotone:
+class EncodedMonotone(_LeafBf16Mixin):
     """Array encoding of a ``MonotoneTree`` (closer/median/pca/lrt splits)."""
 
     partition: str
@@ -377,6 +408,12 @@ class EncodedMonotone:
     levels: list[_MLevel]
     leaf: _LeafTable
     _device: MonotoneDev | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _leaf16: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+    _bf16_eps: float | None = dataclasses.field(
         default=None, repr=False, compare=False
     )
 

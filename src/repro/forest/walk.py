@@ -32,6 +32,15 @@ merit counts the walk's own decisions, identically to the oracle.  Result
 sets and per-query counts therefore match the host walks bit-for-bit
 whenever float32 and float64 agree on every predicate — the same contract
 ``bss_query_batched`` has with its oracle.
+
+``precision="bf16"`` streams the bfloat16 leaf mirror through the exact
+phase instead (halving its HBM traffic — leaf buckets dominate the walk's
+bytes) with every threshold comparison widened by the measured margin of
+``repro.core.precision``; points in the boundary band are re-checked
+against the fp32 leaf table through the same masked kernels, so hit sets
+are bit-identical to the fp32 walk.  The walk's exclusion predicates and
+their reference tables stay fp32 — pruning decisions, and with them the
+analytic per-query counts, never depend on the precision choice.
 """
 
 from __future__ import annotations
@@ -44,6 +53,7 @@ import numpy as np
 
 from repro.core import exclusion, projection
 from repro.core.distances import get_metric
+from repro.core.flat_index import _bf16_stats
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.core.backends import resolve_backend, tile_survival
 from repro.forest.encode import (
@@ -106,20 +116,48 @@ def _leaf_exact(
     leaves: LeafDev,
     leaf_alive: jnp.ndarray,
     t: jnp.ndarray,
+    leaf16: jnp.ndarray | None,
+    eps: jnp.ndarray,
     *,
     backend: str,
     interpret: bool | None,
-) -> jnp.ndarray:
-    """(Q, leaf_rows) hit bitmask of the final exact-check phase."""
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Final exact-check phase: (hit bitmask, per-query re-checked points,
+    re-checked tiles).  With ``leaf16`` the distances come from the bf16
+    leaf mirror and only the band ``t - eps < d16 <= t + eps`` is re-run
+    against the fp32 table.  The re-check reuses the same masked-kernel
+    machinery over the same fp32 rows, and a computed tile's values do not
+    depend on the mask — so band cells see the exact fp32 values the fp32
+    walk computes, and the hit bitmask is bit-identical to it."""
     nq = queries.shape[0]
     if leaf_alive.shape[1] == 0:
-        return jnp.zeros((nq, leaves.leaf_data.shape[0]), bool)
+        return (
+            jnp.zeros((nq, leaves.leaf_data.shape[0]), bool),
+            jnp.zeros((nq,), jnp.int32),
+            jnp.int32(0),
+        )
     row_alive = _owner_alive(leaf_alive, leaves.leaf_of_row)
-    d = _masked_dists(
-        metric_name, queries, leaves.leaf_data, row_alive,
+    ok = leaves.leaf_valid[None, :] & row_alive
+    if leaf16 is None:
+        d = _masked_dists(
+            metric_name, queries, leaves.leaf_data, row_alive,
+            backend=backend, interpret=interpret,
+        )
+        return (d <= t) & ok, jnp.zeros((nq,), jnp.int32), jnp.int32(0)
+    d16 = _masked_dists(
+        metric_name, queries, leaf16, row_alive,
         backend=backend, interpret=interpret,
     )
-    return (d <= t) & leaves.leaf_valid[None, :] & row_alive
+    sure = (d16 <= t - eps) & ok  # final by the margin guarantee
+    band = (d16 <= t + eps) & ok & ~sure
+    d32 = _masked_dists(
+        metric_name, queries, leaves.leaf_data, band,
+        backend=backend, interpret=interpret,
+    )
+    hit = sure | (band & (d32 <= t))
+    band_blocks = band.reshape(nq, -1, TILE_BLOCK).any(axis=2)
+    rtiles = jnp.sum(tile_survival(band_blocks, TILE_BQ))
+    return hit, jnp.sum(band, axis=1, dtype=jnp.int32), rtiles
 
 
 def _count_alive(alive: jnp.ndarray, weight: jnp.ndarray) -> jnp.ndarray:
@@ -153,12 +191,17 @@ def _forest_walk_jit(
     queries: jnp.ndarray,
     t: jnp.ndarray,
     dev: ForestDev,
+    leaf16: jnp.ndarray | None,
+    eps: jnp.ndarray,
     *,
     mechanism: str,
     backend: str,
     interpret: bool | None,
 ):
-    """Returns (per-level ref-hit bitmasks, leaf-row hit bitmask, counts)."""
+    """Returns (per-level ref-hit bitmasks, leaf-row hit bitmask, counts,
+    per-query band sizes, re-checked tiles).  ``leaf16``/``eps`` select the
+    bf16 leaf exact phase (None => plain fp32; the None-vs-array pytree
+    difference keys the retrace)."""
     nq = queries.shape[0]
     counts = jnp.zeros((nq,), jnp.int32)
     ref_hits = []
@@ -206,11 +249,11 @@ def _forest_walk_jit(
 
     leaf_alive = jnp.concatenate(leaf_alive_parts, axis=1)
     counts = counts + _count_alive(leaf_alive, dev.leaves.leaf_len)
-    leaf_hit = _leaf_exact(
-        metric_name, queries, dev.leaves, leaf_alive, t,
+    leaf_hit, band_counts, rtiles = _leaf_exact(
+        metric_name, queries, dev.leaves, leaf_alive, t, leaf16, eps,
         backend=backend, interpret=interpret,
     )
-    return tuple(ref_hits), leaf_hit, counts
+    return tuple(ref_hits), leaf_hit, counts, band_counts, rtiles
 
 
 def forest_range_search(
@@ -221,25 +264,37 @@ def forest_range_search(
     *,
     backend: str = "auto",
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> tuple[list[list[int]], dict]:
     """Batched exact range search over an encoded partition tree.
 
     Returns (per-query hit lists of original dataset indices, stats).
     ``stats["per_query_dists"]`` is the paper's figure of merit — identical
     to ``DistanceCounter.per_query`` of the host ``tree.range_search``
-    whenever float32/float64 agree on every predicate."""
+    whenever float32/float64 agree on every predicate.
+
+    ``precision="bf16"`` runs the leaf exact phase against the bfloat16
+    leaf mirror with fp32 boundary re-check: hit lists and counts are
+    bit-identical to the fp32 walk, the re-check volume is reported under
+    the bf16 stats keys (see ``bss_query_batched``)."""
     if mechanism not in (HILBERT, HYPERBOLIC):
         raise ValueError(mechanism)
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"unknown precision: {precision!r}")
     backend = resolve_backend(backend)
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:
-        return [], _stats(forest, np.zeros(0, np.int64), backend)
-    ref_hits, leaf_hit, counts = _forest_walk_jit(
+        return [], _stats(forest, np.zeros(0, np.int64), backend, precision)
+    bf16 = precision == "bf16"
+    eps = forest.bf16_eps() if bf16 else 0.0
+    ref_hits, leaf_hit, counts, band_counts, rtiles = _forest_walk_jit(
         forest.metric,
         jnp.asarray(queries),
         jnp.float32(t),
         forest.device,
+        forest.leaf_bf16 if bf16 else None,
+        jnp.float32(eps),
         mechanism=mechanism,
         backend=backend,
         interpret=interpret,
@@ -254,12 +309,13 @@ def forest_range_search(
     ids = forest.leaf.member_of_row[r]
     for qi, rid in zip(q, ids):
         results[qi].append(int(rid))
-    return results, _stats(
-        forest, np.asarray(counts).astype(np.int64), backend
-    )
+    stats = _stats(forest, np.asarray(counts).astype(np.int64), backend, precision)
+    if bf16:
+        _bf16_stats(stats, eps, int(rtiles), np.asarray(band_counts))
+    return results, stats
 
 
-def _stats(enc, per_query: np.ndarray, backend: str) -> dict:
+def _stats(enc, per_query: np.ndarray, backend: str, precision: str) -> dict:
     return {
         "per_query_dists": per_query,
         "dists_per_query": float(per_query.mean()) if per_query.size else 0.0,
@@ -267,6 +323,7 @@ def _stats(enc, per_query: np.ndarray, backend: str) -> dict:
         "n_nodes": enc.n_nodes,
         "n_leaves": enc.leaf.n_leaves,
         "backend": backend,
+        "precision": precision,
     }
 
 
@@ -284,12 +341,15 @@ def _monotone_walk_jit(
     queries: jnp.ndarray,
     t: jnp.ndarray,
     dev: MonotoneDev,
+    leaf16: jnp.ndarray | None,
+    eps: jnp.ndarray,
     *,
     mechanism: str,
     backend: str,
     interpret: bool | None,
 ):
-    """Returns (root hit, per-level p2-hit bitmasks, leaf-row hits, counts).
+    """Returns (root hit, per-level p2-hit bitmasks, leaf-row hits, counts,
+    per-query band sizes, re-checked tiles).
 
     One NEW distance per (query, visited node) — the inherited pivot's
     distance rides the frontier, exactly the Monotonous-Bisector-Tree
@@ -347,11 +407,11 @@ def _monotone_walk_jit(
 
     leaf_alive = jnp.concatenate(leaf_alive_parts, axis=1)
     counts = counts + _count_alive(leaf_alive, dev.leaves.leaf_len)
-    leaf_hit = _leaf_exact(
-        metric_name, queries, dev.leaves, leaf_alive, t,
+    leaf_hit, band_counts, rtiles = _leaf_exact(
+        metric_name, queries, dev.leaves, leaf_alive, t, leaf16, eps,
         backend=backend, interpret=interpret,
     )
-    return root_hit, tuple(p2_hits), leaf_hit, counts
+    return root_hit, tuple(p2_hits), leaf_hit, counts, band_counts, rtiles
 
 
 def monotone_range_search(
@@ -362,26 +422,34 @@ def monotone_range_search(
     *,
     backend: str = "auto",
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> tuple[list[list[int]], dict]:
     """Batched exact range search over an encoded monotone tree; counterpart
     of ``lrt.range_search_monotone`` with the same mechanism restriction
-    (Hyperbolic is only sound for the 'closer' split)."""
+    (Hyperbolic is only sound for the 'closer' split).  ``precision`` as in
+    ``forest_range_search``."""
     if mechanism == HYPERBOLIC and forest.partition != "closer":
         raise ValueError(
             "hyperbolic exclusion is only sound for the 'closer' split"
         )
     if mechanism not in (HILBERT, HYPERBOLIC):
         raise ValueError(mechanism)
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"unknown precision: {precision!r}")
     backend = resolve_backend(backend)
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:
-        return [], _stats(forest, np.zeros(0, np.int64), backend)
-    root_hit, p2_hits, leaf_hit, counts = _monotone_walk_jit(
+        return [], _stats(forest, np.zeros(0, np.int64), backend, precision)
+    bf16 = precision == "bf16"
+    eps = forest.bf16_eps() if bf16 else 0.0
+    root_hit, p2_hits, leaf_hit, counts, band_counts, rtiles = _monotone_walk_jit(
         forest.metric,
         jnp.asarray(queries),
         jnp.float32(t),
         forest.device,
+        forest.leaf_bf16 if bf16 else None,
+        jnp.float32(eps),
         mechanism=mechanism,
         backend=backend,
         interpret=interpret,
@@ -398,6 +466,7 @@ def monotone_range_search(
     ids = forest.leaf.member_of_row[r]
     for qi, rid in zip(q, ids):
         results[qi].append(int(rid))
-    return results, _stats(
-        forest, np.asarray(counts).astype(np.int64), backend
-    )
+    stats = _stats(forest, np.asarray(counts).astype(np.int64), backend, precision)
+    if bf16:
+        _bf16_stats(stats, eps, int(rtiles), np.asarray(band_counts))
+    return results, stats

@@ -13,6 +13,12 @@ avoid recomputing it bn (resp. bm) times.  The mixture-entropy broadcast is
 reduced in K-chunks of ``_K_CHUNK`` lanes so the (bm, bn, Kc) transient is
 bounded at 4 MiB even for 128x128 tiles (the BSS masked exact phase ties
 bm/bn to the query-tile / block sizes) and large metric-space dims.
+
+Dtype-parametrised like the rest of the family (``pairwise_dist``, "Mixed
+precision"): operands stream at their storage dtype and the tile kernel
+upcasts to fp32 on entry, so a bfloat16 Y (the engines' bf16 corpus
+mirror) halves the streamed bytes while the log/entropy arithmetic and
+accumulation stay fp32.
 """
 
 from __future__ import annotations

@@ -30,6 +30,22 @@ around whichever tile kernel the metric resolves to, so every supermetric
 gets the same "block pruned == grid cell skipped" guarantee.  Cosine never
 appears here: the engine serves it as l2 over unit-normalised vectors
 (exact, per the supermetric cosine definition).
+
+Mixed precision
+---------------
+The family is dtype-parametrised through jit: operands keep their storage
+dtype across the HBM->VMEM stream and every tile kernel upcasts to fp32 ON
+ENTRY (``.astype`` + ``preferred_element_type``), so accumulation is always
+fp32 and the output is always an fp32 distance tile.  The bf16 exact phase
+(``precision="bf16"`` in the engines) exploits exactly this: ``y`` is the
+bfloat16 corpus mirror (half the streamed bytes — the dominant traffic),
+``x`` stays fp32 (queries are a rounding error of the traffic, and keeping
+them exact halves the comparison margin).  bf16 operands meet the TPU
+minimum tile (16, 128) trivially at bn = 128; the comparison-margin
+machinery that makes the halved precision EXACT lives in
+``repro.core.precision`` and the engine drivers, not here — these kernels
+compute the same function regardless of the storage dtype, just at the
+storage dtype's rounding of ``y``.
 """
 
 from __future__ import annotations

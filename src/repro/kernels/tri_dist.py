@@ -16,6 +16,12 @@ This module holds only the tile kernel; the grid/padding plumbing and the
 jitted entry points live in ``pairwise_dist`` (``pairwise_kernel_call`` /
 ``masked_pairwise_kernel_call`` dispatch on ``"triangular"``) so every
 metric shares one copy of the call machinery.
+
+Dtype-parametrised like the rest of the family (``pairwise_dist``, "Mixed
+precision"): operands stream at their storage dtype and the tile kernel
+upcasts to fp32 on entry, so a bfloat16 Y (the engines' bf16 corpus
+mirror) halves the streamed bytes while the division and accumulation
+stay fp32.
 """
 
 from __future__ import annotations

@@ -57,6 +57,7 @@ from repro.core.backends import resolve_backend, tile_survival
 from repro.core.flat_index import (
     _DEFAULT_BQ,
     _batched_stats,
+    _bf16_stats,
     _engine_metric,
     _engine_queries,
     _fused_lower_bounds,
@@ -142,7 +143,22 @@ class ShardedBSSIndex:
             boxes=put(jnp.asarray(boxes, jnp.float32), P(axes, None, None)),
             valid=put(jnp.asarray(valid), P(axes)),
         )
+        self._host_data = data  # padded layout, for the lazy bf16 mirror
+        self._data16: jnp.ndarray | None = None
         self._fns: dict = {}
+
+    @property
+    def dev_data16(self) -> jnp.ndarray:
+        """Sharded bfloat16 corpus mirror (lazy — only bf16 queries pay for
+        it), partitioned exactly like ``dev.data``.  The comparison margin
+        comes from ``self.index.bf16_margin()``: it is measured over the
+        VALID rows only, which the block-count padding never adds to."""
+        if self._data16 is None:
+            self._data16 = jax.device_put(
+                jnp.asarray(self._host_data, jnp.bfloat16),
+                named(self.mesh, P(self.axes, None)),
+            )
+        return self._data16
 
     # ------------------------------------------------------------- callables
 
@@ -174,6 +190,58 @@ class ShardedBSSIndex:
                     P(), P(), P(),
                 ),
                 out_specs=(P(None, axes), P(None, axes), P(None, axes)),
+                check_rep=False,
+            ))
+        return self._fns[key]
+
+    def _range_bf16_fn(self, metric: str, backend: str, bq: int, interpret):
+        key = ("range16", metric, backend, bq, interpret)
+        if key not in self._fns:
+            axes, block = self.axes, self.index.block
+
+            def local(q, t, eps, data_l, valid_l, boxes_l, pivots, pairs,
+                      deltas, data16_l):
+                # shard-local bf16 scan + fp32 boundary re-check: the same
+                # sure/band/re-check scheme as _query_batched_bf16_jit, run
+                # over this shard's blocks.  The re-check is purely local
+                # (a band cell's fp32 value lives on the shard that owns
+                # the block), so no extra collectives appear — the bitmask
+                # concatenation below IS the global fp32 merge.
+                lb = _fused_lower_bounds(
+                    metric, q, pivots, pairs, deltas, boxes_l,
+                    backend=backend, bq=bq, interpret=interpret,
+                )
+                alive = lb <= t[:, None]
+                tmask = tile_survival(alive, bq)
+                d16 = _masked_exact_dists(
+                    metric, q, data16_l, valid_l, tmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )
+                t_col = t[:, None]
+                sure = d16 <= t_col - eps
+                band = (d16 <= t_col + eps) & ~sure
+                band_blocks = band.reshape(q.shape[0], -1, block).any(axis=2)
+                rmask = tile_survival(band_blocks, bq) & tmask
+                d32 = _masked_exact_dists(
+                    metric, q, data_l, valid_l, rmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )
+                hit = sure | (band & (d32 <= t_col))
+                return (
+                    hit, alive, tmask, rmask,
+                    jnp.sum(band, axis=1, dtype=jnp.int32)[:, None],
+                )
+
+            self._fns[key] = jax.jit(shard_map(
+                local, self.mesh,
+                in_specs=(
+                    P(), P(), P(), P(axes, None), P(axes),
+                    P(axes, None, None), P(), P(), P(), P(axes, None),
+                ),
+                out_specs=(
+                    P(None, axes), P(None, axes), P(None, axes),
+                    P(None, axes), P(None, axes),
+                ),
                 check_rep=False,
             ))
         return self._fns[key]
@@ -243,6 +311,78 @@ class ShardedBSSIndex:
             ))
         return self._fns[key]
 
+    def _knn_round_bf16_fn(self, metric: str, backend: str, bq: int,
+                           interpret, k: int):
+        key = ("knn16", metric, backend, bq, interpret, k)
+        if key not in self._fns:
+            axes, block = self.axes, self.index.block
+            mesh, rows = self.mesh, self.rows_per_shard
+            k_local = min(k, rows)
+
+            def local(q, radii, eps, lb_l, data_l, valid_l, data16_l):
+                # bf16 scan, then a FIRST all-gather to form the GLOBAL bf16
+                # kth — the re-check band must be global or a shard whose
+                # own kth16 is loose would re-check too little.  Band cells
+                # are re-checked locally against the fp32 shard, and the
+                # per-shard top_k over the band-restricted fp32 values feeds
+                # the STANDARD merge: every cell at or under the global fp32
+                # kth is in the band (margin containment), cells outside are
+                # strictly beyond it, and shard-major concatenation keeps
+                # the fp32 engine's tie order — outputs are bit-identical
+                # to _knn_round_fn.
+                alive = lb_l <= radii[:, None]
+                tmask = tile_survival(alive, bq)
+                d16 = _masked_exact_dists(
+                    metric, q, data16_l, valid_l, tmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )
+                nq = q.shape[0]
+                neg16, _ = jax.lax.top_k(-d16, k_local)
+                allneg16 = jax.lax.all_gather(neg16, axes)  # (S, Q, k_local)
+                allneg16 = jnp.moveaxis(allneg16, 0, 1).reshape(nq, -1)
+                merged16, _ = jax.lax.top_k(allneg16, k)
+                kth16 = -merged16[:, -1]
+                bthr = jnp.where(
+                    jnp.isfinite(kth16), kth16 + 2.0 * eps, jnp.inf
+                )
+                band = (d16 <= bthr[:, None]) & jnp.isfinite(d16)
+                band_blocks = band.reshape(nq, -1, block).any(axis=2)
+                rmask = tile_survival(band_blocks, bq) & tmask
+                d32 = _masked_exact_dists(
+                    metric, q, data_l, valid_l, rmask,
+                    backend=backend, block=block, bq=bq, interpret=interpret,
+                )
+                dist = jnp.where(band, d32, jnp.inf)
+                neg, li = jax.lax.top_k(-dist, k_local)
+                off = jnp.int32(0)
+                for a in axes:
+                    off = off * mesh.shape[a] + jax.lax.axis_index(a)
+                gi = li + off * rows
+                allneg = jax.lax.all_gather(neg, axes)
+                allidx = jax.lax.all_gather(gi, axes)
+                allneg = jnp.moveaxis(allneg, 0, 1).reshape(nq, -1)
+                allidx = jnp.moveaxis(allidx, 0, 1).reshape(nq, -1)
+                neg2, sel = jax.lax.top_k(allneg, k)
+                cand_idx = jnp.take_along_axis(allidx, sel, axis=1)
+                return (
+                    cand_idx, -neg2, alive, tmask, rmask,
+                    jnp.sum(band, axis=1, dtype=jnp.int32)[:, None],
+                )
+
+            self._fns[key] = jax.jit(shard_map(
+                local, self.mesh,
+                in_specs=(
+                    P(), P(), P(), P(None, axes), P(axes, None), P(axes),
+                    P(axes, None),
+                ),
+                out_specs=(
+                    P(None, None), P(None, None), P(None, axes),
+                    P(None, axes), P(None, axes), P(None, axes),
+                ),
+                check_rep=False,
+            ))
+        return self._fns[key]
+
 
 def shard_bss(index: BSSIndex, mesh: Mesh) -> ShardedBSSIndex:
     """Partition a built index's blocks over the mesh (see class docs)."""
@@ -262,6 +402,7 @@ def sharded_query_batched(
     bq: int = _DEFAULT_BQ,
     backend: str = "auto",
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> tuple[list[list[int]], dict]:
     """Exact range search, one fused shard-local pass per device.
 
@@ -273,8 +414,12 @@ def sharded_query_batched(
     identical to ``bss_query_batched`` / the numpy oracle: the per-shard
     planar bounds are the same elementwise math over a block slice, and the
     concatenated hit bitmask is extracted exactly like the single-device
-    dense path's."""
+    dense path's.  ``precision="bf16"`` runs the shard-local bf16 scan with
+    fp32 boundary re-check (``_range_bf16_fn``) — same results, same
+    counts, with the re-check telemetry added to stats."""
     backend = resolve_backend(backend)
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
     index = sidx.index
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -283,14 +428,25 @@ def sharded_query_batched(
         empty = np.zeros((0, index.n_blocks), bool)
         stats = _batched_stats(index, empty, empty)
         stats["n_shards"] = sidx.n_shards
+        stats["precision"] = precision
         return [], stats
     t_vec = _per_query_t(t, nq)
-    fn = sidx._range_fn(metric_eng, backend, bq, interpret)
-    hit, alive, tmask = fn(
-        jnp.asarray(queries), jnp.asarray(t_vec),
-        sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
-        sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
-    )
+    if precision == "bf16":
+        eps = index.bf16_margin()
+        fn = sidx._range_bf16_fn(metric_eng, backend, bq, interpret)
+        hit, alive, tmask, rmask, band_counts = fn(
+            jnp.asarray(queries), jnp.asarray(t_vec), jnp.float32(eps),
+            sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
+            sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
+            sidx.dev_data16,
+        )
+    else:
+        fn = sidx._range_fn(metric_eng, backend, bq, interpret)
+        hit, alive, tmask = fn(
+            jnp.asarray(queries), jnp.asarray(t_vec),
+            sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
+            sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
+        )
     hit = np.asarray(hit)
     qidx, pidx = np.nonzero(hit)  # row-major: ascending position per query
     orig = sidx.perm[pidx]
@@ -304,6 +460,12 @@ def sharded_query_batched(
     tmask = np.asarray(tmask)[:, : index.n_blocks]
     stats = _batched_stats(index, alive, tmask)
     stats["n_shards"] = sidx.n_shards
+    stats["precision"] = precision
+    if precision == "bf16":
+        _bf16_stats(
+            stats, eps, int(np.asarray(rmask).sum()),
+            np.asarray(band_counts).sum(axis=1),
+        )
     return results, stats
 
 
@@ -323,8 +485,14 @@ def sharded_knn_batched(
     bq: int = _DEFAULT_BQ,
     backend: str = "auto",
     interpret: bool | None = None,
+    precision: str = "fp32",
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Exact batched kNN over the sharded index.
+
+    ``precision="bf16"`` swaps each round for the bf16-scan +
+    global-band + fp32-re-check round (``_knn_round_bf16_fn``); candidates,
+    distances, the radius schedule and the per-query counts stay
+    bit-identical to the fp32 sharded engine.
 
     The host driver mirrors ``bss_knn_batched`` step for step — same initial
     per-query radius (read off the sorted REAL-block bounds), same
@@ -337,6 +505,8 @@ def sharded_knn_batched(
     shrinking radius is driven by the MERGED kth-nearest-so-far, keeping
     per-shard exclusion globally sound."""
     backend = resolve_backend(backend)
+    if precision not in ("fp32", "bf16"):
+        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
     index = sidx.index
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -348,7 +518,7 @@ def sharded_knn_batched(
         "rounds": 0, "pivot_dists_per_query": 0.0,
         "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
         "tiles_computed": 0, "n_blocks": int(index.n_blocks),
-        "n_shards": sidx.n_shards,
+        "n_shards": sidx.n_shards, "precision": precision,
     }
     if nq == 0:
         return (
@@ -380,10 +550,20 @@ def sharded_knn_batched(
     else:
         radii = np.full(nq, float(r0), np.float32)
 
-    round_fn = sidx._knn_round_fn(metric_eng, backend, bq, interpret, k_run)
+    bf16 = precision == "bf16"
+    eps = index.bf16_margin() if bf16 else 0.0
+    if bf16:
+        round_fn = sidx._knn_round_bf16_fn(
+            metric_eng, backend, bq, interpret, k_run
+        )
+        data16 = sidx.dev_data16
+    else:
+        round_fn = sidx._knn_round_fn(metric_eng, backend, bq, interpret, k_run)
     valid_pb = _valid_per_block(index)
     total_exact = np.zeros(nq, np.int64)
     tiles_total = 0
+    recheck_pq = np.zeros(nq, np.int64)
+    recheck_tiles_total = 0
     done = np.zeros(nq, bool)
     cand_idx = np.full((nq, k_run), 0, np.int64)
     cand_dist = np.full((nq, k_run), np.inf, np.float32)
@@ -391,9 +571,21 @@ def sharded_knn_batched(
     for rounds in range(1, max_rounds + 2):
         if rounds == max_rounds + 1:
             radii = np.where(done, radii, np.inf).astype(np.float32)
-        ci, cd, alive, tmask = round_fn(
-            qj, jnp.asarray(radii), lb_dev, sidx.dev.data, sidx.dev.valid,
-        )
+        if bf16:
+            ci, cd, alive, tmask, rmask, band_counts = round_fn(
+                qj, jnp.asarray(radii), jnp.float32(eps), lb_dev,
+                sidx.dev.data, sidx.dev.valid, data16,
+            )
+            recheck_tiles_total += int(
+                np.asarray(rmask)[:, : n_blocks].sum()
+            )
+            recheck_pq += np.where(
+                ~done, np.asarray(band_counts).sum(axis=1), 0
+            )
+        else:
+            ci, cd, alive, tmask = round_fn(
+                qj, jnp.asarray(radii), lb_dev, sidx.dev.data, sidx.dev.valid,
+            )
         ci, cd = np.asarray(ci), np.asarray(cd)
         # real-block columns only: identical to the single-device alive set
         # (padding is only ever admitted by the radius=inf fallback round,
@@ -435,7 +627,10 @@ def sharded_knn_batched(
         "tiles_computed": tiles_total,
         "n_blocks": int(n_blocks),
         "n_shards": sidx.n_shards,
+        "precision": precision,
     }
+    if bf16:
+        _bf16_stats(stats, eps, recheck_tiles_total, recheck_pq)
     orig = np.where(np.isfinite(cand_dist), sidx.perm[cand_idx], -1)
     if k_run < k:
         orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)

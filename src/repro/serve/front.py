@@ -36,8 +36,25 @@ cost is bounded by the bucket rounding (reported as ``padding_waste``).
 Admission is a bounded queue with a load-shed policy (block until space,
 or fail fast with ``ShedError``), plus an optional exact-hit LRU result
 cache keyed on the request's quantized (float32) query bytes and its
-dispatch parameters.  ``stats()`` snapshots the whole pipeline: queue
-wait, batch sizes, padding waste, engine time, shed/cache counters.
+dispatch parameters.  Input hygiene happens ONCE at admission: the query
+is canonicalised to float32 there (the engines and the cache key both see
+the same bytes) and non-finite queries — including float64 values that
+overflow the float32 cast — are rejected with ``ValueError`` before they
+can poison a micro-batch or become an unmatchable NaN cache entry.  The
+cache key is a canonical fixed-order typed tuple (kind, engine, precision,
+t, k, r0, max_rounds, dim) — never ``repr`` of whatever params happened to
+be around, whose concatenation with raw query bytes is not injective.
+
+``submit(..., precision="bf16")`` routes the request through the engines'
+bf16 exact phase (bit-identical results, roughly half the corpus HBM
+traffic; see ``bss_query_batched``).  Precision is part of the dispatch
+group — fp32 and bf16 requests never share a micro-batch — and of the
+cache key, and the re-check volume rides the telemetry (``bf16_rows``,
+``recheck_points`` counters, per-request ``ServeResult.n_recheck``).
+
+``stats()`` snapshots the whole pipeline: queue wait, batch sizes, padding
+waste, engine time, shed/cache counters.  It is total: an empty telemetry
+window (fresh front, no completions yet) yields zeros, never a raise.
 
 Host-side by design (and recorded as such in the ROADMAP): the queue, the
 driver thread, the cache and the demux all run in numpy/threading; only
@@ -82,6 +99,7 @@ class ServeResult:
     indices: np.ndarray | None = None    # knn: (k,) original ids, -1 padded
     distances: np.ndarray | None = None  # knn: (k,) ascending
     n_dists: int = 0                     # this query's own distance charge
+    n_recheck: int = 0                   # bf16 band points re-run in fp32
     queue_wait_s: float = 0.0            # admission -> dispatch
     engine_s: float = 0.0                # the batch's engine wall time
     batch_size: int = 0                  # real requests in the batch
@@ -99,6 +117,42 @@ def _copy_result(res: ServeResult) -> ServeResult:
         indices=None if res.indices is None else res.indices.copy(),
         distances=None if res.distances is None else res.distances.copy(),
     )
+
+
+def _cache_key(
+    kind: str,
+    engine: str,
+    precision: str,
+    t: float | None,
+    k: int | None,
+    r0: float | None,
+    max_rounds: int | None,
+    q: np.ndarray,
+) -> bytes:
+    """Canonical cache key: a FIXED-ORDER, explicitly-typed header tuple
+    followed by the float32 query bytes.
+
+    Properties the old ``repr(params) + q.tobytes()`` scheme lacked:
+
+    * injective — the header is NUL-free ASCII and the key splits at the
+      first NUL, so a (header, query) pair can never masquerade as a
+      different one by shifting bytes across the boundary (query bytes are
+      arbitrary and routinely contain printable ASCII);
+    * typed — every field is coerced (float/int/None) before formatting,
+      so ``t=1`` and ``t=1.0`` are one entry, not two;
+    * total — every dispatch parameter of BOTH kinds appears in its fixed
+      slot (None where the kind doesn't use it), so a stray parameter of
+      the other kind can neither split nor merge entries.
+    """
+    head = (
+        "v2", kind, engine, precision,
+        None if t is None else float(t),
+        None if k is None else int(k),
+        None if r0 is None else float(r0),
+        None if max_rounds is None else int(max_rounds),
+        int(q.shape[0]),
+    )
+    return repr(head).encode("ascii") + b"\x00" + q.tobytes()
 
 
 class _LRU:
@@ -194,6 +248,7 @@ class ServingFront:
         self._n = dict(
             submitted=0, completed=0, shed=0, cache_hits=0, errors=0,
             batches=0, rows=0, padded_rows=0, dispatches=0,
+            bf16_rows=0, recheck_points=0,
         )
         self._per_bucket: dict[int, int] = {}
         self._waits: deque[float] = deque(maxlen=4096)
@@ -238,22 +293,45 @@ class ServingFront:
         r0: float | None = None,
         max_rounds: int = 8,
         timeout: float | None = None,
+        precision: str = "fp32",
     ) -> Future:
         """Admit one query; returns a Future resolving to ``ServeResult``.
 
         ``kind="range"`` needs ``t`` (a metric distance; per-request — BSS
         batches mix thresholds); ``kind="knn"`` needs ``k`` (requests
-        sharing (k, r0, max_rounds) batch together).  Admission follows the
-        front's policy: "block" waits for queue space (up to ``timeout``),
-        "shed" fails fast — either way a rejected request raises
-        :class:`ShedError` out of ``submit`` itself, never a half-admitted
-        future."""
-        q = np.asarray(query, np.float32)
+        sharing (k, r0, max_rounds) batch together).  ``precision`` selects
+        the engine exact phase ("fp32" | "bf16" — same results either way;
+        part of the dispatch group, so precisions never share a batch).
+        Admission follows the front's policy: "block" waits for queue space
+        (up to ``timeout``), "shed" fails fast — either way a rejected
+        request raises :class:`ShedError` out of ``submit`` itself, never a
+        half-admitted future.
+
+        The query is canonicalised to float32 HERE, once — engines, padding
+        rows and the cache key all see the same bytes — and must be finite
+        after that cast: NaN/Inf inputs (or float64 values overflowing
+        float32) raise ``ValueError`` at admission instead of riding into a
+        shared micro-batch."""
+        # out-of-range float64 inputs overflow to Inf here ON PURPOSE — the
+        # finiteness check below turns them into a clean admission error,
+        # so the cast itself must not warn
+        with np.errstate(over="ignore"):
+            q = np.asarray(query, np.float32)
         if q.ndim != 1:
             raise ValueError(
                 f"submit takes ONE query vector (the front does the "
                 f"batching), got shape {q.shape}"
             )
+        if not np.all(np.isfinite(q)):
+            raise ValueError(
+                "query must be finite after the float32 cast (no NaN/Inf; "
+                "float64 values beyond float32 range overflow to Inf)"
+            )
+        # canonicalise -0.0 -> +0.0: distances cannot tell them apart, so
+        # the cache key must not either
+        q = q + np.float32(0.0)
+        if precision not in ("fp32", "bf16"):
+            raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
         if kind == "range":
             if t is None:
                 raise ValueError("range requests need t=")
@@ -263,7 +341,11 @@ class ServingFront:
                     f"t must be >= 0 (negative radii are the engine's "
                     f"padding sentinel), got {t}"
                 )
-            group = ("range", t) if self._engine == "forest" else ("range",)
+            group = (
+                ("range", t, precision)
+                if self._engine == "forest"
+                else ("range", precision)
+            )
         elif kind == "knn":
             if self._engine == "forest":
                 from repro.serve.retrieval import FOREST_KNN_ERROR
@@ -273,20 +355,26 @@ class ServingFront:
                 raise ValueError(f"knn requests need a positive k, got {k}")
             k = int(k)
             group = ("knn", k, None if r0 is None else float(r0),
-                     int(max_rounds))
+                     int(max_rounds), precision)
         else:
             raise ValueError(f"kind must be range|knn, got {kind!r}")
 
         fut: Future = Future()
         key = None
         if self._cache is not None:
-            # the kind's FULL dispatch signature and nothing else: the BSS
-            # range group key omits t (mixed-threshold batching), so t must
-            # join the key there; knn's group already carries k/r0/
-            # max_rounds, and a stray parameter of the OTHER kind must not
-            # split logically identical requests across cache entries
-            params = (group, t) if kind == "range" else group
-            key = repr(params).encode() + q.tobytes()
+            # the kind's FULL dispatch signature in fixed typed slots (None
+            # where the kind doesn't use a slot): the BSS range group key
+            # omits t (mixed-threshold batching), so t joins the key here;
+            # a stray parameter of the OTHER kind can neither split nor
+            # merge logically identical requests
+            key = _cache_key(
+                kind, self._engine, precision,
+                t if kind == "range" else None,
+                k if kind == "knn" else None,
+                (None if r0 is None else float(r0)) if kind == "knn" else None,
+                int(max_rounds) if kind == "knn" else None,
+                q,
+            )
             with self._lock:
                 hit = self._cache.get(key)
             if hit is not None:
@@ -298,7 +386,7 @@ class ServingFront:
                 return fut
         req = Request(
             query=q, kind=kind, group=group, future=fut, t_submit=now(),
-            t=t, k=k, cache_key=key,
+            t=t, k=k, cache_key=key, precision=precision,
         )
         try:
             self._queue.put(req, policy=self.admission, timeout=timeout)
@@ -377,6 +465,7 @@ class ServingFront:
             hits, stats = flat_index.bss_query_batched(
                 self.index, qs, t_vec, backend=self.backend,
                 interpret=self.interpret, realisation=self.realisation,
+                precision=head.precision,
             )
         elif head.kind == "range":  # forest: scalar-t walker
             search = (
@@ -387,16 +476,22 @@ class ServingFront:
             hits, stats = search(
                 self.index, qs, head.t, self.mechanism,
                 backend=self.backend, interpret=self.interpret,
+                precision=head.precision,
             )
         else:  # knn
-            _, k, r0, max_rounds = head.group
+            _, k, r0, max_rounds, _ = head.group
             idx, dist, stats = flat_index.bss_knn_batched(
                 self.index, qs, k, r0=r0, max_rounds=max_rounds,
                 backend=self.backend, interpret=self.interpret,
-                realisation=self.realisation,
+                realisation=self.realisation, precision=head.precision,
             )
         engine_s = now() - t_wait
         per_q = np.asarray(stats["per_query_dists"])
+        recheck = None
+        if head.precision == "bf16":
+            recheck = np.asarray(
+                stats.get("per_query_recheck", np.zeros(bucket, np.int64))
+            )
 
         with self._lock:
             self._n["batches"] += 1
@@ -404,10 +499,17 @@ class ServingFront:
             self._n["padded_rows"] += pad
             self._per_bucket[bucket] = self._per_bucket.get(bucket, 0) + 1
             self._engine_s_total += engine_s
+            if recheck is not None:
+                # re-check volume over REAL rows only — padding rows are a
+                # bucket artefact, not precision cost
+                self._n["bf16_rows"] += n
+                self._n["recheck_points"] += int(recheck[:n].sum())
         for i, r in enumerate(group):
             wait = t_wait - r.t_submit
             res = ServeResult(
-                n_dists=int(per_q[i]), queue_wait_s=wait,
+                n_dists=int(per_q[i]),
+                n_recheck=0 if recheck is None else int(recheck[i]),
+                queue_wait_s=wait,
                 engine_s=engine_s, batch_size=n, padded_to=bucket,
             )
             if r.kind == "range":
@@ -427,7 +529,10 @@ class ServingFront:
 
     def stats(self) -> dict:
         """Snapshot of the pipeline telemetry (host-side counters only —
-        never blocks on the engine)."""
+        never blocks on the engine).  Total on an empty window: a fresh
+        front with zero completions reports zeros everywhere, it never
+        raises (regression-tested — percentiles, means and ratios all
+        guard their denominators)."""
         with self._lock:
             waits = list(self._waits)
             n = dict(self._n)
@@ -435,7 +540,9 @@ class ServingFront:
             engine_s = self._engine_s_total
 
         def pct(p: float) -> float:
-            return nearest_rank(waits, p)
+            # nearest_rank is 0.0 on an empty window by contract; the guard
+            # here keeps stats() total even if that contract ever changes
+            return nearest_rank(waits, p) if waits else 0.0
 
         rows = n["rows"]
         return {

@@ -60,7 +60,7 @@ class Request:
     the BSS range path, which accepts per-query radii — mixed thresholds
     batch together there."""
 
-    query: np.ndarray          # (dim,) float32
+    query: np.ndarray          # (dim,) float32, finite (validated at submit)
     kind: str                  # "range" | "knn"
     group: tuple               # dispatch-compatibility key
     future: Future
@@ -68,6 +68,7 @@ class Request:
     t: float | None = None     # range radius (per-request)
     k: int | None = None       # kNN width
     cache_key: bytes | None = None
+    precision: str = "fp32"    # engine exact-phase precision ("fp32"|"bf16")
 
 
 class BoundedRequestQueue:

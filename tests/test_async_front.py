@@ -402,3 +402,119 @@ def test_front_on_mesh_built_index():
     out = run_simulated_mesh(_MESH_FRONT, 8, timeout=900)
     assert out.returncode == 0, out.stderr[-4000:]
     assert "MESH_FRONT_OK" in out.stdout
+
+
+# --------------------------------------- input hygiene + canonical cache key
+
+
+def test_non_finite_queries_rejected_at_admission():
+    """NaN/Inf queries — including float64 values that overflow the float32
+    cast — must raise at submit, before they can ride into a shared
+    micro-batch or become an unmatchable NaN cache entry."""
+    idx, q, ts = _built("l2")
+    front = ServingFront(idx, cache_size=4, start=False)
+    bad = q[0].copy()
+    for poison in (np.nan, np.inf, -np.inf):
+        bad[3] = poison
+        with pytest.raises(ValueError, match="finite"):
+            front.submit(bad, "range", t=ts[0])
+    with pytest.raises(ValueError, match="finite"):
+        front.submit(np.full(DIM, 1e40, np.float64), "range", t=ts[0])
+    with pytest.raises(ValueError, match="precision"):
+        front.submit(q[0], "range", t=ts[0], precision="fp64")
+    front.close()
+    assert front.stats()["submitted"] == 0  # rejected before admission
+
+
+def test_cache_key_is_canonical():
+    """Regression for the repr-based key: typed slots (t=1 and t=1.0 are one
+    entry), negative-zero canonicalisation, and no cross-kind or cross-
+    precision aliasing."""
+    idx, q, ts = _built("l2")
+    with ServingFront(idx, cache_size=16, max_delay_s=0.002) as front:
+        t_int_like = float(int(ts[1])) if ts[1] >= 1 else ts[1]
+        a = front.submit(q[0], "range", t=t_int_like).result(timeout=120)
+        b = front.submit(q[0], "range", t=int(t_int_like)
+                         if t_int_like == int(t_int_like) else t_int_like
+                         ).result(timeout=120)
+        assert b.cache_hit and b.hits == a.hits  # typed: int t == float t
+        # -0.0 and +0.0 queries are the same point in every metric
+        zp = np.full(DIM, 0.5, np.float32)
+        zp[0] = 0.0
+        zn = zp.copy()
+        zn[0] = -0.0
+        first = front.submit(zp, "range", t=ts[1]).result(timeout=120)
+        second = front.submit(zn, "range", t=ts[1]).result(timeout=120)
+        assert second.cache_hit and second.hits == first.hits
+        # kNN with k equal to a cached range's t must not alias it
+        c = front.submit(q[0], "knn", k=3).result(timeout=120)
+        assert not c.cache_hit
+        # precision is part of the key: bf16 must not serve the fp32 entry
+        d = front.submit(q[0], "range", t=t_int_like,
+                         precision="bf16").result(timeout=120)
+        assert not d.cache_hit
+        assert d.hits == a.hits  # ... but the results agree bit-for-bit
+
+
+def test_cache_key_injective_header():
+    """The key splits unambiguously at the first NUL: the ASCII header can
+    never bleed into the query bytes (the old repr+tobytes concatenation
+    was not injective)."""
+    from repro.serve.front import _cache_key
+
+    qa = np.array([1.5, 2.5], np.float32)
+    qb = np.array([2.5, 1.5], np.float32)
+    seen = set()
+    for kind, t, k in [("range", 1.0, None), ("range", 1, None),
+                       ("knn", None, 3), ("knn", None, 5)]:
+        for qq in (qa, qb):
+            seen.add(_cache_key(kind, "bss", "fp32", t, k, None,
+                                8 if kind == "knn" else None, qq))
+    assert len(seen) == 6  # t=1 and t=1.0 collapse; everything else distinct
+    assert _cache_key("range", "bss", "fp32", 1.0, None, None, None, qa) != \
+        _cache_key("range", "bss", "bf16", 1.0, None, None, None, qa)
+
+
+def test_stats_total_on_empty_window():
+    """A fresh front (nothing submitted, nothing completed) must report a
+    complete, all-zero snapshot — never raise on the empty percentile
+    window or the zero denominators."""
+    idx, _, _ = _built("l2")
+    front = ServingFront(idx, start=False)
+    s = front.stats()
+    front.close()
+    assert s["submitted"] == 0 and s["completed"] == 0
+    assert s["queue_wait_s"] == {"mean": 0.0, "p50": 0.0, "p95": 0.0,
+                                 "max": 0.0}
+    assert s["batch_size_mean"] == 0.0 and s["padding_waste"] == 0.0
+    assert s["engine_s_per_batch"] == 0.0
+    assert s["bf16_rows"] == 0 and s["recheck_points"] == 0
+
+
+# ----------------------------------------------------------- bf16 serving
+
+
+def test_front_bf16_bit_identical_and_grouped():
+    """bf16 requests serve bit-identical results, never share a micro-batch
+    with fp32 requests (precision is in the group key), and their re-check
+    volume rides the telemetry."""
+    idx, q, ts = _built("l2")
+    with ServingFront(idx, max_delay_s=0.01) as front:
+        f32 = [front.submit(x, "range", t=ts[1]) for x in q[:8]]
+        f16 = [front.submit(x, "range", t=ts[1], precision="bf16")
+               for x in q[:8]]
+        k32 = [front.submit(x, "knn", k=4) for x in q[:8]]
+        k16 = [front.submit(x, "knn", k=4, precision="bf16") for x in q[:8]]
+        r32, r16 = _drain(f32), _drain(f16)
+        kr32, kr16 = _drain(k32), _drain(k16)
+        stats = front.stats()
+    for a, b in zip(r32, r16):
+        assert sorted(b.hits) == sorted(a.hits)
+        assert b.n_dists == a.n_dists  # count parity survives serving
+        assert a.n_recheck == 0 and b.n_recheck >= 0
+    for a, b in zip(kr32, kr16):
+        assert np.array_equal(b.indices, a.indices)
+        assert np.array_equal(b.distances, a.distances)
+        assert b.n_dists == a.n_dists
+    assert stats["bf16_rows"] == 16
+    assert stats["recheck_points"] >= 0 and stats["errors"] == 0

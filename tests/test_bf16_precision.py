@@ -1,0 +1,281 @@
+"""bf16 exact phase vs the fp32 engines: margin soundness + bit-identity.
+
+The contract under test (the ISSUE-6 acceptance bar): ``precision="bf16"``
+streams the bfloat16 corpus mirror through the exact phase and re-checks
+the comparison-margin boundary band in fp32 — so hit sets, kNN results AND
+per-query distance counts are bit-identical to the fp32 engines, on every
+supermetric, on the single-device engine (dense, sparse and
+pallas-interpret realisations), on the sharded engine, and on the forest
+leaf phase.
+
+The property test exercises the margin derivation itself (the one piece of
+real analysis): for random corpora on all four supermetrics, the bf16
+rounding displacement ``|d(q, p~) - d(q, p)|`` measured in float64 never
+exceeds ``bf16_margin`` — the guarantee that the band cannot falsely
+exclude a true hit.
+"""
+
+import numpy as np
+import pytest
+from hypothesis_shim import given, settings, st
+from multidevice_shim import run_simulated_mesh
+
+from repro.core import flat_index
+from repro.core.npdist import pairwise_np
+from repro.core.precision import bf16_margin, bf16_round_np
+
+SUPERMETRICS = ("l2", "cosine", "jsd", "triangular")
+
+# (backend, interpret, realisation) — the exact-phase implementations
+CONFIGS = [
+    ("jnp", None, "adaptive"),
+    ("jnp", None, "dense"),
+    ("pallas", True, "dense"),
+]
+
+
+def _space(metric: str, n: int, dim: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, dim)).astype(np.float32) + 1e-3
+    if metric in ("jsd", "triangular"):
+        x /= x.sum(axis=1, keepdims=True)
+    return x
+
+
+def _snap(dvals: np.ndarray, frac: float) -> float:
+    """Threshold snapped to a well-separated gap midpoint (the repo's
+    standard idiom) so fp32 engines and the float64 oracle agree on every
+    d <= t decision."""
+    vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+    i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+    for j in range(i, len(vals) - 1):
+        if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+            return float(0.5 * (vals[j] + vals[j + 1]))
+    return float(vals[-1] + 1.0)
+
+
+# ------------------------------------------------ margin property (analysis)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from(SUPERMETRICS),
+    st.integers(min_value=0, max_value=10_000),
+    st.integers(min_value=2, max_value=48),
+)
+def test_margin_never_falsely_excludes(metric, seed, dim):
+    """For random corpora, the float64-measured displacement of every
+    (query, point) distance under bf16 corpus rounding stays within the
+    derived margin — so widening comparisons by eps provably catches every
+    true hit in the band."""
+    data = _space(metric, 80, dim, seed)
+    q = _space(metric, 16, dim, seed + 1)
+    eps = bf16_margin(metric, data)
+    d_true = pairwise_np(metric, np.asarray(q, np.float64),
+                         np.asarray(data, np.float64))
+    d_tilde = pairwise_np(metric, np.asarray(q, np.float64),
+                          np.asarray(bf16_round_np(data), np.float64))
+    assert float(np.abs(d_true - d_tilde).max()) <= eps, (metric, seed, dim)
+
+
+def test_margin_scales_and_guards():
+    """Margin basics: positive on real data, tiny floor on an empty corpus,
+    and padding rows excluded via the valid mask (a huge pad row must not
+    inflate the band)."""
+    data = _space("l2", 64, 8, 3)
+    assert bf16_margin("l2", data) > 0.0
+    assert bf16_margin("l2", np.zeros((0, 8), np.float32)) > 0.0
+    padded = np.concatenate([data, np.full((1, 8), 1e30, np.float32)])
+    valid = np.ones(65, bool)
+    valid[-1] = False
+    assert bf16_margin("l2", padded, valid) == bf16_margin(
+        "l2", data, np.ones(64, bool)
+    )
+
+
+# --------------------------------------------- single-device engine parity
+
+
+@pytest.fixture(scope="module")
+def spaces():
+    """One built index + snapped threshold per metric, shared across the
+    config matrix."""
+    cache = {}
+
+    def get(metric):
+        if metric not in cache:
+            n, nq, dim = 600, 16, 12
+            data = _space(metric, n + nq, dim, seed=7)
+            db, q = data[:n], data[n:]
+            idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                                       block=128, seed=1)
+            t = _snap(pairwise_np(metric, q, db), 0.02)
+            cache[metric] = (idx, q, t)
+        return cache[metric]
+
+    return get
+
+
+@pytest.mark.parametrize("backend,interpret,realisation", CONFIGS)
+@pytest.mark.parametrize("metric", SUPERMETRICS)
+def test_range_bit_identical(spaces, metric, backend, interpret, realisation):
+    idx, q, t = spaces(metric)
+    kw = dict(backend=backend, interpret=interpret, realisation=realisation)
+    h32, s32 = flat_index.bss_query_batched(idx, q, t, **kw)
+    h16, s16 = flat_index.bss_query_batched(idx, q, t, precision="bf16", **kw)
+    assert h16 == h32
+    assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
+    assert s32["precision"] == "fp32" and s16["precision"] == "bf16"
+    assert s16["band_eps"] > 0.0
+    assert s16["per_query_recheck"].shape == (len(q),)
+    assert s16["recheck_points_per_query"] >= 0.0
+
+
+@pytest.mark.parametrize("backend,interpret,realisation", CONFIGS)
+@pytest.mark.parametrize("metric", SUPERMETRICS)
+def test_knn_bit_identical(spaces, metric, backend, interpret, realisation):
+    idx, q, _ = spaces(metric)
+    kw = dict(backend=backend, interpret=interpret, realisation=realisation)
+    i32, d32, s32 = flat_index.bss_knn_batched(idx, q, 5, **kw)
+    i16, d16, s16 = flat_index.bss_knn_batched(idx, q, 5, precision="bf16",
+                                               **kw)
+    assert np.array_equal(i16, i32)
+    assert np.array_equal(d16, d32)
+    assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
+    assert s16["rounds"] == s32["rounds"]
+    assert s16["precision"] == "bf16" and s32["precision"] == "fp32"
+
+
+def test_range_bf16_matches_oracle(spaces):
+    """Transitively implied by bit-identity + the fp32 engine's own oracle
+    tests, but cheap to assert directly: bf16 hits == the float64 oracle."""
+    idx, q, t = spaces("l2")
+    oracle, _ = flat_index.bss_query(idx, q, t)
+    h16, _ = flat_index.bss_query_batched(idx, q, t, precision="bf16")
+    assert h16 == oracle
+
+
+def test_precision_validation(spaces):
+    idx, q, t = spaces("l2")
+    with pytest.raises(ValueError, match="precision"):
+        flat_index.bss_query_batched(idx, q, t, precision="fp16")
+    with pytest.raises(ValueError, match="precision"):
+        flat_index.bss_knn_batched(idx, q, 3, precision="f32")
+
+
+def test_empty_batch_carries_precision(spaces):
+    idx, q, t = spaces("l2")
+    hits, stats = flat_index.bss_query_batched(idx, q[:0], t,
+                                               precision="bf16")
+    assert hits == [] and stats["precision"] == "bf16"
+
+
+# ----------------------------------------------------- forest leaf parity
+
+
+@pytest.mark.parametrize("backend,interpret", [("jnp", None), ("pallas", True)])
+@pytest.mark.parametrize("metric", ["l2", "jsd"])
+def test_forest_leaf_bit_identical(metric, backend, interpret):
+    from repro.core import tree
+    from repro.forest import encode_tree, forest_range_search
+
+    data = _space(metric, 460, 12, seed=11)
+    db, q = data[:440], data[440:452]
+    t = _snap(pairwise_np(metric, q, db), 0.02)
+    enc = encode_tree(tree.build_tree("hpt_fft_log", metric, db, seed=11))
+    kw = dict(backend=backend, interpret=interpret)
+    r32, s32 = forest_range_search(enc, q, t, **kw)
+    r16, s16 = forest_range_search(enc, q, t, precision="bf16", **kw)
+    assert [sorted(a) for a in r32] == [sorted(b) for b in r16]
+    assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
+    assert s16["precision"] == "bf16" and s16["band_eps"] > 0.0
+
+
+@pytest.mark.parametrize("backend,interpret", [("jnp", None), ("pallas", True)])
+def test_monotone_leaf_bit_identical(backend, interpret):
+    from repro.core import lrt
+    from repro.forest import encode_monotone, monotone_range_search
+
+    data = _space("l2", 460, 12, seed=13)
+    db, q = data[:440], data[440:452]
+    t = _snap(pairwise_np("l2", q, db), 0.02)
+    enc = encode_monotone(
+        lrt.build_monotone_tree("closer", "far", "l2", db, seed=6)
+    )
+    kw = dict(backend=backend, interpret=interpret)
+    r32, s32 = monotone_range_search(enc, q, t, **kw)
+    r16, s16 = monotone_range_search(enc, q, t, precision="bf16", **kw)
+    assert [sorted(a) for a in r32] == [sorted(b) for b in r16]
+    assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
+
+
+def test_forest_precision_validation():
+    from repro.core import tree
+    from repro.forest import encode_tree, forest_range_search
+
+    db = _space("l2", 200, 8, seed=2)
+    enc = encode_tree(tree.build_tree("hpt_fft_log", "l2", db, seed=1))
+    with pytest.raises(ValueError, match="precision"):
+        forest_range_search(enc, db[:2], 0.1, precision="quarter")
+
+
+# ------------------------------------------------------- sharded parity
+
+_SHARDED = """
+    import numpy as np, jax
+    from jax.sharding import Mesh
+    from repro.core import flat_index
+    from repro.core.npdist import pairwise_np
+    from repro.parallel.shard_index import (
+        ShardedBSSIndex, sharded_query_batched, sharded_knn_batched,
+    )
+
+    def space(metric, n, dim, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.random((n, dim)).astype(np.float32) + 1e-3
+        if metric == "jsd":
+            x /= x.sum(axis=1, keepdims=True)
+        return x
+
+    def snap(dvals, frac):
+        vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+        i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+        for j in range(i, len(vals) - 1):
+            if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+                return float(0.5 * (vals[j] + vals[j + 1]))
+        return float(vals[-1] + 1.0)
+
+    devs = jax.devices()
+    for metric, n, dim, block, nq, k in [
+        ("l2", 700, 12, 64, 17, 7),
+        ("jsd", 330, 11, 32, 11, 4),
+    ]:
+        data = space(metric, n + nq, dim, seed=n)
+        db, q = data[:n], data[n:]
+        idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                                   block=block, seed=1)
+        t = snap(pairwise_np(metric, q, db), 0.02)
+        mesh = Mesh(np.array(devs[:4]), ("data",))
+        sidx = ShardedBSSIndex(idx, mesh)
+        h32, s32 = sharded_query_batched(sidx, q, t, backend="jnp")
+        h16, s16 = sharded_query_batched(sidx, q, t, backend="jnp",
+                                         precision="bf16")
+        assert h16 == h32, metric
+        assert np.array_equal(s16["per_query_dists"],
+                              s32["per_query_dists"]), metric
+        assert s16["precision"] == "bf16" and s16["band_eps"] > 0.0
+        i32, d32, k32 = sharded_knn_batched(sidx, q, k, backend="jnp")
+        i16, d16, k16 = sharded_knn_batched(sidx, q, k, backend="jnp",
+                                            precision="bf16")
+        assert np.array_equal(i16, i32) and np.array_equal(d16, d32), metric
+        assert np.array_equal(k16["per_query_dists"],
+                              k32["per_query_dists"]), metric
+        assert k16["rounds"] == k32["rounds"], metric
+    print("SHARDED_BF16_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_bf16_bit_identical():
+    out = run_simulated_mesh(_SHARDED, 4)
+    assert "SHARDED_BF16_OK" in out.stdout, out.stdout + "\n" + out.stderr
