@@ -1,0 +1,83 @@
+"""Compile-cache replay benchmark: the PR 5 bounded-recompile guarantee
+measured, not just asserted.
+
+Replays a mixed-size range+kNN stream through ``ServingFront`` via the
+analysis layer's :func:`audit_compile_cache` and reports (a) whether each
+engine jit's distinct-lowering growth equals the bucket-ladder
+prediction (the CI gate), and (b) how much wall time the whole replay
+costs per request — i.e. what the audit itself adds to CI.
+
+    PYTHONPATH=src python -m benchmarks.analysis_cache [--smoke]
+
+Rows: ``name,us_per_call,derived``; the JSON artifact is
+``BENCH_analysis_cache.json``.
+"""
+
+from __future__ import annotations
+
+from benchmarks.paper_common import now, row, write_bench_json
+
+# (label, bucket ladder, wave sizes): smoke is the CI-gate configuration;
+# full adds a deeper ladder with waves overflowing the top bucket so the
+# front's chunk-splitting shows up in the prediction.
+_CONFIGS = {
+    "smoke": [("ladder4-8", (4, 8), tuple(range(1, 11)))],
+    "full": [
+        ("ladder4-8", (4, 8), tuple(range(1, 11))),
+        ("ladder4-16", (4, 8, 16), tuple(range(1, 25))),
+    ],
+}
+
+
+def run(smoke: bool = True, out: str = "BENCH_analysis_cache.json"):
+    from repro.analysis.jaxpr_audit import audit_compile_cache
+
+    records = []
+    for label, buckets, sizes in _CONFIGS["smoke" if smoke else "full"]:
+        t0 = now()
+        problems, info = audit_compile_cache(sizes=sizes, buckets=buckets)
+        dt = now() - t0
+        n_requests = 2 * sum(sizes)  # one range + one knn wave per size
+        if info.get("skipped"):
+            yield row(f"analysis_cache/{label}", 0.0,
+                      "skipped:no-jit-cache-hook")
+            records.append({"label": label, "skipped": True})
+            continue
+        predicted = info["predicted_lowerings"]
+        growth = info["growth"]
+        ok = not problems
+        yield row(
+            f"analysis_cache/{label}",
+            1e6 * dt / n_requests,
+            f"predicted={predicted};grew="
+            + "|".join(f"{k}:{v}" for k, v in sorted(growth.items()))
+            + f";ok={ok}",
+        )
+        records.append({
+            "label": label,
+            "buckets": list(buckets),
+            "sizes": list(sizes),
+            "requests": n_requests,
+            "replay_s": round(dt, 3),
+            "predicted_lowerings": predicted,
+            "growth": growth,
+            "problems": [p.__dict__ for p in problems],
+        })
+    write_bench_json(out, {"smoke": bool(smoke), "configs": records})
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-gate configuration only (the default ladder)")
+    ap.add_argument("--out", default="BENCH_analysis_cache.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for r in run(smoke=args.smoke, out=args.out):
+        print(r, flush=True)
+
+
+if __name__ == "__main__":
+    main()

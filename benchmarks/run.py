@@ -14,6 +14,7 @@ from benchmarks.paper_common import now
 
 def main() -> None:
     from benchmarks import (
+        analysis_cache,
         bss_engine,
         bss_sharded,
         paper_lrt,
@@ -38,6 +39,7 @@ def main() -> None:
         "retrieval": retrieval_serving.run,  # serving integration
         "retrieval_async": retrieval_serving.run_async,  # async front, Poisson
         "roofline": roofline.run,         # dry-run derived terms
+        "analysis_cache": analysis_cache.run,  # bounded-recompile replay
     }
     pick = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

@@ -161,3 +161,22 @@ print(
     f"{s16['band_eps']:.2e}, {s16['recheck_points_per_query']:.1f} "
     f"fp32 re-checked points/query"
 )
+
+# 11. the invariant checker: everything above leans on conventions (no
+#     host syncs inside the jitted engines, fp32/bf16 only, monotonic
+#     timing, tile sizes routed through repro.kernels.tiles).  The AST
+#     lint enforces them in milliseconds; `python -m repro.analysis`
+#     additionally traces every engine entry point and audits the jaxprs
+#     (no f64, no callbacks, bf16 confinement, bounded recompiles).
+from pathlib import Path  # noqa: E402
+
+from repro.analysis.lint import lint_repo  # noqa: E402
+from repro.analysis.rules import load_allowlist  # noqa: E402
+
+repo_root = Path(__file__).resolve().parents[1]
+violations = lint_repo(repo_root, load_allowlist())
+for v in violations:
+    print(v.format())
+assert not violations
+print("invariant lint: clean (run `python -m repro.analysis` for the "
+      "full jaxpr audit)")

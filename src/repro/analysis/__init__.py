@@ -1,0 +1,15 @@
+"""Static-analysis layer enforcing the repo's jit/precision/timing
+invariants: an AST lint (:mod:`repro.analysis.lint`, rules in
+:mod:`repro.analysis.rules`) and a jaxpr audit of every public engine
+entry point (:mod:`repro.analysis.jaxpr_audit`).  ``python -m
+repro.analysis`` runs both and exits non-zero on violations; CI gates on
+``--ci`` (full matrix + JSON report).
+
+This package intentionally does NOT import jax at package level — the
+lint layer must stay usable (and fast) without touching the engines; the
+audit imports jax lazily.
+"""
+
+from repro.analysis.rules import RULES, Violation  # noqa: F401
+
+__all__ = ["RULES", "Violation"]

@@ -1,0 +1,95 @@
+"""``python -m repro.analysis`` — run the lint and/or the jaxpr audit,
+print diagnostics, exit non-zero on any violation.
+
+Modes:
+
+* default: AST lint + the smoke audit column (l2 across every entry
+  point / backend / realisation / precision + the compile-cache replay)
+  — fast enough for the pre-push habit and the self-check test;
+* ``--ci``: lint + the FULL {metric x backend x realisation x precision}
+  matrix, writing the machine-readable report to ``--json`` (default
+  ``ANALYSIS_report.json``) for the CI artifact;
+* ``--lint-only``: just the AST layer (milliseconds, no jax import).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import lint_repo
+from repro.analysis.rules import RULES, load_allowlist
+
+
+def _find_root(start: Path) -> Path:
+    """Nearest ancestor holding the linted tree (src/repro)."""
+    p = start.resolve()
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir():
+            return cand
+    raise SystemExit(f"no src/repro found above {start}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jit/precision invariant checker (AST lint + jaxpr "
+        "audit)",
+    )
+    ap.add_argument("--ci", action="store_true",
+                    help="full audit matrix + JSON report (the CI gate)")
+    ap.add_argument("--lint-only", action="store_true",
+                    help="AST lint only (no jax import)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="write the JSON report here (default "
+                    "ANALYSIS_report.json under --ci)")
+    args = ap.parse_args(argv)
+
+    root = args.root or _find_root(Path.cwd())
+    report: dict = {"root": str(root), "rules": {
+        rid: r.summary for rid, r in RULES.items()
+    }}
+
+    violations = lint_repo(root, load_allowlist())
+    report["lint"] = [v.as_dict() for v in violations]
+    for v in violations:
+        print(v.format())
+    print(f"lint: {len(violations)} violation(s)")
+
+    audit_problems = []
+    if not args.lint_only:
+        from repro.analysis.jaxpr_audit import audit_compile_cache, run_audit
+
+        def log(msg: str) -> None:
+            print(f"  {msg}", flush=True)
+
+        audit_problems = run_audit(full=args.ci, log=log)
+        cache_problems, cache_info = audit_compile_cache()
+        audit_problems += cache_problems
+        report["jaxpr_audit"] = [p.__dict__ for p in audit_problems]
+        report["compile_cache"] = cache_info
+        for p in audit_problems:
+            print(p.format())
+        print(
+            f"jaxpr audit ({'full' if args.ci else 'smoke'}): "
+            f"{len(audit_problems)} problem(s); compile-cache "
+            f"{'skipped (no cache hook)' if cache_info.get('skipped') else cache_info.get('growth')}"
+        )
+
+    json_path = args.json or (
+        root / "ANALYSIS_report.json" if args.ci else None
+    )
+    if json_path is not None:
+        report["ok"] = not violations and not audit_problems
+        json_path.write_text(json.dumps(report, indent=2, sort_keys=True))
+        print(f"report: {json_path}")
+
+    return 1 if (violations or audit_problems) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

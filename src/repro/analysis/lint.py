@@ -1,0 +1,484 @@
+"""Layer 1: AST lint over ``src/``, ``benchmarks/``, ``examples/``,
+``tests/`` enforcing the repo's jit/precision/timing invariants (rule ids
+and rationale in :mod:`repro.analysis.rules`).
+
+The interesting rule is R2 (host-sync-in-jit): it builds a call graph of
+the ``repro`` package — roots are every function wrapped by ``jax.jit`` /
+``shard_map`` (as a decorator, a ``functools.partial(jax.jit, ...)``
+decorator, or a direct ``jax.jit(f)`` / ``jax.jit(shard_map(f, ...))``
+call, including nested defs like the sharded engine's ``local`` closures)
+— and flags host-sync primitives (``np.*`` calls, ``.item()``,
+``float()``/``int()`` on non-constant operands) in any function reachable
+from a root.  Edges resolve same-module calls, ``from repro.x import f``
+names, ``repro.x.f`` module-alias attribute calls, and one hop of
+module-level ``alias = f`` assignment.
+
+Everything is pure ``ast`` — no imports of the linted code, so the lint
+runs in milliseconds and never pays (or is confused by) jax import
+side effects.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from repro.analysis.rules import (
+    Allowlist,
+    Violation,
+    load_allowlist,
+    parse_disables,
+)
+
+__all__ = ["lint_repo", "lint_paths", "LINT_DIRS"]
+
+LINT_DIRS = ("src", "benchmarks", "examples", "tests")
+
+# parameter / keyword names that carry kernel tile shapes (R4)
+_TILE_PARAMS = {"bm", "bn", "bq", "bb", "block", "kchunk", "k_chunk"}
+# module-level constant names that carry tile shapes (R4)
+_TILE_CONST_RE = re.compile(r"^(_?K_CHUNK|TILE_|DEFAULT_B)")
+# builtins whose call on a traced array forces a host sync (R2)
+_SYNC_BUILTINS = {"float", "int", "bool"}
+
+
+def _attr_chain(node: ast.AST) -> str | None:
+    """``a.b.c`` -> ``"a.b.c"``; None for anything not a pure Name/Attribute
+    chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _FileInfo:
+    """Per-file AST plus the import/alias tables the rules resolve against."""
+
+    def __init__(self, path: Path, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.disables = parse_disables(source)
+        # alias -> full module name ("np" -> "numpy", "jax" -> "jax")
+        self.module_aliases: dict[str, str] = {}
+        # local name -> (module, original name) for `from m import x [as y]`
+        self.imports_from: dict[str, tuple[str, str]] = {}
+        # module-level `alias = other_name`
+        self.assigns: dict[str, str] = {}
+        # every def in the file (module-level AND nested), by name
+        self.functions: dict[str, list[ast.FunctionDef]] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.module_aliases[a.asname or a.name.split(".")[0]] = (
+                        a.name
+                    )
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    self.imports_from[a.asname or a.name] = (
+                        node.module,
+                        a.name,
+                    )
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.functions.setdefault(node.name, []).append(node)
+        for stmt in self.tree.body:
+            if (
+                isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and isinstance(stmt.value, ast.Name)
+            ):
+                self.assigns[stmt.targets[0].id] = stmt.value.id
+
+    # -- resolution helpers -------------------------------------------------
+
+    def resolves_to(self, node: ast.AST, module: str, name: str) -> bool:
+        """Does ``node`` reference ``module.name`` in this file's namespace?"""
+        chain = _attr_chain(node)
+        if chain is not None and "." in chain:
+            head, _, rest = chain.partition(".")
+            full = self.module_aliases.get(head)
+            if full is not None and f"{full}.{rest}" == f"{module}.{name}":
+                return True
+            # `from jax import numpy as jnp` style: imports_from maps the
+            # head to (module, orig)
+            imp = self.imports_from.get(head)
+            if imp is not None and (f"{imp[0]}.{imp[1]}.{rest}").endswith(
+                f"{module}.{name}"
+            ):
+                return True
+            return False
+        if isinstance(node, ast.Name):
+            imp = self.imports_from.get(node.id)
+            return imp is not None and imp == (module, name)
+        return False
+
+    def is_jit_ref(self, node: ast.AST) -> bool:
+        return self.resolves_to(node, "jax", "jit")
+
+    def is_shard_map_ref(self, node: ast.AST) -> bool:
+        chain = _attr_chain(node)
+        if chain is not None and chain.split(".")[-1] == "shard_map":
+            return True
+        imp = self.imports_from.get(chain) if chain else None
+        return imp is not None and imp[1] == "shard_map"
+
+    def is_partial_ref(self, node: ast.AST) -> bool:
+        return self.resolves_to(node, "functools", "partial")
+
+    def numpy_aliases(self) -> set[str]:
+        return {a for a, m in self.module_aliases.items() if m == "numpy"}
+
+    def numpy_names(self) -> set[str]:
+        """Names bound by ``from numpy import x [as y]``."""
+        return {
+            a for a, (m, _) in self.imports_from.items() if m == "numpy"
+        }
+
+    def is_time_time(self, node: ast.AST) -> bool:
+        """A reference to stdlib ``time.time``."""
+        if self.resolves_to(node, "time", "time"):
+            return True
+        chain = _attr_chain(node)
+        if chain is None:
+            return False
+        head, _, rest = chain.partition(".")
+        return rest == "time" and self.module_aliases.get(head) == "time"
+
+
+def _iter_py(root: Path, dirs=LINT_DIRS):
+    for d in dirs:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            yield p
+
+
+class _Linter:
+    def __init__(self, root: Path, allowlist: Allowlist):
+        self.root = root
+        self.allowlist = allowlist
+        self.violations: list[Violation] = []
+        self.files: dict[str, _FileInfo] = {}
+
+    def load(self, dirs=LINT_DIRS) -> None:
+        for p in _iter_py(self.root, dirs):
+            rel = p.relative_to(self.root).as_posix()
+            try:
+                self.files[rel] = _FileInfo(p, rel, p.read_text())
+            except SyntaxError as e:  # pragma: no cover - repo parses
+                self.emit("R1", rel, e.lineno or 1, 0, f"syntax error: {e}")
+
+    def emit(self, rule: str, relpath: str, line: int, col: int,
+             message: str) -> None:
+        if self.allowlist.allows(rule, relpath):
+            return
+        fi = self.files.get(relpath)
+        if fi is not None:
+            disabled = fi.disables.get(line, set())
+            if rule in disabled or "all" in disabled:
+                return
+        self.violations.append(Violation(rule, relpath, line, col, message))
+
+    # -- R1: wall-clock timing ---------------------------------------------
+
+    def check_r1(self, fi: _FileInfo) -> None:
+        for node in ast.walk(fi.tree):
+            if isinstance(node, ast.Call) and fi.is_time_time(node.func):
+                self.emit(
+                    "R1", fi.relpath, node.lineno, node.col_offset,
+                    "time.time() call; use the monotonic `now` from "
+                    "repro.serve.queue",
+                )
+
+    # -- R3: float64 leaks --------------------------------------------------
+
+    def check_r3(self, fi: _FileInfo) -> None:
+        for node in ast.walk(fi.tree):
+            if isinstance(node, ast.Attribute) and node.attr in (
+                "float64", "enable_x64",
+            ):
+                self.emit(
+                    "R3", fi.relpath, node.lineno, node.col_offset,
+                    f"reference to {node.attr} (engines are fp32/bf16 "
+                    "by contract)",
+                )
+            elif isinstance(node, ast.Name) and node.id == "float64":
+                self.emit(
+                    "R3", fi.relpath, node.lineno, node.col_offset,
+                    "reference to float64 (engines are fp32/bf16 by "
+                    "contract)",
+                )
+            elif isinstance(node, ast.Call):
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if isinstance(arg, ast.Constant) and arg.value in (
+                        "float64", "jax_enable_x64",
+                    ):
+                        self.emit(
+                            "R3", fi.relpath, arg.lineno, arg.col_offset,
+                            f"dtype/flag string {arg.value!r} passed to a "
+                            "call",
+                        )
+
+    # -- R4: raw tile literals in kernels/ -----------------------------------
+
+    def check_r4(self, fi: _FileInfo) -> None:
+        if not fi.relpath.startswith("src/repro/kernels/"):
+            return
+        if fi.relpath.endswith("/tiles.py"):
+            return
+        for node in ast.walk(fi.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                a = node.args
+                pairs = list(
+                    zip(a.args[len(a.args) - len(a.defaults):], a.defaults)
+                ) + [
+                    (arg, d)
+                    for arg, d in zip(a.kwonlyargs, a.kw_defaults)
+                    if d is not None
+                ]
+                for arg, default in pairs:
+                    if arg.arg.lower() in _TILE_PARAMS and isinstance(
+                        default, ast.Constant
+                    ) and isinstance(default.value, int):
+                        self.emit(
+                            "R4", fi.relpath, default.lineno,
+                            default.col_offset,
+                            f"tile parameter {arg.arg!r} defaults to raw "
+                            f"literal {default.value}; use repro.kernels."
+                            "tiles",
+                        )
+            elif isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    if kw.arg and kw.arg.lower() in _TILE_PARAMS and (
+                        isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, int)
+                    ):
+                        self.emit(
+                            "R4", fi.relpath, kw.value.lineno,
+                            kw.value.col_offset,
+                            f"tile keyword {kw.arg}={kw.value.value} is a "
+                            "raw literal; use repro.kernels.tiles",
+                        )
+        for stmt in fi.tree.body:
+            if (
+                isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and _TILE_CONST_RE.match(stmt.targets[0].id)
+                and isinstance(stmt.value, ast.Constant)
+                and isinstance(stmt.value.value, int)
+            ):
+                self.emit(
+                    "R4", fi.relpath, stmt.lineno, stmt.col_offset,
+                    f"tile constant {stmt.targets[0].id} bound to raw "
+                    f"literal {stmt.value.value}; import from repro."
+                    "kernels.tiles",
+                )
+
+    # -- R5: assert-as-validation in library code ----------------------------
+
+    def check_r5(self, fi: _FileInfo) -> None:
+        if not fi.relpath.startswith("src/"):
+            return
+        for node in ast.walk(fi.tree):
+            if isinstance(node, ast.Assert):
+                self.emit(
+                    "R5", fi.relpath, node.lineno, node.col_offset,
+                    "assert in library code is stripped under -O; raise "
+                    "ValueError/TypeError",
+                )
+
+    # -- R2: host sync inside jit-reachable functions ------------------------
+
+    def _src_modname(self, relpath: str) -> str | None:
+        if not relpath.startswith("src/") or not relpath.endswith(".py"):
+            return None
+        mod = relpath[len("src/"):-len(".py")].replace("/", ".")
+        if mod.endswith(".__init__"):
+            mod = mod[: -len(".__init__")]
+        return mod
+
+    def check_r2(self) -> None:
+        # module name -> file info, for the src/ package only
+        mods: dict[str, _FileInfo] = {}
+        for rel, fi in self.files.items():
+            mod = self._src_modname(rel)
+            if mod is not None:
+                mods[mod] = fi
+
+        Node = tuple  # (modname, ast.FunctionDef)
+        roots: list[Node] = []
+
+        def add_root_callable(fi: _FileInfo, mod: str, node: ast.AST) -> None:
+            """args[0] of a jax.jit(...)/shard_map(...) call."""
+            if isinstance(node, ast.Name):
+                name = fi.assigns.get(node.id, node.id)
+                for fdef in fi.functions.get(name, []):
+                    roots.append((mod, fdef))
+            elif isinstance(node, ast.Call):
+                # jax.jit(shard_map(local, ...)) and friends
+                if node.args:
+                    add_root_callable(fi, mod, node.args[0])
+            elif isinstance(node, ast.Lambda):
+                roots.append((mod, node))
+
+        for mod, fi in mods.items():
+            for node in ast.walk(fi.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        if fi.is_jit_ref(dec) or fi.is_shard_map_ref(dec):
+                            roots.append((mod, node))
+                        elif isinstance(dec, ast.Call):
+                            if fi.is_jit_ref(dec.func) or fi.is_shard_map_ref(
+                                dec.func
+                            ):
+                                roots.append((mod, node))
+                            elif (
+                                fi.is_partial_ref(dec.func)
+                                and dec.args
+                                and (
+                                    fi.is_jit_ref(dec.args[0])
+                                    or fi.is_shard_map_ref(dec.args[0])
+                                )
+                            ):
+                                roots.append((mod, node))
+                elif isinstance(node, ast.Call) and (
+                    fi.is_jit_ref(node.func) or fi.is_shard_map_ref(node.func)
+                ):
+                    if node.args:
+                        add_root_callable(fi, mod, node.args[0])
+
+        # BFS over the package call graph
+        seen: set[tuple[str, int]] = set()
+        work = list(roots)
+        reachable: list[Node] = []
+        while work:
+            mod, fdef = work.pop()
+            key = (mod, id(fdef))
+            if key in seen:
+                continue
+            seen.add(key)
+            reachable.append((mod, fdef))
+            fi = mods[mod]
+            for node in ast.walk(fdef):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                if isinstance(f, ast.Name):
+                    name = fi.assigns.get(f.id, f.id)
+                    if name in fi.functions:
+                        for tgt in fi.functions[name]:
+                            work.append((mod, tgt))
+                    elif name in fi.imports_from:
+                        m, orig = fi.imports_from[name]
+                        tfi = mods.get(m)
+                        if tfi is not None:
+                            for tgt in tfi.functions.get(orig, []):
+                                work.append((m, tgt))
+                elif isinstance(f, ast.Attribute) and isinstance(
+                    f.value, ast.Name
+                ):
+                    m = fi.module_aliases.get(f.value.id)
+                    if m is None:
+                        imp = fi.imports_from.get(f.value.id)
+                        if imp is not None:
+                            m = f"{imp[0]}.{imp[1]}"
+                    tfi = mods.get(m) if m else None
+                    if tfi is not None:
+                        for tgt in tfi.functions.get(f.attr, []):
+                            work.append((m, tgt))
+
+        # scan every reachable function body for host-sync primitives
+        flagged: set[tuple[str, int, str]] = set()
+        for mod, fdef in reachable:
+            fi = mods[mod]
+            np_aliases = fi.numpy_aliases()
+            np_names = fi.numpy_names()
+            fname = getattr(fdef, "name", "<lambda>")
+            for node in ast.walk(fdef):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                msg = None
+                if (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id in np_aliases
+                ):
+                    msg = (
+                        f"numpy call {f.value.id}.{f.attr}() in "
+                        f"jit-reachable function {fname!r} (host sync / "
+                        "trace break)"
+                    )
+                elif isinstance(f, ast.Attribute) and f.attr == "item":
+                    msg = (
+                        f".item() in jit-reachable function {fname!r} "
+                        "(forces a device sync)"
+                    )
+                elif isinstance(f, ast.Name) and f.id in np_names:
+                    msg = (
+                        f"numpy call {f.id}() in jit-reachable function "
+                        f"{fname!r} (host sync / trace break)"
+                    )
+                elif (
+                    isinstance(f, ast.Name)
+                    and f.id in _SYNC_BUILTINS
+                    and node.args
+                    and not all(
+                        isinstance(a, ast.Constant) for a in node.args
+                    )
+                ):
+                    msg = (
+                        f"{f.id}() on a non-constant operand in "
+                        f"jit-reachable function {fname!r} (host sync on "
+                        "traced values)"
+                    )
+                if msg is not None:
+                    key = (fi.relpath, node.lineno, msg)
+                    if key not in flagged:
+                        flagged.add(key)
+                        self.emit(
+                            "R2", fi.relpath, node.lineno,
+                            node.col_offset, msg,
+                        )
+
+
+def lint_repo(
+    root: Path, allowlist: Allowlist | None = None, dirs=LINT_DIRS
+) -> list[Violation]:
+    """Run every rule over ``dirs`` under ``root``; returns sorted
+    violations."""
+    if allowlist is None:
+        allowlist = load_allowlist()
+    linter = _Linter(root, allowlist)
+    linter.load(dirs)
+    for fi in linter.files.values():
+        linter.check_r1(fi)
+        linter.check_r3(fi)
+        linter.check_r4(fi)
+        linter.check_r5(fi)
+    linter.check_r2()
+    return sorted(
+        linter.violations, key=lambda v: (v.path, v.line, v.col, v.rule)
+    )
+
+
+def lint_paths(
+    root: Path, relpaths: list[str], allowlist: Allowlist | None = None
+) -> list[Violation]:
+    """Lint specific files (repo-relative) — the unit the fixture tests
+    drive.  R2's call graph still spans all of ``src/`` so reachability is
+    computed against the real package."""
+    all_v = lint_repo(root, allowlist)
+    keep = set(relpaths)
+    return [v for v in all_v if v.path in keep]

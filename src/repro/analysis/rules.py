@@ -1,0 +1,151 @@
+"""Rule registry, diagnostics, and suppression machinery for the repo lint.
+
+Each rule protects a load-bearing invariant that earlier PRs established
+but nothing previously enforced (see ROADMAP "Invariants & static
+analysis").  A rule fires as a :class:`Violation` carrying the rule id,
+repo-relative path, and 1-based line/column — the unit every consumer
+(CLI text output, the JSON report, the test fixtures) works in.
+
+Two suppression channels, both reviewable in-repo:
+
+* inline ``# lint: disable=R3`` (comma-separated ids, or ``all``) on the
+  offending line — for one-off intentional exceptions next to the code;
+* ``allowlist.txt`` next to this module — ``<RULE> <glob>`` per line,
+  fnmatch'd against repo-relative paths — for whole-file exemptions like
+  the float64 numpy oracles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from pathlib import Path
+
+__all__ = [
+    "Rule",
+    "RULES",
+    "Violation",
+    "Allowlist",
+    "load_allowlist",
+    "parse_disables",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """One lint rule: stable id, short name, and what it protects."""
+
+    id: str
+    name: str
+    summary: str
+
+
+RULES: dict[str, Rule] = {
+    r.id: r
+    for r in (
+        Rule(
+            "R1",
+            "wall-clock-timing",
+            "time.time() for durations — use the shared monotonic `now` "
+            "from repro.serve.queue (wall clock steps under NTP)",
+        ),
+        Rule(
+            "R2",
+            "host-sync-in-jit",
+            "host-sync primitive (np.* call, .item(), float()/int() on "
+            "arrays) inside a function reachable from jax.jit/shard_map — "
+            "breaks tracing or forces a device sync",
+        ),
+        Rule(
+            "R3",
+            "float64-leak",
+            "float64 / enable_x64 outside the allowlisted numpy oracles — "
+            "the engines are fp32/bf16 by contract (PR 6 margin proof)",
+        ),
+        Rule(
+            "R4",
+            "raw-tile-literal",
+            "raw tile-size literal in kernels/ — tile shapes must come "
+            "from repro.kernels.tiles so REPRO_TILE_* overrides reach "
+            "every kernel",
+        ),
+        Rule(
+            "R5",
+            "assert-validation",
+            "bare `assert` used for input validation in library code — "
+            "stripped under python -O; raise ValueError/TypeError",
+        ),
+    )
+}
+
+# inline escape hatch: `# lint: disable=R1` / `disable=R1,R5` / `disable=all`
+_DISABLE_RE = re.compile(r"#\s*lint:\s*disable=([A-Za-z0-9,\s]+)")
+
+
+def parse_disables(source: str) -> dict[int, set[str]]:
+    """Map 1-based line number -> set of rule ids disabled on that line
+    (the literal string ``"all"`` disables every rule)."""
+    out: dict[int, set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _DISABLE_RE.search(line)
+        if m:
+            ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            out[i] = ids
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One diagnostic: rule id + repo-relative location + message."""
+
+    rule: str
+    path: str  # repo-relative, posix separators
+    line: int  # 1-based
+    col: int  # 0-based (ast convention)
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Allowlist:
+    """``<RULE> <glob>`` entries fnmatch'd against repo-relative paths.
+
+    Lines starting with ``#`` and blank lines are ignored; an inline
+    ``# reason`` after the glob is stripped.  Unknown rule ids are an
+    error at load time — a typo'd allowlist entry must not silently
+    suppress nothing."""
+
+    def __init__(self, entries: list[tuple[str, str]]):
+        for rule, _ in entries:
+            if rule not in RULES:
+                raise ValueError(f"allowlist names unknown rule {rule!r}")
+        self.entries = entries
+
+    def allows(self, rule: str, relpath: str) -> bool:
+        return any(
+            r == rule and fnmatch.fnmatch(relpath, pat)
+            for r, pat in self.entries
+        )
+
+
+def load_allowlist(path: Path | None = None) -> Allowlist:
+    """Load the checked-in allowlist (``allowlist.txt`` beside this module
+    by default)."""
+    if path is None:
+        path = Path(__file__).parent / "allowlist.txt"
+    entries: list[tuple[str, str]] = []
+    if path.exists():
+        for raw in path.read_text().splitlines():
+            line = raw.split("#", 1)[0].strip()
+            if not line:
+                continue
+            parts = line.split(None, 1)
+            if len(parts) != 2:
+                raise ValueError(f"bad allowlist line: {raw!r}")
+            entries.append((parts[0], parts[1].strip()))
+    return Allowlist(entries)

@@ -201,7 +201,8 @@ def get_metric(name: str) -> Metric:
         base, _, exp = name.partition("^")
         if base in METRICS:
             try:
-                alpha = float(exp)
+                # parses a STATIC metric-name string at trace time
+                alpha = float(exp)  # lint: disable=R2
             except ValueError:
                 alpha = None
             # only canonical names register ("l1^0.5", not "l1^0.50") — a

@@ -77,9 +77,12 @@ def register_power(base: str, alpha: float) -> str:
     name = f"{base}^{alpha}"
     if name not in _FNS:
         base_fn = _FNS[base]
-        _FNS[name] = lambda x, y, _b=base_fn, _a=alpha: np.power(
-            np.maximum(_b(x, y), 0.0), _a
-        )
+
+        def pw(x, y, _b=base_fn, _a=alpha):
+            # host-side numpy twin: runs on numpy arrays only, never traced
+            return np.power(np.maximum(_b(x, y), 0.0), _a)  # lint: disable=R2
+
+        _FNS[name] = pw
     return name
 
 

@@ -154,7 +154,8 @@ def _make_selector(variant: str):
         return select, None, True
 
     kind, strategy, arity_name = variant.split("_")
-    assert kind == "hpt"
+    if kind != "hpt":
+        raise ValueError(f"unknown tree variant family {kind!r} in {variant!r}")
     arity_fn = {
         "binary": _arity_binary,
         "fixed": _arity_fixed,

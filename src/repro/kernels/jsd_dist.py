@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiles import TILE_KCHUNK
+from repro.kernels.tiles import TILE_KCHUNK, TILE_VPU
 
 __all__ = ["pairwise_jsd_kernel_call"]
 
@@ -75,8 +75,8 @@ def pairwise_jsd_kernel_call(
     x: jnp.ndarray,
     y: jnp.ndarray,
     *,
-    bm: int = 64,
-    bn: int = 64,
+    bm: int = TILE_VPU,
+    bn: int = TILE_VPU,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
     """(m, K), (n, K) probability vectors -> (m, n) JS distance matrix."""

@@ -18,6 +18,7 @@ from repro.kernels.pairwise_dist import (
     pairwise_l2_kernel_call,
 )
 from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
+from repro.kernels.tiles import TILE_BLOCK, TILE_BQ
 
 __all__ = [
     "pairwise_l2",
@@ -45,8 +46,8 @@ def bss_query_fused(
     data: jnp.ndarray,
     t: float,
     *,
-    block: int = 128,
-    bq: int = 128,
+    block: int = TILE_BLOCK,
+    bq: int = TILE_BQ,
     interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Full TPU-native BSS range query (dense masked form).

@@ -129,7 +129,10 @@ def _pairwise_call(tile_kernel, x, y, *, bm, bn, interpret):
     """Shared (grid, padding, pallas_call) plumbing for unmasked tiles."""
     m, k = x.shape
     n, k2 = y.shape
-    assert k == k2, (x.shape, y.shape)
+    if k != k2:
+        raise ValueError(
+            f"x and y must share the feature dimension: {x.shape} vs {y.shape}"
+        )
     xp = _pad_to(x, bm, 0)
     yp = _pad_to(y, bn, 0)
     mp, np_ = xp.shape[0], yp.shape[0]
@@ -157,7 +160,11 @@ def _masked_call(tile_kernel, x, y, tile_mask, *, bm, bn, interpret):
     yp = _pad_to(y, bn, 0)
     mp, np_ = xp.shape[0], yp.shape[0]
     grid = (mp // bm, np_ // bn)
-    assert tile_mask.shape == grid, (tile_mask.shape, grid)
+    if tile_mask.shape != grid:
+        raise ValueError(
+            f"tile_mask shape {tile_mask.shape} does not match the "
+            f"(m_tiles, n_tiles) grid {grid}"
+        )
     out = pl.pallas_call(
         functools.partial(_masked_tile_kernel, tile_kernel=tile_kernel),
         grid=grid,

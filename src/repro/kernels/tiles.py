@@ -10,6 +10,7 @@ environment variable at import time:
     REPRO_TILE_BQ      query-tile rows   (kernel bm / bq)      default 128
     REPRO_TILE_BLOCK   corpus-block cols (kernel bn / bb)      default 128
     REPRO_TILE_KCHUNK  K lanes reduced per VPU pass            default 64
+    REPRO_TILE_VPU     standalone VPU-kernel tile (bm = bn)    default 64
 
 This module is import-light on purpose (no jax): it must be readable by
 tooling/subprocesses without paying the jax import.  Consumers:
@@ -22,7 +23,7 @@ from __future__ import annotations
 
 import os
 
-__all__ = ["TILE_BQ", "TILE_BLOCK", "TILE_KCHUNK"]
+__all__ = ["TILE_BQ", "TILE_BLOCK", "TILE_KCHUNK", "TILE_VPU"]
 
 
 def _env_int(name: str, default: int) -> int:
@@ -48,3 +49,9 @@ TILE_BLOCK = _env_int("REPRO_TILE_BLOCK", 128)
 # K lanes reduced per VPU pass in the broadcast-reduction tile kernels
 # (jsd / triangular); bounds the (bm, bn, Kc) VMEM transient
 TILE_KCHUNK = _env_int("REPRO_TILE_KCHUNK", 64)
+
+# default square tile of the STANDALONE VPU kernels (the unmasked
+# jsd/triangular entry points, where the transcendental cost dominates and
+# a smaller tile keeps the broadcast transient cheap); the BSS masked
+# exact phase always overrides with bm=TILE_BQ / bn=TILE_BLOCK
+TILE_VPU = _env_int("REPRO_TILE_VPU", 64)

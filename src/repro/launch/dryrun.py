@@ -27,12 +27,13 @@ import argparse
 import dataclasses
 import json
 import re
-import time
 import traceback
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+from repro.serve.queue import now
 
 from repro.configs import common
 from repro.configs.registry import all_cells, get_arch, registry
@@ -304,7 +305,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True) -> di
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": cell.skip}
     model = bundle.model_for(shape_name)
-    t0 = time.time()
+    t0 = now()
 
     with jax.set_mesh(mesh):
         batch_sds = _sds_with_sharding(cell.inputs(), cell.input_partition(mesh), mesh)
@@ -399,7 +400,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True) -> di
                     p, b, block=block, budget_blocks=3136)
                 opt_compiled = jax.jit(fwd).lower(params_sds, idx_sds).compile()
 
-        lower_s = time.time() - t0
+        lower_s = now() - t0
         rec = {
             "arch": arch,
             "shape": shape_name,
@@ -413,9 +414,9 @@ def lower_cell(arch: str, shape_name: str, mesh, *, compile_: bool = True) -> di
         if not compile_:
             return rec
 
-        t1 = time.time()
+        t1 = now()
         compiled = lowered.compile()
-        rec["compile_seconds"] = round(time.time() - t1, 2)
+        rec["compile_seconds"] = round(now() - t1, 2)
         rec["status"] = "compiled"
 
         mem = compiled.memory_analysis()

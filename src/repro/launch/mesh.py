@@ -24,5 +24,9 @@ def make_local_mesh(model_parallel: int = 1):
     """Mesh over whatever devices exist (tests / single-host runs / elastic
     restarts: the mesh is derived from the LIVE device list)."""
     n = jax.device_count()
-    assert n % model_parallel == 0
+    if n % model_parallel != 0:
+        raise ValueError(
+            f"device count {n} not divisible by model_parallel "
+            f"{model_parallel}"
+        )
     return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

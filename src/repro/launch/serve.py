@@ -7,12 +7,12 @@ supermetric index, serve batched retrieval queries.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
+from repro.serve.queue import now
 from repro.serve.retrieval import RetrievalServer
 
 
@@ -36,9 +36,9 @@ def main() -> None:
     corpus = np.asarray(model.item_embed(params, item_ids))
     users = np.asarray(model.user_embed(params, user_ids))
 
-    t0 = time.time()
+    t0 = now()
     server = RetrievalServer(corpus)
-    print(f"built supermetric index in {time.time() - t0:.2f}s "
+    print(f"built supermetric index in {now() - t0:.2f}s "
           f"({server.index.n_blocks} blocks)")
 
     if args.min_score is not None:
@@ -46,9 +46,9 @@ def main() -> None:
         sizes = [len(h) for h in hits]
         print(f"range query >= {args.min_score}: mean {np.mean(sizes):.1f} hits")
     else:
-        t0 = time.time()
+        t0 = now()
         top = server.top_k(users, args.k)
-        dt = time.time() - t0
+        dt = now() - t0
         print(f"top-{args.k} for {args.queries} queries in {dt:.2f}s")
     s = server.stats
     print(f"distances/query: {s.dists_per_query:.0f} "

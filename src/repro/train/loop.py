@@ -17,7 +17,6 @@ the 512-chip production mesh):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable
 
 import jax
@@ -25,6 +24,7 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.optim import Optimizer
+from repro.serve.queue import now
 from repro.train.step import init_state, make_train_step
 
 __all__ = ["TrainLoop", "TrainLoopConfig"]
@@ -85,10 +85,10 @@ class TrainLoop:
         start = int(state["step"])
         for step in range(start, self.cfg.total_steps):
             batch = self.stream.next()
-            t0 = time.time()
+            t0 = now()
             state, metrics = self.step_fn(state, batch)
             loss = float(metrics["loss"])  # blocks; = per-step sync point
-            dt = time.time() - t0
+            dt = now() - t0
             self.losses.append(loss)
             ema = dt if ema is None else 0.9 * ema + 0.1 * dt
             if dt > self.cfg.straggler_factor * ema and step > start + 3:

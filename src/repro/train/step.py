@@ -42,7 +42,11 @@ def make_train_step(
     def split_mb(batch):
         def r(x):
             b = x.shape[0]
-            assert b % microbatches == 0, (b, microbatches)
+            if b % microbatches != 0:
+                raise ValueError(
+                    f"batch size {b} not divisible by microbatches "
+                    f"{microbatches}"
+                )
             return x.reshape(microbatches, b // microbatches, *x.shape[1:])
 
         return jax.tree.map(r, batch)

@@ -1,0 +1,480 @@
+"""Tests for repro.analysis — the AST lint (layer 1), the jaxpr audit
+internals (layer 2), and the CLI self-check at HEAD.
+
+The lint fixtures are tiny synthetic repos written into tmp_path: each
+violating fixture trips EXACTLY its one rule at a known line, and the
+does-not-flag suite pins down the false-positive boundary (xp-generic
+code, constant folding, strings in non-call positions).
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import lint_repo
+from repro.analysis.rules import RULES, Allowlist, load_allowlist
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+EMPTY = Allowlist([])
+
+
+def mini_repo(tmp_path: Path, files: dict[str, str]) -> Path:
+    """Write a throwaway repo tree; keys are repo-relative paths."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return tmp_path
+
+
+def run_lint(tmp_path: Path, files: dict[str, str]):
+    return lint_repo(mini_repo(tmp_path, files), EMPTY)
+
+
+def _subprocess_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+# ---------------------------------------------------------------------------
+# rule registry basics
+# ---------------------------------------------------------------------------
+
+
+def test_rule_registry_complete():
+    assert set(RULES) == {"R1", "R2", "R3", "R4", "R5"}
+    for rid, rule in RULES.items():
+        assert rule.summary, rid
+
+
+def test_allowlist_rejects_unknown_rule():
+    with pytest.raises(ValueError, match="unknown rule"):
+        Allowlist([("R9", "src/*")])
+
+
+def test_checked_in_allowlist_loads():
+    al = load_allowlist()
+    assert al.allows("R3", "src/repro/core/npdist.py")
+    assert not al.allows("R1", "src/repro/core/npdist.py")
+
+
+# ---------------------------------------------------------------------------
+# R1: wall-clock timing
+# ---------------------------------------------------------------------------
+
+
+def test_r1_flags_time_time(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import time
+
+        def f():
+            return time.time()
+        """})
+    assert [(x.rule, x.path, x.line) for x in v] == [
+        ("R1", "src/repro/x.py", 4)
+    ]
+
+
+def test_r1_flags_from_import_alias(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        from time import time as wall
+
+        def f():
+            return wall()
+        """})
+    assert [x.rule for x in v] == ["R1"]
+    assert v[0].line == 4
+
+
+def test_r1_ignores_perf_counter(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import time
+
+        def f():
+            return time.perf_counter()
+        """})
+    assert v == []
+
+
+def test_r1_inline_disable(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import time
+
+        def f():
+            return time.time()  # lint: disable=R1
+        """})
+    assert v == []
+
+
+def test_reverting_the_timing_fix_would_fail_lint(tmp_path):
+    """Acceptance check: put the pre-fix ``time.time()`` pattern back into
+    a copy of train/loop.py and the lint must fire on it."""
+    src = (REPO_ROOT / "src/repro/train/loop.py").read_text()
+    assert "time.time()" not in src  # the fix is in place at HEAD
+    reverted = src.replace(
+        "from repro.serve.queue import now", "import time"
+    ).replace("now()", "time.time()")
+    assert "time.time()" in reverted
+    v = run_lint(tmp_path, {"src/repro/train/loop.py": reverted})
+    assert any(x.rule == "R1" for x in v)
+
+
+# ---------------------------------------------------------------------------
+# R2: host sync inside jit-reachable functions
+# ---------------------------------------------------------------------------
+
+
+def test_r2_flags_numpy_in_jit(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.sum(x)
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R2", 6)]
+
+
+def test_r2_requires_jit_reachability(tmp_path):
+    # same numpy call, no jit anywhere -> host code, fine
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import numpy as np
+
+        def f(x):
+            return np.sum(x)
+        """})
+    assert v == []
+
+
+def test_r2_follows_call_graph(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+
+        def helper(x):
+            return float(x)
+
+        @jax.jit
+        def f(x):
+            return helper(x)
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R2", 4)]
+
+
+def test_r2_follows_cross_module_import(tmp_path):
+    v = run_lint(tmp_path, {
+        "src/repro/a.py": """\
+            import numpy as np
+
+            def helper(x):
+                return np.asarray(x)
+            """,
+        "src/repro/b.py": """\
+            import jax
+            from repro.a import helper
+
+            @jax.jit
+            def f(x):
+                return helper(x)
+            """,
+    })
+    assert [(x.rule, x.path, x.line) for x in v] == [
+        ("R2", "src/repro/a.py", 4)
+    ]
+
+
+def test_r2_flags_item_and_dynamic_jit_arg(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+
+        def local(x):
+            return x.item()
+
+        g = jax.jit(local)
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R2", 4)]
+
+
+def test_r2_constant_float_is_fine(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x + float(3)
+        """})
+    assert v == []
+
+
+# ---------------------------------------------------------------------------
+# R3: float64 leaks
+# ---------------------------------------------------------------------------
+
+
+def test_r3_flags_attribute_and_string(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax.numpy as jnp
+
+        def f(x):
+            return x.astype(jnp.float64)
+
+        def g(x):
+            return x.astype("float64")
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R3", 4), ("R3", 7)]
+
+
+def test_r3_flags_x64_flag(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        """})
+    assert all(x.rule == "R3" for x in v) and v
+
+
+def test_r3_ignores_string_outside_calls(tmp_path):
+    # docs/enumerations mentioning the dtype are not leaks
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        FORBIDDEN_DTYPES = ["float64", "complex128"]
+        """})
+    assert v == []
+
+
+def test_r3_allowlist_glob(tmp_path):
+    root = mini_repo(tmp_path, {"src/repro/oracle.py": """\
+        import numpy as np
+
+        def f(x):
+            return np.asarray(x, np.float64)
+        """})
+    assert [x.rule for x in lint_repo(root, EMPTY)] == ["R3"]
+    al = Allowlist([("R3", "src/repro/oracle.py")])
+    assert lint_repo(root, al) == []
+
+
+# ---------------------------------------------------------------------------
+# R4: raw tile literals in kernels/
+# ---------------------------------------------------------------------------
+
+
+def test_r4_flags_literal_tile_default(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/kernels/k.py": """\
+        def kernel_call(x, *, bm: int = 64, bn: int = 128):
+            return x
+        """})
+    assert [x.rule for x in v] == ["R4", "R4"]
+    assert {x.line for x in v} == {1}
+
+
+def test_r4_flags_tile_constant_and_keyword(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/kernels/k.py": """\
+        TILE_FOO = 256
+
+        def f(x):
+            return g(x, block=64)
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R4", 1), ("R4", 4)]
+
+
+def test_r4_only_applies_to_kernels(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/core/k.py": """\
+        def f(x, bm=64):
+            return x
+        """})
+    assert v == []
+
+
+def test_r4_tiles_module_is_the_one_home(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/kernels/tiles.py": """\
+        TILE_BM = 64
+        """})
+    assert v == []
+
+
+# ---------------------------------------------------------------------------
+# R5: assert-as-validation
+# ---------------------------------------------------------------------------
+
+
+def test_r5_flags_assert_in_src(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        def f(x):
+            assert x > 0, "bad"
+            return x
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R5", 2)]
+
+
+def test_r5_allows_assert_in_tests(tmp_path):
+    v = run_lint(tmp_path, {"tests/test_x.py": """\
+        def test_f():
+            assert 1 + 1 == 2
+        """})
+    assert v == []
+
+
+# ---------------------------------------------------------------------------
+# the converted validations survive python -O (what R5 protects)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("snippet,match", [
+    (
+        "from repro.kernels.pairwise_dist import pairwise_l2_kernel_call\n"
+        "import numpy as np\n"
+        "pairwise_l2_kernel_call(np.zeros((4, 8), np.float32),"
+        " np.zeros((4, 7), np.float32))",
+        "feature dimension",
+    ),
+    (
+        "from repro.core.tree import _make_selector\n"
+        "_make_selector('zzz_random_fixed')",
+        "unknown tree variant family",
+    ),
+])
+def test_validation_survives_dash_O(snippet, match):
+    code = (
+        "import pytest\n"
+        f"with pytest.raises(ValueError, match={match!r}):\n"
+        + textwrap.indent(snippet, "    ")
+        + "\nprint('OK')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-O", "-c", code],
+        capture_output=True, text=True, env=_subprocess_env(),
+        cwd=REPO_ROOT, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# layer 2 internals: taint / callback / f64 walkers
+# ---------------------------------------------------------------------------
+
+
+def test_taint_propagates_through_cast():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import _taint_jaxpr
+
+    closed = jax.make_jaxpr(
+        lambda x: x.astype(jnp.float32) * 2.0
+    )(jnp.ones((4,), jnp.bfloat16))
+    out = _taint_jaxpr(closed.jaxpr, [True], consts=closed.consts)
+    assert out == [True]
+
+
+def test_taint_respects_independence():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import _taint_jaxpr
+
+    # second output never touches the bf16 input — must stay clean
+    closed = jax.make_jaxpr(
+        lambda x16, m: (x16.sum(), m & (m | True))
+    )(jnp.ones((4,), jnp.bfloat16), jnp.ones((4,), bool))
+    out = _taint_jaxpr(closed.jaxpr, [True, False], consts=closed.consts)
+    assert out == [True, False]
+
+
+def test_taint_through_scan_carry():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import _taint_jaxpr
+
+    def f(x16, ys):
+        def body(c, y):
+            return c + y, c
+        return jax.lax.scan(body, x16.astype(jnp.float32).sum(), ys)
+
+    closed = jax.make_jaxpr(f)(
+        jnp.ones((4,), jnp.bfloat16), jnp.ones((3,), jnp.float32)
+    )
+    out = _taint_jaxpr(closed.jaxpr, [True, False], consts=closed.consts)
+    # both the final carry and the stacked outputs flow from the bf16 seed
+    assert out == [True, True]
+
+
+def test_callback_walker_catches_pure_callback():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import _all_jaxprs
+
+    def f(x):
+        return jax.pure_callback(
+            lambda a: np.asarray(a), jax.ShapeDtypeStruct((4,), np.float32),
+            x,
+        )
+
+    closed = jax.make_jaxpr(f)(jnp.ones((4,), jnp.float32))
+    prims = {
+        eqn.primitive.name
+        for j in _all_jaxprs(closed.jaxpr)
+        for eqn in j.eqns
+    }
+    assert "pure_callback" in prims
+
+
+def test_bf16_detector():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.jaxpr_audit import _Capture, _has_bf16
+
+    c16, s16 = jax.make_jaxpr(lambda x: x * 2, return_shape=True)(
+        jnp.ones((4,), jnp.bfloat16)
+    )
+    c32, s32 = jax.make_jaxpr(lambda x: x * 2, return_shape=True)(
+        jnp.ones((4,), jnp.float32)
+    )
+    assert _has_bf16(_Capture("f", "cell", c16, s16))
+    assert not _has_bf16(_Capture("f", "cell", c32, s32))
+
+
+# ---------------------------------------------------------------------------
+# self-check: the repo at HEAD is clean
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lint_is_clean_at_head():
+    assert lint_repo(REPO_ROOT, load_allowlist()) == []
+
+
+def test_cli_lint_only_exits_zero():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only",
+         "--root", str(REPO_ROOT)],
+        capture_output=True, text=True, env=_subprocess_env(),
+        cwd=REPO_ROOT, timeout=300,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "lint: 0 violation(s)" in out.stdout
+
+
+def test_smoke_audit_is_clean_at_head():
+    """The l2 column of the jaxpr audit plus the compile-cache replay —
+    the same gate `python -m repro.analysis` (default mode) applies."""
+    from repro.analysis.jaxpr_audit import audit_compile_cache, run_audit
+
+    problems = run_audit(full=False)
+    assert problems == [], [p.format() for p in problems]
+    cache_problems, info = audit_compile_cache()
+    assert cache_problems == [], [p.format() for p in cache_problems]
+    if not info.get("skipped"):
+        assert info["growth"], info
