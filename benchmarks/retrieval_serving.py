@@ -321,6 +321,9 @@ def run_async(seed: int = 0, smoke: bool = False,
             "sync_service_ms": round(1e3 * s1, 3), "smoke": bool(smoke),
         },
         "rates": records,
+        # the highest-rate front's full metrics snapshot (repro.obs):
+        # exclusion attribution, span/batch histograms, recompile counters
+        "metrics": front.metrics().snapshot(),
     })
     return rows
 

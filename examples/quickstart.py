@@ -180,3 +180,25 @@ for v in violations:
 assert not violations
 print("invariant lint: clean (run `python -m repro.analysis` for the "
       "full jaxpr audit)")
+
+# 12. observability: the front (and every engine) reports what it pruned
+#     and why.  Device-side counts (per-mechanism exclusion attribution,
+#     tile counts, bf16 re-check volume) are FUNCTIONAL jit outputs in the
+#     stats dicts — no callbacks, nothing the invariant checker of step 11
+#     would reject, and provably zero effect on results — folded into a
+#     metrics registry at the jit boundary.  front.metrics().render() is
+#     the one-screen dashboard (.to_prometheus() the scrape endpoint), and
+#     front.explain(trace_id) replays one request: stage-by-stage span
+#     timings plus that row's share of the batch accounting.
+with ServingFront(idx, max_delay_s=0.005) as front:
+    answers = [front.submit(qv, "range", t=t).result(timeout=120)
+               for qv in queries[:8]]
+    print(front.metrics().render())
+    trace = front.explain(answers[0].trace_id)
+assert answers[0].hits == hits[0]  # metrics on: results still identical
+print(
+    f"explain {trace['trace_id']}: {trace['n_dists']} exact distances, "
+    f"excluded {trace['excluded']} blocks, span total "
+    f"{1e3 * trace['spans']['total']:.1f}ms "
+    f"(engine {1e3 * trace['spans']['engine']:.1f}ms)"
+)

@@ -442,19 +442,23 @@ def _spec_knn_round_bf16(out):
 
 
 def _spec_forest_walk(out):
-    ref_hits, leaf_hit, counts, band, rtiles = out
+    # obs (exclusion attribution + frontier occupancy) is derived from the
+    # fp32 bound phase only, so it must stay untainted — instrumenting the
+    # walker STRENGTHENED this audit rather than weakening it
+    ref_hits, leaf_hit, counts, band, rtiles, obs = out
     return (
         _mask(ref_hits, True), _mask(leaf_hit, False),
         _mask(counts, True), _mask(band, False), _mask(rtiles, False),
+        _mask(obs, True),
     )
 
 
 def _spec_monotone_walk(out):
-    root_hit, p2_hits, leaf_hit, counts, band, rtiles = out
+    root_hit, p2_hits, leaf_hit, counts, band, rtiles, obs = out
     return (
         _mask(root_hit, True), _mask(p2_hits, True),
         _mask(leaf_hit, False), _mask(counts, True), _mask(band, False),
-        _mask(rtiles, False),
+        _mask(rtiles, False), _mask(obs, True),
     )
 
 

@@ -10,8 +10,12 @@ call, including nested defs like the sharded engine's ``local`` closures)
 — and flags host-sync primitives (``np.*`` calls, ``.item()``,
 ``float()``/``int()`` on non-constant operands) in any function reachable
 from a root.  Edges resolve same-module calls, ``from repro.x import f``
-names, ``repro.x.f`` module-alias attribute calls, and one hop of
-module-level ``alias = f`` assignment.
+names, ``repro.x.f`` module-alias attribute calls, and module-level
+aliasing TRANSITIVELY: chained ``a = f; b = a`` assignments, re-exported
+``from repro.x import f`` names followed into their defining module, and
+attribute-chained re-exports (``use = helper.np_user``) — all bounded by a
+resolution depth and a cycle guard, so pathological alias graphs cannot
+hang the lint.
 
 Everything is pure ``ast`` — no imports of the linted code, so the lint
 runs in milliseconds and never pays (or is confused by) jax import
@@ -71,6 +75,8 @@ class _FileInfo:
         self.imports_from: dict[str, tuple[str, str]] = {}
         # module-level `alias = other_name`
         self.assigns: dict[str, str] = {}
+        # module-level `alias = a.b.c` (attribute-chained re-export)
+        self.attr_assigns: dict[str, str] = {}
         # every def in the file (module-level AND nested), by name
         self.functions: dict[str, list[ast.FunctionDef]] = {}
         for node in ast.walk(self.tree):
@@ -92,11 +98,27 @@ class _FileInfo:
                 isinstance(stmt, ast.Assign)
                 and len(stmt.targets) == 1
                 and isinstance(stmt.targets[0], ast.Name)
-                and isinstance(stmt.value, ast.Name)
             ):
-                self.assigns[stmt.targets[0].id] = stmt.value.id
+                if isinstance(stmt.value, ast.Name):
+                    self.assigns[stmt.targets[0].id] = stmt.value.id
+                elif isinstance(stmt.value, ast.Attribute):
+                    chain = _attr_chain(stmt.value)
+                    if chain is not None:
+                        self.attr_assigns[stmt.targets[0].id] = chain
 
     # -- resolution helpers -------------------------------------------------
+
+    def resolve_assign(self, name: str) -> str:
+        """Follow module-level ``a = b`` chains to their terminal name
+        (cycle-guarded; a self-referential chain returns where it stopped)."""
+        seen = {name}
+        while name in self.assigns:
+            nxt = self.assigns[name]
+            if nxt in seen:
+                break
+            seen.add(nxt)
+            name = nxt
+        return name
 
     def resolves_to(self, node: ast.AST, module: str, name: str) -> bool:
         """Does ``node`` reference ``module.name`` in this file's namespace?"""
@@ -300,6 +322,47 @@ class _Linter:
 
     # -- R2: host sync inside jit-reachable functions ------------------------
 
+    def _resolve_callable(self, mods: dict, mod: str, fi: _FileInfo,
+                          name: str, depth: int = 8) -> list:
+        """Resolve a bare ``name`` in ``fi``'s module namespace to every
+        function def it can denote — ``[(modname, ast.FunctionDef), ...]``.
+
+        Follows, transitively up to ``depth`` hops: module-level ``a = b``
+        chains (``resolve_assign``), ``from repro.x import f`` re-exports
+        into their defining module, and attribute-chained re-exports
+        (``use = helper.np_user`` where ``helper`` is an imported module).
+        Closes the old one-hop gap where ``b = a; jax.jit(b)`` with
+        ``a = np_user`` escaped the call graph."""
+        if depth <= 0:
+            return []
+        name = fi.resolve_assign(name)
+        if name in fi.functions:
+            return [(mod, fdef) for fdef in fi.functions[name]]
+        if name in fi.imports_from:
+            m, orig = fi.imports_from[name]
+            tfi = mods.get(m)
+            if tfi is not None:
+                return self._resolve_callable(mods, m, tfi, orig, depth - 1)
+            return []
+        chain = fi.attr_assigns.get(name)
+        if chain is not None:
+            head, _, rest = chain.partition(".")
+            head = fi.resolve_assign(head)
+            base = fi.module_aliases.get(head)
+            if base is None:
+                imp = fi.imports_from.get(head)
+                if imp is not None:
+                    base = f"{imp[0]}.{imp[1]}"
+            if base is not None and rest:
+                parts = rest.split(".")
+                m = ".".join([base] + parts[:-1])
+                tfi = mods.get(m)
+                if tfi is not None:
+                    return self._resolve_callable(
+                        mods, m, tfi, parts[-1], depth - 1
+                    )
+        return []
+
     def _src_modname(self, relpath: str) -> str | None:
         if not relpath.startswith("src/") or not relpath.endswith(".py"):
             return None
@@ -322,9 +385,7 @@ class _Linter:
         def add_root_callable(fi: _FileInfo, mod: str, node: ast.AST) -> None:
             """args[0] of a jax.jit(...)/shard_map(...) call."""
             if isinstance(node, ast.Name):
-                name = fi.assigns.get(node.id, node.id)
-                for fdef in fi.functions.get(name, []):
-                    roots.append((mod, fdef))
+                roots.extend(self._resolve_callable(mods, mod, fi, node.id))
             elif isinstance(node, ast.Call):
                 # jax.jit(shard_map(local, ...)) and friends
                 if node.args:
@@ -375,28 +436,21 @@ class _Linter:
                     continue
                 f = node.func
                 if isinstance(f, ast.Name):
-                    name = fi.assigns.get(f.id, f.id)
-                    if name in fi.functions:
-                        for tgt in fi.functions[name]:
-                            work.append((mod, tgt))
-                    elif name in fi.imports_from:
-                        m, orig = fi.imports_from[name]
-                        tfi = mods.get(m)
-                        if tfi is not None:
-                            for tgt in tfi.functions.get(orig, []):
-                                work.append((m, tgt))
+                    work.extend(self._resolve_callable(mods, mod, fi, f.id))
                 elif isinstance(f, ast.Attribute) and isinstance(
                     f.value, ast.Name
                 ):
-                    m = fi.module_aliases.get(f.value.id)
+                    base = fi.resolve_assign(f.value.id)
+                    m = fi.module_aliases.get(base)
                     if m is None:
-                        imp = fi.imports_from.get(f.value.id)
+                        imp = fi.imports_from.get(base)
                         if imp is not None:
                             m = f"{imp[0]}.{imp[1]}"
                     tfi = mods.get(m) if m else None
                     if tfi is not None:
-                        for tgt in tfi.functions.get(f.attr, []):
-                            work.append((m, tgt))
+                        work.extend(
+                            self._resolve_callable(mods, m, tfi, f.attr)
+                        )
 
         # scan every reachable function body for host-sync primitives
         flagged: set[tuple[str, int, str]] = set()

@@ -105,6 +105,7 @@ from repro.kernels.pairwise_dist import (
 )
 from repro.kernels.planar_exclusion import planar_lower_bound_kernel_call
 from repro.kernels.tiles import TILE_BQ
+from repro.obs import schema as obs_schema
 
 __all__ = [
     "BSSIndex",
@@ -835,7 +836,26 @@ def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) ->
             float(1.0 - tile_mask.mean()) if tile_mask.size else 1.0
         ),
         "n_blocks": int(index.n_blocks),
+        # per-mechanism attribution (repro.obs.schema): every block BSS
+        # excludes is excluded by the planar four-point bound — the Hilbert
+        # mechanism — read off the engine's functional `alive` output
+        "excluded": {
+            "hilbert": (
+                index.n_blocks - alive.sum(axis=1)
+            ).astype(np.int64),
+        },
     }
+
+
+def _finish_stats(stats: dict, *, kind: str, backend: str,
+                  engine: str = "bss") -> dict:
+    """Stamp the shared observability schema onto an engine stats dict at
+    the jit boundary (see ``repro.obs.schema`` for the contract)."""
+    return obs_schema.normalise_stats(
+        stats, engine=engine, kind=kind, backend=backend,
+        n_queries=int(np.asarray(stats["per_query_dists"]).shape[0]),
+        excluded=stats.get("excluded"),
+    )
 
 
 def bss_query_batched(
@@ -915,7 +935,9 @@ def bss_query_batched(
             np.zeros((0, index.n_blocks), bool),
         )
         stats["precision"] = precision
-        return [], stats
+        if precision == "bf16":
+            _bf16_stats(stats, index.bf16_margin(), 0, np.zeros(0, np.int64))
+        return [], _finish_stats(stats, kind="range", backend=backend)
     t_vec = _per_query_t(t, nq)
     dev = index.device
     if precision == "bf16":
@@ -968,7 +990,7 @@ def bss_query_batched(
         tile_mask = np.asarray(_tile_survival(jnp.asarray(alive), bq))
         stats = _batched_stats(index, alive, tile_mask)
         stats["precision"] = "fp32"
-        return results, stats
+        return results, _finish_stats(stats, kind="range", backend=backend)
     dist, alive, tile_mask = _query_batched_jit(
         metric_eng,
         jnp.asarray(queries),
@@ -988,7 +1010,7 @@ def bss_query_batched(
     results = [r.tolist() for r in per_query]
     stats = _batched_stats(index, np.asarray(alive), np.asarray(tile_mask))
     stats["precision"] = "fp32"
-    return results, stats
+    return results, _finish_stats(stats, kind="range", backend=backend)
 
 
 def _bf16_stats(stats: dict, eps: float, recheck_tiles: int,
@@ -1094,7 +1116,10 @@ def _query_batched_bf16(
             results = [r.tolist() for r in per_query]
             tile_mask = np.asarray(_tile_survival(jnp.asarray(alive), bq))
             stats = _batched_stats(index, alive, tile_mask)
-            return results, _bf16_stats(stats, eps, 0, band_counts)
+            _bf16_stats(stats, eps, 0, band_counts)
+            return results, _finish_stats(
+                stats, kind="range", backend=backend
+            )
     hit, alive, tile_mask, recheck_tiles, band_counts = (
         _query_batched_bf16_jit(
             metric_eng, qj, jnp.asarray(t_vec), dev, data16, eps_j,
@@ -1108,9 +1133,8 @@ def _query_batched_bf16(
     per_query = np.split(orig, np.cumsum(counts)[:-1])
     results = [r.tolist() for r in per_query]
     stats = _batched_stats(index, np.asarray(alive), np.asarray(tile_mask))
-    return results, _bf16_stats(
-        stats, eps, int(recheck_tiles), np.asarray(band_counts)
-    )
+    _bf16_stats(stats, eps, int(recheck_tiles), np.asarray(band_counts))
+    return results, _finish_stats(stats, kind="range", backend=backend)
 
 
 @partial(
@@ -1313,6 +1337,23 @@ def _knn_lb_jit(
     )
 
 
+def _knn_empty_stats(index: BSSIndex, nq: int, precision: str,
+                     backend: str, engine: str = "bss") -> dict:
+    """Schema-conformant stats for the kNN early returns (no queries, or
+    an empty valid corpus): zero rounds, zero work."""
+    stats = {
+        "rounds": 0, "pivot_dists_per_query": 0.0,
+        "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
+        "per_query_dists": np.zeros(nq, np.int64),
+        "tiles_computed": 0, "n_blocks": int(index.n_blocks),
+        "precision": precision,
+        "excluded": {"hilbert": np.zeros(nq, np.int64)},
+    }
+    if precision == "bf16":
+        _bf16_stats(stats, index.bf16_margin(), 0, np.zeros(nq, np.int64))
+    return _finish_stats(stats, kind="knn", backend=backend, engine=engine)
+
+
 def bss_knn_batched(
     index: BSSIndex,
     queries: np.ndarray,
@@ -1405,11 +1446,7 @@ def bss_knn_batched(
         return (
             np.zeros((0, k), np.int64),
             np.zeros((0, k), np.float32),
-            {"rounds": 0, "pivot_dists_per_query": 0.0,
-             "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
-             "per_query_dists": np.zeros(0, np.int64),
-             "tiles_computed": 0, "n_blocks": int(index.n_blocks),
-             "precision": precision},
+            _knn_empty_stats(index, 0, precision, backend),
         )
     # clamp to the VALID corpus size: with k_run > n_valid the kth distance
     # would stay inf and no round could ever finish early
@@ -1418,11 +1455,7 @@ def bss_knn_batched(
         return (
             np.full((nq, k), -1, np.int64),
             np.full((nq, k), np.inf, np.float32),
-            {"rounds": 0, "pivot_dists_per_query": 0.0,
-             "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
-             "per_query_dists": np.zeros(nq, np.int64),
-             "tiles_computed": 0, "n_blocks": int(index.n_blocks),
-             "precision": precision},
+            _knn_empty_stats(index, nq, precision, backend),
         )
     dev = index.device
     qj = jnp.asarray(queries)
@@ -1451,6 +1484,7 @@ def bss_knn_batched(
 
     valid_pb = _valid_per_block(index)
     total_exact = np.zeros(nq, np.int64)
+    excl_pq = np.zeros(nq, np.int64)
     tiles_total = 0
     done = np.zeros(nq, bool)
     cand_idx = np.full((nq, k_run), 0, np.int64)
@@ -1536,6 +1570,7 @@ def bss_knn_batched(
         cand_idx[upd] = ci[upd]
         cand_dist[upd] = cd[upd]
         total_exact[upd] += alive[upd].astype(np.int64) @ valid_pb
+        excl_pq[upd] += n_blocks - alive[upd].sum(axis=1)
         tiles_total += tiles_round
         done = done | dn
         if done.all():
@@ -1572,9 +1607,13 @@ def bss_knn_batched(
         "tiles_computed": tiles_total,
         "n_blocks": int(index.n_blocks),
         "precision": precision,
+        # rounds x blocks the Hilbert bound pruned from the exact phase,
+        # accumulated per query over its unfinished rounds only
+        "excluded": {"hilbert": excl_pq},
     }
     if bf16:
         _bf16_stats(stats, eps, recheck_tiles_total, recheck_pq)
+    _finish_stats(stats, kind="knn", backend=backend)
     orig = np.where(np.isfinite(cand_dist), index.perm[cand_idx], -1)
     if k_run < k:  # corpus smaller than k: pad out to the requested width
         orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)

@@ -68,6 +68,7 @@ from repro.kernels.pairwise_dist import (
     masked_pairwise_kernel_call,
 )
 from repro.kernels.tiles import TILE_BLOCK, TILE_BQ
+from repro.obs import schema as obs_schema
 
 __all__ = ["forest_range_search", "monotone_range_search"]
 
@@ -199,11 +200,21 @@ def _forest_walk_jit(
     interpret: bool | None,
 ):
     """Returns (per-level ref-hit bitmasks, leaf-row hit bitmask, counts,
-    per-query band sizes, re-checked tiles).  ``leaf16``/``eps`` select the
-    bf16 leaf exact phase (None => plain fp32; the None-vs-array pytree
-    difference keys the retrace)."""
+    per-query band sizes, re-checked tiles, obs dict).  ``leaf16``/``eps``
+    select the bf16 leaf exact phase (None => plain fp32; the None-vs-array
+    pytree difference keys the retrace).
+
+    The obs dict is the walker's device-side observability — per-query
+    exclusion attribution (cover / hyperplane / centre, disjoint by the
+    priority order below) and per-level frontier occupancy — computed as
+    ordinary traced reductions over masks the walk already materialises
+    and returned functionally, never via callbacks (see ``repro.obs``)."""
     nq = queries.shape[0]
     counts = jnp.zeros((nq,), jnp.int32)
+    obs_cover = jnp.zeros((nq,), jnp.int32)
+    obs_hyper = jnp.zeros((nq,), jnp.int32)
+    obs_centre = jnp.zeros((nq,), jnp.int32)
+    frontier = []
     ref_hits = []
     leaf_alive_parts = [jnp.ones((nq, _n_root_leaves(dev)), bool)]
 
@@ -223,21 +234,35 @@ def _forest_walk_jit(
         dq = d[:, : na * kmax].reshape(nq, na, kmax)
         dq = jnp.where(lv.ref_valid[None], dq, jnp.inf)  # pad slots inert
         ref_hits.append(alive[:, :, None] & lv.ref_valid[None] & (dq <= t))
-        excl = exclusion.cover_radius_exclusion_mask(
+        e_cov = exclusion.cover_radius_exclusion_mask(
             dq, lv.cover_r[None], t, xp=jnp
         )
-        excl |= exclusion.hyperplane_exclusion_mask(
+        e_hyp = exclusion.hyperplane_exclusion_mask(
             dq, lv.ref_dists, t, mechanism, xp=jnp
         )
         # SAT centre witness where the node has one AND the walk carried the
         # centre distance down (NaN dcent at the root compares False)
-        excl |= (
+        e_cen = (
             exclusion.centre_witness_exclusion_mask(
                 dq, dcent, lv.centre_dists, t, mechanism, xp=jnp
             )
             & lv.centre_on[None, :, None]
         )
-        keep = alive[:, :, None] & lv.ref_valid[None] & ~excl
+        excl = e_cov | e_hyp | e_cen
+        # per-query mechanism attribution over the LIVE valid child slots,
+        # made disjoint by priority (cover -> hyperplane -> centre) so the
+        # three counts sum to the total excluded slots; pure reductions
+        # over masks the walk computes anyway
+        live = alive[:, :, None] & lv.ref_valid[None]
+        obs_cover += jnp.sum(live & e_cov, axis=(1, 2), dtype=jnp.int32)
+        obs_hyper += jnp.sum(
+            live & ~e_cov & e_hyp, axis=(1, 2), dtype=jnp.int32
+        )
+        obs_centre += jnp.sum(
+            live & ~e_cov & ~e_hyp & e_cen, axis=(1, 2), dtype=jnp.int32
+        )
+        frontier.append(jnp.sum(alive, dtype=jnp.int32))
+        keep = live & ~excl
         if lv.leaf_parent_pos.shape[0]:
             leaf_alive_parts.append(
                 keep[:, lv.leaf_parent_pos, lv.leaf_parent_slot]
@@ -253,7 +278,15 @@ def _forest_walk_jit(
         metric_name, queries, dev.leaves, leaf_alive, t, leaf16, eps,
         backend=backend, interpret=interpret,
     )
-    return tuple(ref_hits), leaf_hit, counts, band_counts, rtiles
+    obs = {
+        "excluded_cover": obs_cover,
+        "excluded_hyperplane": obs_hyper,
+        "excluded_centre": obs_centre,
+        "frontier": (
+            jnp.stack(frontier) if frontier else jnp.zeros((0,), jnp.int32)
+        ),
+    }
+    return tuple(ref_hits), leaf_hit, counts, band_counts, rtiles, obs
 
 
 def forest_range_search(
@@ -285,10 +318,18 @@ def forest_range_search(
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:
-        return [], _stats(forest, np.zeros(0, np.int64), backend, precision)
+        stats = _stats(
+            forest, np.zeros(0, np.int64), backend, precision,
+            engine="forest",
+            excluded={m: np.zeros(0, np.int64)
+                      for m in ("cover", mechanism, "centre")},
+        )
+        if precision == "bf16":
+            _bf16_stats(stats, forest.bf16_eps(), 0, np.zeros(0, np.int64))
+        return [], stats
     bf16 = precision == "bf16"
     eps = forest.bf16_eps() if bf16 else 0.0
-    ref_hits, leaf_hit, counts, band_counts, rtiles = _forest_walk_jit(
+    ref_hits, leaf_hit, counts, band_counts, rtiles, obs = _forest_walk_jit(
         forest.metric,
         jnp.asarray(queries),
         jnp.float32(t),
@@ -309,14 +350,27 @@ def forest_range_search(
     ids = forest.leaf.member_of_row[r]
     for qi, rid in zip(q, ids):
         results[qi].append(int(rid))
-    stats = _stats(forest, np.asarray(counts).astype(np.int64), backend, precision)
+    stats = _stats(
+        forest, np.asarray(counts).astype(np.int64), backend, precision,
+        engine="forest",
+        # the walker reports hyperplane exclusions mechanism-neutrally;
+        # the label is whichever hyperplane rule this walk actually ran
+        excluded={
+            "cover": np.asarray(obs["excluded_cover"], np.int64),
+            mechanism: np.asarray(obs["excluded_hyperplane"], np.int64),
+            "centre": np.asarray(obs["excluded_centre"], np.int64),
+        },
+        frontier=obs["frontier"],
+    )
     if bf16:
         _bf16_stats(stats, eps, int(rtiles), np.asarray(band_counts))
     return results, stats
 
 
-def _stats(enc, per_query: np.ndarray, backend: str, precision: str) -> dict:
-    return {
+def _stats(enc, per_query: np.ndarray, backend: str, precision: str, *,
+           engine: str, excluded: dict | None = None,
+           frontier=None) -> dict:
+    stats = {
         "per_query_dists": per_query,
         "dists_per_query": float(per_query.mean()) if per_query.size else 0.0,
         "n_levels": len(enc.levels),
@@ -324,7 +378,16 @@ def _stats(enc, per_query: np.ndarray, backend: str, precision: str) -> dict:
         "n_leaves": enc.leaf.n_leaves,
         "backend": backend,
         "precision": precision,
+        # nodes alive across all queries, per level (device-side reduction)
+        "frontier_occupancy": (
+            np.zeros(len(enc.levels), np.int64) if frontier is None
+            else np.asarray(frontier, np.int64)
+        ),
     }
+    return obs_schema.normalise_stats(
+        stats, engine=engine, kind="range", backend=backend,
+        n_queries=int(per_query.shape[0]), excluded=excluded,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -349,7 +412,8 @@ def _monotone_walk_jit(
     interpret: bool | None,
 ):
     """Returns (root hit, per-level p2-hit bitmasks, leaf-row hits, counts,
-    per-query band sizes, re-checked tiles).
+    per-query band sizes, re-checked tiles, obs dict — per-query hyperplane
+    exclusions + per-level frontier occupancy, as functional outputs).
 
     One NEW distance per (query, visited node) — the inherited pivot's
     distance rides the frontier, exactly the Monotonous-Bisector-Tree
@@ -358,6 +422,8 @@ def _monotone_walk_jit(
     metric = get_metric(metric_name)
     d_root = metric.pairwise(queries, dev.root_p1_data)[:, 0]  # (nq,)
     counts = jnp.ones((nq,), jnp.int32)  # everyone pays the root distance
+    obs_hyper = jnp.zeros((nq,), jnp.int32)
+    frontier = []
     root_hit = d_root <= t
     p2_hits = []
     leaf_alive_parts = [jnp.ones((nq, _n_root_leaves(dev)), bool)]
@@ -394,6 +460,14 @@ def _monotone_walk_jit(
             )
         keep_l = alive & (margin < t)    # cannot exclude left unless m >= t
         keep_r = alive & (margin > -t)
+        # each alive node has two semispaces; count the ones the margin
+        # test excluded (left when m >= t, right when m <= -t)
+        obs_hyper += jnp.sum(
+            jnp.where(alive & ~keep_l, 1, 0)
+            + jnp.where(alive & ~keep_r, 1, 0),
+            axis=1, dtype=jnp.int32,
+        )
+        frontier.append(jnp.sum(alive, dtype=jnp.int32))
         if lv.leaf_parent_pos.shape[0]:
             pos, right = lv.leaf_parent_pos, lv.leaf_parent_right
             leaf_alive_parts.append(
@@ -411,7 +485,13 @@ def _monotone_walk_jit(
         metric_name, queries, dev.leaves, leaf_alive, t, leaf16, eps,
         backend=backend, interpret=interpret,
     )
-    return root_hit, tuple(p2_hits), leaf_hit, counts, band_counts, rtiles
+    obs = {
+        "excluded_hyperplane": obs_hyper,
+        "frontier": (
+            jnp.stack(frontier) if frontier else jnp.zeros((0,), jnp.int32)
+        ),
+    }
+    return root_hit, tuple(p2_hits), leaf_hit, counts, band_counts, rtiles, obs
 
 
 def monotone_range_search(
@@ -440,10 +520,18 @@ def monotone_range_search(
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:
-        return [], _stats(forest, np.zeros(0, np.int64), backend, precision)
+        stats = _stats(
+            forest, np.zeros(0, np.int64), backend, precision,
+            engine="monotone",
+            excluded={mechanism: np.zeros(0, np.int64)},
+        )
+        if precision == "bf16":
+            _bf16_stats(stats, forest.bf16_eps(), 0, np.zeros(0, np.int64))
+        return [], stats
     bf16 = precision == "bf16"
     eps = forest.bf16_eps() if bf16 else 0.0
-    root_hit, p2_hits, leaf_hit, counts, band_counts, rtiles = _monotone_walk_jit(
+    (root_hit, p2_hits, leaf_hit, counts, band_counts, rtiles,
+     obs) = _monotone_walk_jit(
         forest.metric,
         jnp.asarray(queries),
         jnp.float32(t),
@@ -466,7 +554,14 @@ def monotone_range_search(
     ids = forest.leaf.member_of_row[r]
     for qi, rid in zip(q, ids):
         results[qi].append(int(rid))
-    stats = _stats(forest, np.asarray(counts).astype(np.int64), backend, precision)
+    stats = _stats(
+        forest, np.asarray(counts).astype(np.int64), backend, precision,
+        engine="monotone",
+        excluded={
+            mechanism: np.asarray(obs["excluded_hyperplane"], np.int64),
+        },
+        frontier=obs["frontier"],
+    )
     if bf16:
         _bf16_stats(stats, eps, int(rtiles), np.asarray(band_counts))
     return results, stats

@@ -1,0 +1,72 @@
+"""Runtime observability: registry, schema, spans, folding, export.
+
+Why engine metrics are *functional jit outputs*
+-----------------------------------------------
+The obvious way to instrument a jitted engine — ``jax.debug_callback`` or
+host-side counters poked from inside the traced function — is exactly
+what this repo's invariants forbid: lint rule R2 rejects host syncs in
+jit-reachable code, and the jaxpr audit (``python -m repro.analysis``)
+fails on *any* callback primitive in an engine jaxpr, because callbacks
+serialise the device stream and make performance measurements lie.
+
+So every device-side metric here is an ordinary traced array returned in
+the engine's ``stats`` pytree, next to the results: per-mechanism
+exclusion attribution, frontier occupancy, tile counts, bf16 re-check
+volume.  The device computes them as part of the same fused program (a
+few masked reductions over masks the engine already materialises), and
+the host folds them into the :class:`~repro.obs.registry.MetricsRegistry`
+at the jit boundary (``repro.obs.fold``) — where the results are being
+materialised anyway, so observability adds no synchronisation points and
+cannot change results (the bit-identity test in ``tests/test_obs.py``
+proves it).
+
+Layout
+------
+- ``registry`` — counters / gauges / bounded-ring histograms, JSON
+  snapshot, Prometheus text exposition, ``render()`` dashboard
+- ``schema`` — the shared engine-stats schema + validator
+- ``spans`` — per-request trace ids and monotonic stage timestamps
+- ``fold`` — stats -> registry at the jit boundary; compile-cache polling
+- ``export`` — snapshot files + exposition round-trip checks
+"""
+
+from repro.obs.export import parse_prometheus, validate_exposition, write_snapshot
+from repro.obs.fold import fold_engine_stats, poll_compile
+from repro.obs.registry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    metric_key,
+    prom_name,
+)
+from repro.obs.schema import (
+    MECHANISMS,
+    SCHEMA_VERSION,
+    check_stats,
+    normalise_stats,
+    validate_stats,
+)
+from repro.obs.spans import STAGES, Span, new_trace_id
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MECHANISMS",
+    "SCHEMA_VERSION",
+    "STAGES",
+    "Span",
+    "check_stats",
+    "fold_engine_stats",
+    "metric_key",
+    "new_trace_id",
+    "normalise_stats",
+    "parse_prometheus",
+    "poll_compile",
+    "prom_name",
+    "validate_exposition",
+    "validate_stats",
+    "write_snapshot",
+]

@@ -1,0 +1,104 @@
+"""Snapshot export + exposition round-trip checks.
+
+``write_snapshot`` dumps a registry to a JSON file (numpy scalars and
+arrays coerced to plain JSON).  ``parse_prometheus`` is a minimal parser
+for the text exposition our registry emits — CI uses it to prove the
+scrape from a live serving run is well-formed (every sample line parses,
+every histogram has its ``_sum``/``_count`` pair) without needing a
+Prometheus binary in the container.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import numpy as np
+
+from repro.obs.registry import MetricsRegistry
+
+__all__ = ["write_snapshot", "parse_prometheus", "validate_exposition"]
+
+_SAMPLE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>.*)\})?"
+    r"\s+(?P<value>[^\s]+)$"
+)
+_LABEL = re.compile(r'(?P<k>[a-zA-Z_][a-zA-Z0-9_]*)="(?P<v>(?:\\.|[^"\\])*)"')
+
+
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
+
+
+def write_snapshot(reg: MetricsRegistry, path, extra: dict | None = None
+                   ) -> Path:
+    """Write ``reg.snapshot()`` (plus optional ``extra`` payload keys) as
+    JSON to ``path``; returns the path written."""
+    path = Path(path)
+    payload = {"metrics": _jsonable(reg.snapshot())}
+    if extra:
+        payload.update(_jsonable(extra))
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
+
+def parse_prometheus(text: str) -> list:
+    """Parse exposition text into ``(name, labels, value)`` tuples.
+
+    Raises ``ValueError`` on any line that is neither a comment nor a
+    well-formed sample.
+    """
+    out = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE.match(line)
+        if not m:
+            raise ValueError(f"line {lineno}: malformed sample {line!r}")
+        labels = {}
+        if m.group("labels"):
+            for lm in _LABEL.finditer(m.group("labels")):
+                labels[lm.group("k")] = (
+                    lm.group("v").replace(r"\"", '"').replace(r"\\", "\\")
+                )
+        try:
+            value = float(m.group("value"))
+        except ValueError as e:
+            raise ValueError(
+                f"line {lineno}: non-numeric value {m.group('value')!r}"
+            ) from e
+        out.append((m.group("name"), labels, value))
+    return out
+
+
+def validate_exposition(text: str) -> list:
+    """Structural checks on exposition text; returns problem strings
+    (empty = valid).  Checks: parseable, finite values, and every
+    summary quantile series has matching ``_sum`` and ``_count``."""
+    try:
+        samples = parse_prometheus(text)
+    except ValueError as e:
+        return [str(e)]
+    problems = []
+    names = {n for n, _, _ in samples}
+    for name, labels, value in samples:
+        if not np.isfinite(value):
+            problems.append(f"{name}{labels}: non-finite value {value}")
+        if "quantile" in labels:
+            for suffix in ("_sum", "_count"):
+                if name + suffix not in names:
+                    problems.append(
+                        f"summary {name} missing {name + suffix}"
+                    )
+    return problems

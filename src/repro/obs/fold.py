@@ -1,0 +1,109 @@
+"""Fold engine stats into a :class:`~repro.obs.registry.MetricsRegistry`.
+
+This is the host side of the observability split: the engines report
+everything worth counting as *functional jit outputs* (arrays in their
+stats pytrees — see ``repro.obs.__doc__`` for why), and the serving layer
+calls :func:`fold_engine_stats` once per dispatched batch, at the jit
+boundary, where the arrays have already been materialised for the
+caller's results.  Folding therefore adds zero device work and zero extra
+host syncs.
+
+:func:`poll_compile` is the runtime face of the bucket-ladder recompile
+contract (PR 5/7): it reads each engine jit's compile-cache size through
+``repro.core.backends.jit_cache_size`` and turns growth into a
+``compile/recompiles`` counter — the CI-time ``audit_compile_cache``
+equality becomes a live metric.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.backends import jit_cache_size
+from repro.obs.registry import MetricsRegistry
+
+__all__ = ["fold_engine_stats", "poll_compile"]
+
+
+def fold_engine_stats(reg: MetricsRegistry, stats: dict) -> None:
+    """Fold one engine-call stats dict (shared schema, see
+    ``repro.obs.schema``) into ``reg``.  Tolerates pre-schema dicts —
+    missing keys simply contribute nothing."""
+    engine = str(stats.get("engine", "unknown"))
+    kind = str(stats.get("kind", "unknown"))
+    lbl = dict(engine=engine, kind=kind)
+
+    pq = np.asarray(stats.get("per_query_dists", ()), dtype=np.int64)
+    nq = int(stats.get("n_queries", pq.shape[0] if pq.ndim == 1 else 0))
+    reg.counter("engine/queries", **lbl).inc(nq)
+    if pq.ndim == 1 and pq.size:
+        reg.counter("engine/dists", **lbl).inc(int(pq.sum()))
+        h = reg.histogram("engine/dists_per_query", **lbl)
+        for v in pq.tolist():
+            h.observe(v)
+
+    for mech, counts in dict(stats.get("excluded", {})).items():
+        c = np.asarray(counts, dtype=np.int64)
+        if c.size:
+            reg.counter(
+                "engine/excluded", mechanism=mech, **lbl
+            ).inc(int(c.sum()))
+
+    if "tiles_computed" in stats:
+        reg.counter("engine/tiles_computed", **lbl).inc(
+            int(stats["tiles_computed"])
+        )
+    if "tile_exclusion_rate" in stats:
+        reg.gauge("engine/tile_exclusion_rate", **lbl).set(
+            float(stats["tile_exclusion_rate"])
+        )
+    if "block_exclusion_rate" in stats:
+        reg.gauge("engine/block_exclusion_rate", **lbl).set(
+            float(stats["block_exclusion_rate"])
+        )
+
+    fo = stats.get("frontier_occupancy")
+    if fo is not None:
+        for lv, occ in enumerate(np.asarray(fo, dtype=np.int64).tolist()):
+            reg.counter(
+                "engine/frontier_nodes", level=lv, **lbl
+            ).inc(int(occ))
+
+    if stats.get("precision") == "bf16":
+        prc = np.asarray(
+            stats.get("per_query_recheck", ()), dtype=np.int64
+        )
+        if prc.size:
+            reg.counter("engine/recheck_points", **lbl).inc(int(prc.sum()))
+        if "recheck_tiles" in stats:
+            reg.counter("engine/recheck_tiles", **lbl).inc(
+                int(stats["recheck_tiles"])
+            )
+
+    if kind == "knn" and "rounds" in stats:
+        reg.histogram("engine/knn_rounds", **lbl).observe(
+            int(stats["rounds"])
+        )
+
+
+def poll_compile(reg: MetricsRegistry, watched: dict,
+                 last: dict | None = None) -> dict:
+    """Sample compile-cache sizes for ``watched`` (name -> jitted fn).
+
+    Sets ``compile/cache_size{fn=name}`` gauges and increments
+    ``compile/recompiles{fn=name}`` by any growth since the previous
+    sample (carried in ``last``, which is returned updated for the next
+    call).  Functions whose cache size is unreadable
+    (``jit_cache_size`` < 0, e.g. a monkeypatched jit) are skipped.
+    """
+    last = {} if last is None else last
+    for name, fn in watched.items():
+        size = jit_cache_size(fn)
+        if size < 0:
+            continue
+        reg.gauge("compile/cache_size", fn=name).set(size)
+        prev = last.get(name)
+        if prev is not None and size > prev:
+            reg.counter("compile/recompiles", fn=name).inc(size - prev)
+        last[name] = size
+    return last

@@ -60,7 +60,9 @@ from repro.core.flat_index import (
     _bf16_stats,
     _engine_metric,
     _engine_queries,
+    _finish_stats,
     _fused_lower_bounds,
+    _knn_empty_stats,
     _masked_exact_dists,
     _per_query_t,
     _valid_per_block,
@@ -429,7 +431,11 @@ def sharded_query_batched(
         stats = _batched_stats(index, empty, empty)
         stats["n_shards"] = sidx.n_shards
         stats["precision"] = precision
-        return [], stats
+        if precision == "bf16":
+            _bf16_stats(stats, index.bf16_margin(), 0, np.zeros(0, np.int64))
+        return [], _finish_stats(
+            stats, kind="range", backend=backend, engine="sharded"
+        )
     t_vec = _per_query_t(t, nq)
     if precision == "bf16":
         eps = index.bf16_margin()
@@ -466,7 +472,9 @@ def sharded_query_batched(
             stats, eps, int(np.asarray(rmask).sum()),
             np.asarray(band_counts).sum(axis=1),
         )
-    return results, stats
+    return results, _finish_stats(
+        stats, kind="range", backend=backend, engine="sharded"
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -514,23 +522,22 @@ def sharded_knn_batched(
     k = int(k)
     if k <= 0:
         raise ValueError(f"k must be positive, got {k}")
-    empty_stats = {
-        "rounds": 0, "pivot_dists_per_query": 0.0,
-        "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
-        "tiles_computed": 0, "n_blocks": int(index.n_blocks),
-        "n_shards": sidx.n_shards, "precision": precision,
-    }
     if nq == 0:
+        stats = _knn_empty_stats(index, 0, precision, backend,
+                                 engine="sharded")
+        stats["n_shards"] = sidx.n_shards
         return (
-            np.zeros((0, k), np.int64), np.zeros((0, k), np.float32),
-            {**empty_stats, "per_query_dists": np.zeros(0, np.int64)},
+            np.zeros((0, k), np.int64), np.zeros((0, k), np.float32), stats,
         )
     k_run = min(k, index.n_valid)
     if k_run == 0:
+        stats = _knn_empty_stats(index, nq, precision, backend,
+                                 engine="sharded")
+        stats["n_shards"] = sidx.n_shards
         return (
             np.full((nq, k), -1, np.int64),
             np.full((nq, k), np.inf, np.float32),
-            {**empty_stats, "per_query_dists": np.zeros(nq, np.int64)},
+            stats,
         )
     qj = jnp.asarray(queries)
     n_blocks = index.n_blocks
@@ -561,6 +568,7 @@ def sharded_knn_batched(
         round_fn = sidx._knn_round_fn(metric_eng, backend, bq, interpret, k_run)
     valid_pb = _valid_per_block(index)
     total_exact = np.zeros(nq, np.int64)
+    excl_pq = np.zeros(nq, np.int64)
     tiles_total = 0
     recheck_pq = np.zeros(nq, np.int64)
     recheck_tiles_total = 0
@@ -598,6 +606,7 @@ def sharded_knn_batched(
         cand_idx[upd] = ci[upd]
         cand_dist[upd] = cd[upd]
         total_exact[upd] += alive[upd].astype(np.int64) @ valid_pb
+        excl_pq[upd] += n_blocks - alive[upd].sum(axis=1)
         tiles_total += tiles_round
         done = done | dn
         if done.all():
@@ -628,9 +637,11 @@ def sharded_knn_batched(
         "n_blocks": int(n_blocks),
         "n_shards": sidx.n_shards,
         "precision": precision,
+        "excluded": {"hilbert": excl_pq},
     }
     if bf16:
         _bf16_stats(stats, eps, recheck_tiles_total, recheck_pq)
+    _finish_stats(stats, kind="knn", backend=backend, engine="sharded")
     orig = np.where(np.isfinite(cand_dist), sidx.perm[cand_idx], -1)
     if k_run < k:
         orig = np.pad(orig, ((0, 0), (0, k - k_run)), constant_values=-1)

@@ -63,6 +63,7 @@ the engine call inside ``_dispatch`` touches jax.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import threading
 from collections import OrderedDict, deque
@@ -79,6 +80,10 @@ from repro.forest import (
     forest_range_search,
     monotone_range_search,
 )
+from repro.forest import walk as forest_walk
+from repro.obs.fold import fold_engine_stats, poll_compile
+from repro.obs.registry import MetricsRegistry
+from repro.obs.spans import Span
 from repro.serve.queue import (
     BoundedRequestQueue,
     Request,
@@ -105,6 +110,8 @@ class ServeResult:
     batch_size: int = 0                  # real requests in the batch
     padded_to: int = 0                   # bucket the batch dispatched at
     cache_hit: bool = False
+    trace_id: str = ""                   # obs trace id (front.explain(...))
+    spans: dict | None = None            # per-stage durations (obs spans)
 
 
 def _copy_result(res: ServeResult) -> ServeResult:
@@ -214,6 +221,8 @@ class ServingFront:
         mechanism: str = HILBERT,
         prep=None,
         start: bool = True,
+        metrics: bool = True,
+        profile_dir: str | None = None,
     ):
         if isinstance(index, flat_index.BSSIndex):
             self._engine = "bss"
@@ -253,6 +262,39 @@ class ServingFront:
         self._per_bucket: dict[int, int] = {}
         self._waits: deque[float] = deque(maxlen=4096)
         self._engine_s_total = 0.0
+        # observability: registry folding + explain ring are gated on
+        # `metrics`; trace ids and span timestamps always ride the requests
+        # (they are part of ServeResult).  `profile_dir` opts into a
+        # jax.profiler.trace around each engine dispatch.
+        self.metrics_enabled = bool(metrics)
+        self.profile_dir = profile_dir
+        self._metrics = MetricsRegistry()
+        self._explain: deque[dict] = deque(maxlen=256)
+        self._compile_last: dict[str, int] = {}
+        if self._engine == "bss":
+            self._compile_watch = {
+                "range/lb": flat_index._lower_bounds_jit,
+                "range/dense": flat_index._dense_hit_mask_jit,
+                "range/fused": flat_index._query_batched_jit,
+                "range/bf16": flat_index._query_batched_bf16_jit,
+                "knn/lb": flat_index._knn_lb_jit,
+                "knn/round": flat_index._knn_round_jit,
+                "knn/round_bf16": flat_index._knn_round_bf16_jit,
+            }
+        elif isinstance(index, EncodedMonotone):
+            self._compile_watch = {
+                "forest/monotone_walk": forest_walk._monotone_walk_jit,
+            }
+        else:
+            self._compile_watch = {
+                "forest/walk": forest_walk._forest_walk_jit,
+            }
+        if self.metrics_enabled:
+            # the bucket-ladder recompile contract, visible at runtime:
+            # compile/recompiles growth should stay within this ladder
+            self._metrics.gauge("compile/ladder_buckets").set(
+                len(self.buckets)
+            )
         self._thread: threading.Thread | None = None
         if start:
             self.start()
@@ -360,6 +402,8 @@ class ServingFront:
             raise ValueError(f"kind must be range|knn, got {kind!r}")
 
         fut: Future = Future()
+        span = Span()
+        span.mark("admit")
         key = None
         if self._cache is not None:
             # the kind's FULL dispatch signature in fixed typed slots (None
@@ -382,11 +426,17 @@ class ServingFront:
                     self._n["submitted"] += 1
                     self._n["cache_hits"] += 1
                     self._n["completed"] += 1
-                fut.set_result(dataclasses.replace(hit, cache_hit=True))
+                if self.metrics_enabled:
+                    self._metrics.counter("serve/cache_hits").inc()
+                fut.set_result(dataclasses.replace(
+                    hit, cache_hit=True, trace_id=span.trace_id,
+                    spans=span.durations(),
+                ))
                 return fut
         req = Request(
             query=q, kind=kind, group=group, future=fut, t_submit=now(),
             t=t, k=k, cache_key=key, precision=precision,
+            trace_id=span.trace_id, span=span,
         )
         try:
             self._queue.put(req, policy=self.admission, timeout=timeout)
@@ -437,6 +487,16 @@ class ServingFront:
         except Exception:  # noqa: BLE001 — cancel racing the set
             return False
 
+    def _profiler(self):
+        """Opt-in ``jax.profiler.trace`` context around one dispatch (a
+        no-op unless the front was built with ``profile_dir=``).  Host-side
+        only — it wraps the engine call, it never reaches into the jit."""
+        if self.profile_dir is None:
+            return contextlib.nullcontext()
+        import jax
+
+        return jax.profiler.trace(self.profile_dir)
+
     def _dispatch(self, group: list[Request]) -> None:
         """One engine call for one compatible micro-batch: pad to the
         bucket, run the fused path, demux rows to futures."""
@@ -445,6 +505,10 @@ class ServingFront:
         group = [r for r in group if not r.future.cancelled()]
         if not group:
             return
+        t_batch = now()
+        for r in group:
+            if r.span is not None:
+                r.span.mark("batch", t_batch)
         n = len(group)
         bucket = bucket_for(n, self.buckets)
         pad = bucket - n
@@ -458,40 +522,69 @@ class ServingFront:
             qs = self.prep(qs)
         head = group[0]
         t_wait = now()
-        if head.kind == "range" and self._engine == "bss":
-            t_vec = np.array(
-                [r.t for r in group] + [-1.0] * pad, np.float32
-            )
-            hits, stats = flat_index.bss_query_batched(
-                self.index, qs, t_vec, backend=self.backend,
-                interpret=self.interpret, realisation=self.realisation,
-                precision=head.precision,
-            )
-        elif head.kind == "range":  # forest: scalar-t walker
-            search = (
-                monotone_range_search
-                if isinstance(self.index, EncodedMonotone)
-                else forest_range_search
-            )
-            hits, stats = search(
-                self.index, qs, head.t, self.mechanism,
-                backend=self.backend, interpret=self.interpret,
-                precision=head.precision,
-            )
-        else:  # knn
-            _, k, r0, max_rounds, _ = head.group
-            idx, dist, stats = flat_index.bss_knn_batched(
-                self.index, qs, k, r0=r0, max_rounds=max_rounds,
-                backend=self.backend, interpret=self.interpret,
-                realisation=self.realisation, precision=head.precision,
-            )
-        engine_s = now() - t_wait
+        for r in group:
+            if r.span is not None:
+                r.span.mark("dispatch", t_wait)
+        with self._profiler():
+            if head.kind == "range" and self._engine == "bss":
+                t_vec = np.array(
+                    [r.t for r in group] + [-1.0] * pad, np.float32
+                )
+                hits, stats = flat_index.bss_query_batched(
+                    self.index, qs, t_vec, backend=self.backend,
+                    interpret=self.interpret, realisation=self.realisation,
+                    precision=head.precision,
+                )
+            elif head.kind == "range":  # forest: scalar-t walker
+                search = (
+                    monotone_range_search
+                    if isinstance(self.index, EncodedMonotone)
+                    else forest_range_search
+                )
+                hits, stats = search(
+                    self.index, qs, head.t, self.mechanism,
+                    backend=self.backend, interpret=self.interpret,
+                    precision=head.precision,
+                )
+            else:  # knn
+                _, k, r0, max_rounds, _ = head.group
+                idx, dist, stats = flat_index.bss_knn_batched(
+                    self.index, qs, k, r0=r0, max_rounds=max_rounds,
+                    backend=self.backend, interpret=self.interpret,
+                    realisation=self.realisation, precision=head.precision,
+                )
+        t_engine = now()
+        engine_s = t_engine - t_wait
+        for r in group:
+            if r.span is not None:
+                r.span.mark("engine", t_engine)
         per_q = np.asarray(stats["per_query_dists"])
+        excluded = {
+            m: np.asarray(v) for m, v in stats.get("excluded", {}).items()
+        }
         recheck = None
         if head.precision == "bf16":
             recheck = np.asarray(
                 stats.get("per_query_recheck", np.zeros(bucket, np.int64))
             )
+
+        if self.metrics_enabled:
+            reg = self._metrics
+            # fold REAL rows only — padding rows are a bucket artefact,
+            # not query traffic (same convention as the bf16 accounting)
+            folded = dict(stats)
+            folded["n_queries"] = n
+            folded["per_query_dists"] = per_q[:n]
+            folded["excluded"] = {m: v[:n] for m, v in excluded.items()}
+            if recheck is not None:
+                folded["per_query_recheck"] = recheck[:n]
+            fold_engine_stats(reg, folded)
+            reg.histogram("serve/batch_size", kind=head.kind).observe(n)
+            reg.histogram("serve/engine_s", kind=head.kind).observe(engine_s)
+            if pad:
+                reg.counter("serve/padded_rows").inc(pad)
+            with self._lock:
+                poll_compile(reg, self._compile_watch, self._compile_last)
 
         with self._lock:
             self._n["batches"] += 1
@@ -506,17 +599,45 @@ class ServingFront:
                 self._n["recheck_points"] += int(recheck[:n].sum())
         for i, r in enumerate(group):
             wait = t_wait - r.t_submit
+            durs = None
+            if r.span is not None:
+                r.span.mark("demux")
+                durs = r.span.durations()
             res = ServeResult(
                 n_dists=int(per_q[i]),
                 n_recheck=0 if recheck is None else int(recheck[i]),
                 queue_wait_s=wait,
                 engine_s=engine_s, batch_size=n, padded_to=bucket,
+                trace_id=r.trace_id, spans=durs,
             )
             if r.kind == "range":
                 res.hits = hits[i]
             else:
                 res.indices = idx[i]
                 res.distances = dist[i]
+            if self.metrics_enabled:
+                if durs:
+                    for stage, v in durs.items():
+                        self._metrics.histogram(
+                            "serve/span_s", stage=stage
+                        ).observe(v)
+                # per-request "explain" record: this row's slice of the
+                # batch accounting + attribution, dumpable via explain()
+                rec = {
+                    "trace_id": r.trace_id,
+                    "kind": r.kind,
+                    "precision": head.precision,
+                    "engine": stats.get("engine", self._engine),
+                    "backend": stats.get("backend", self.backend),
+                    "batch_size": n,
+                    "padded_to": bucket,
+                    "n_dists": int(per_q[i]),
+                    "n_recheck": 0 if recheck is None else int(recheck[i]),
+                    "excluded": {m: int(v[i]) for m, v in excluded.items()},
+                    "spans": durs,
+                }
+                with self._lock:
+                    self._explain.append(rec)
             if not self._resolve(r.future, res):
                 continue
             with self._lock:
@@ -526,6 +647,29 @@ class ServingFront:
                     self._cache.put(r.cache_key, res)
 
     # ------------------------------------------------------------ telemetry
+
+    def metrics(self) -> MetricsRegistry:
+        """The front's metrics registry (always constructed; populated only
+        while ``metrics=True``).  ``front.metrics().render()`` is the
+        one-screen dashboard; ``.snapshot()`` / ``.to_prometheus()`` export
+        it."""
+        return self._metrics
+
+    def explain(self, trace_id: str | None = None) -> dict | None:
+        """The per-request explain record for ``trace_id`` (most recent
+        request when None): span durations, batch shape, this row's
+        distance charge and per-mechanism exclusion attribution.  Records
+        live in a bounded ring (the last 256 dispatched requests); returns
+        None when the id has aged out, was a cache hit, or metrics are
+        off."""
+        with self._lock:
+            recs = list(self._explain)
+        if trace_id is None:
+            return recs[-1] if recs else None
+        for rec in reversed(recs):
+            if rec["trace_id"] == trace_id:
+                return rec
+        return None
 
     def stats(self) -> dict:
         """Snapshot of the pipeline telemetry (host-side counters only —

@@ -69,6 +69,11 @@ class Request:
     k: int | None = None       # kNN width
     cache_key: bytes | None = None
     precision: str = "fp32"    # engine exact-phase precision ("fp32"|"bf16")
+    # observability: process-unique trace id + the request's Span (stage
+    # timestamps on THIS clock; see repro.obs.spans — kept untyped here so
+    # the queue layer stays jax- and obs-free)
+    trace_id: str = ""
+    span: object | None = None
 
 
 class BoundedRequestQueue:

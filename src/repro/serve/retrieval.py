@@ -43,6 +43,8 @@ from repro.core import flat_index, tree
 from repro.core.exclusion import HILBERT
 from repro.core.npdist import pairwise_np
 from repro.forest import encode_tree, forest_range_search
+from repro.obs.fold import fold_engine_stats
+from repro.obs.registry import MetricsRegistry
 from repro.serve.queue import now
 
 __all__ = ["RetrievalServer", "score_to_distance", "distance_to_score",
@@ -130,6 +132,9 @@ class RetrievalServer:
                 block=block, seed=seed, mesh=mesh,
             )
         self.stats = ServeStats()
+        # engine-call metrics (same registry/fold machinery as the async
+        # front); synchronous serving folds once per batched call
+        self.metrics = MetricsRegistry()
 
     def _prep(self, user_embeddings: np.ndarray) -> np.ndarray:
         q = np.asarray(user_embeddings, np.float32)
@@ -137,11 +142,13 @@ class RetrievalServer:
             q = flat_index._engine_queries("cosine", q)
         return q
 
-    def _account(self, nq: int, dists_per_query: float, t0: float) -> None:
+    def _account(self, nq: int, engine_stats: dict, t0: float) -> None:
         self.stats.n_queries += nq
-        self.stats.total_dists += dists_per_query * nq
+        self.stats.total_dists += engine_stats["dists_per_query"] * nq
         self.stats.exhaustive_dists += nq * self.corpus.shape[0]
         self.stats.total_seconds += now() - t0
+        fold_engine_stats(self.metrics, engine_stats)
+        self.metrics.histogram("serve/call_s").observe(now() - t0)
 
     def range_query(self, user_embeddings: np.ndarray, min_score: float):
         """All items with dot-score >= min_score — exact, one fused pass.
@@ -170,7 +177,7 @@ class RetrievalServer:
             hits, s = flat_index.bss_query_batched(
                 self.index, q, float(t), backend=self.backend
             )
-        self._account(len(q), s["dists_per_query"], t0)
+        self._account(len(q), s, t0)
         return hits
 
     def top_k(self, user_embeddings: np.ndarray, k: int,
@@ -188,7 +195,7 @@ class RetrievalServer:
             self.index, q, k, r0=t0_guess, max_rounds=max_rounds,
             backend=self.backend,
         )
-        self._account(len(q), s["dists_per_query"], t0)
+        self._account(len(q), s, t0)
         return [idx[i] for i in range(idx.shape[0])]
 
     def async_front(self, **kw):

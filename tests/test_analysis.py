@@ -205,6 +205,111 @@ def test_r2_flags_item_and_dynamic_jit_arg(tmp_path):
     assert [(x.rule, x.line) for x in v] == [("R2", 4)]
 
 
+def test_r2_follows_chained_assign_aliases(tmp_path):
+    # two hops of module-level aliasing before the jit call — the old
+    # resolver stopped after one hop and let this escape
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+        import numpy as np
+
+        def np_user(x):
+            return np.sum(x)
+
+        a = np_user
+        b = a
+        g = jax.jit(b)
+        """})
+    assert [(x.rule, x.line) for x in v] == [("R2", 5)]
+
+
+def test_r2_follows_attribute_chained_reexport(tmp_path):
+    # `use = helper.np_user` at module level, then jit(use): the root must
+    # resolve through the attribute chain into the defining module
+    v = run_lint(tmp_path, {
+        "src/repro/helper.py": """\
+            import numpy as np
+
+            def np_user(x):
+                return np.asarray(x)
+            """,
+        "src/repro/x.py": """\
+            import jax
+            import repro.helper as helper
+
+            use = helper.np_user
+            g = jax.jit(use)
+            """,
+    })
+    assert [(x.rule, x.path, x.line) for x in v] == [
+        ("R2", "src/repro/helper.py", 4)
+    ]
+
+
+def test_r2_follows_cross_module_reexport_chain(tmp_path):
+    # a defines the offender, b re-exports it under a new name, c imports
+    # b's re-export and jits a caller — three modules, two import hops
+    v = run_lint(tmp_path, {
+        "src/repro/a.py": """\
+            import numpy as np
+
+            def np_user(x):
+                return np.asarray(x)
+            """,
+        "src/repro/b.py": """\
+            from repro.a import np_user as mid
+            """,
+        "src/repro/c.py": """\
+            import jax
+            from repro.b import mid
+
+            @jax.jit
+            def f(x):
+                return mid(x)
+            """,
+    })
+    assert [(x.rule, x.path, x.line) for x in v] == [
+        ("R2", "src/repro/a.py", 4)
+    ]
+
+
+def test_r2_follows_assigned_module_alias_attribute_call(tmp_path):
+    # `h = helper` then `h.np_user(x)` inside a jit body: the attribute
+    # call's base resolves through the assign chain to the module alias
+    v = run_lint(tmp_path, {
+        "src/repro/helper.py": """\
+            import numpy as np
+
+            def np_user(x):
+                return np.asarray(x)
+            """,
+        "src/repro/x.py": """\
+            import jax
+            import repro.helper as helper
+
+            h = helper
+
+            @jax.jit
+            def f(x):
+                return h.np_user(x)
+            """,
+    })
+    assert [(x.rule, x.path, x.line) for x in v] == [
+        ("R2", "src/repro/helper.py", 4)
+    ]
+
+
+def test_r2_alias_cycle_terminates(tmp_path):
+    # a = b; b = a at module level must not hang resolution (cycle guard)
+    v = run_lint(tmp_path, {"src/repro/x.py": """\
+        import jax
+
+        a = b
+        b = a
+        g = jax.jit(a)
+        """})
+    assert v == []
+
+
 def test_r2_constant_float_is_fine(tmp_path):
     v = run_lint(tmp_path, {"src/repro/x.py": """\
         import jax

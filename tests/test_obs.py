@@ -1,0 +1,521 @@
+"""Observability layer tests (repro.obs + the serving wiring).
+
+The load-bearing guarantee is the ISSUE-8 acceptance bar: collecting
+metrics must change NOTHING — a metrics-on front and a metrics-off front
+return bit-identical results on all four supermetrics, and the
+instrumented engine jits still contain zero callback primitives (the
+device-side counters are functional outputs, not debug hooks).  Around
+that: registry/histogram unit semantics, the shared stats schema on real
+engine output, exclusion-attribution cross-checks, spans/explain, the
+exposition round-trip, and the recompile counter.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import flat_index, tree
+from repro.core.backends import jit_cache_size
+from repro.core.npdist import pairwise_np
+from repro.forest import encode_tree, forest_range_search
+from repro.obs import (
+    MECHANISMS,
+    MetricsRegistry,
+    Span,
+    check_stats,
+    fold_engine_stats,
+    metric_key,
+    new_trace_id,
+    parse_prometheus,
+    poll_compile,
+    validate_exposition,
+    validate_stats,
+    write_snapshot,
+)
+from repro.serve.front import ServingFront
+
+DIM = 12
+
+
+def _space(metric: str, n: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, DIM)).astype(np.float32) + 1e-3
+    if metric in ("jsd", "triangular"):
+        x /= x.sum(axis=1, keepdims=True)
+    return x
+
+
+def _snap(dvals: np.ndarray, frac: float) -> float:
+    vals = np.unique(np.sort(np.asarray(dvals, np.float64).ravel()))
+    i = int(np.clip(frac * len(vals), 0, len(vals) - 2))
+    for j in range(i, len(vals) - 1):
+        if vals[j + 1] - vals[j] > 1e-4 * max(1.0, vals[j]):
+            return float(0.5 * (vals[j] + vals[j + 1]))
+    return float(vals[-1] + 1.0)
+
+
+# ---------------------------------------------------------------- registry
+
+
+def test_counter_gauge_basics():
+    reg = MetricsRegistry()
+    c = reg.counter("engine/dists", engine="bss", kind="range")
+    c.inc(5)
+    c.inc()
+    assert c.value == 6.0
+    with pytest.raises(ValueError, match="cannot decrease"):
+        c.inc(-1)
+    g = reg.gauge("compile/cache_size", fn="lb")
+    g.set(3)
+    g.set(2)  # gauges go down
+    assert g.value == 2.0
+    # same (name, labels) -> the same live series
+    assert reg.counter("engine/dists", kind="range", engine="bss") is c
+
+
+def test_metric_key_is_canonical():
+    assert metric_key("m", {}) == "m"
+    assert metric_key("m", {"b": 1, "a": "x"}) == "m{a=x,b=1}"
+    assert metric_key("m", {"a": "x", "b": 1}) == metric_key(
+        "m", {"b": 1, "a": "x"}
+    )
+
+
+def test_kind_conflict_raises():
+    reg = MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(ValueError, match="already registered as counter"):
+        reg.gauge("x")
+
+
+def test_histogram_ring_units():
+    """Percentiles are a WINDOW statistic over the bounded ring; count/sum
+    are lifetime tallies that survive ring eviction."""
+    reg = MetricsRegistry()
+    h = reg.histogram("serve/span_s", window=4, stage="queue")
+    for v in range(1, 11):
+        h.observe(float(v))
+    assert h.count == 10 and h.sum == 55.0
+    assert list(h.ring) == [7.0, 8.0, 9.0, 10.0]
+    assert h.percentile(0.5) == 8.0  # nearest-rank over the window
+    assert h.percentile(0.99) == 10.0
+    s = h.summary()
+    assert s["count"] == 10 and s["window"] == 4 and s["max"] == 10.0
+    with pytest.raises(ValueError, match="window"):
+        reg.histogram("serve/span_s", window=8, stage="queue")
+    with pytest.raises(ValueError, match="window"):
+        MetricsRegistry().histogram("h", window=0)
+
+
+def test_snapshot_and_prometheus_round_trip():
+    reg = MetricsRegistry()
+    reg.counter("engine/dists", engine="bss", kind="range").inc(100)
+    reg.gauge("compile/ladder_buckets").set(4)
+    h = reg.histogram("serve/engine_s", kind="range")
+    h.observe(0.25)
+    h.observe(0.75)
+    snap = reg.snapshot()
+    assert snap["counters"]["engine/dists{engine=bss,kind=range}"] == 100.0
+    assert snap["gauges"]["compile/ladder_buckets"] == 4.0
+    assert snap["histograms"]["serve/engine_s{kind=range}"]["count"] == 2
+    json.loads(reg.to_json())  # JSON-serialisable as claimed
+
+    text = reg.to_prometheus()
+    assert validate_exposition(text) == []
+    samples = parse_prometheus(text)
+    by_name = {}
+    for name, labels, value in samples:
+        by_name.setdefault(name, []).append((labels, value))
+    assert by_name["engine_dists"] == [
+        ({"engine": "bss", "kind": "range"}, 100.0)
+    ]
+    assert by_name["serve_engine_s_count"][0][1] == 2.0
+    assert by_name["serve_engine_s_sum"][0][1] == 1.0
+    quantiles = {
+        lbl["quantile"] for lbl, _ in by_name["serve_engine_s"]
+    }
+    assert quantiles == {"0.5", "0.95", "0.99"}
+    assert "# TYPE engine_dists counter" in text
+
+
+def test_prometheus_label_escaping_parses_back():
+    reg = MetricsRegistry()
+    reg.counter("m", path='a"b\\c').inc(1)
+    samples = parse_prometheus(reg.to_prometheus())
+    assert samples[0][1] == {"path": 'a"b\\c'}
+
+
+def test_parse_prometheus_rejects_malformed():
+    with pytest.raises(ValueError, match="malformed"):
+        parse_prometheus("this is not a sample line{")
+    with pytest.raises(ValueError, match="non-numeric"):
+        parse_prometheus("ok_name notanumber")
+
+
+def test_render_groups_by_prefix():
+    reg = MetricsRegistry()
+    reg.counter("engine/dists").inc(7)
+    reg.histogram("serve/engine_s").observe(0.5)
+    out = reg.render()
+    assert "== engine " in out and "== serve " in out
+    assert "engine/dists" in out and "p95=" in out
+    assert MetricsRegistry().render() == "(no metrics recorded)"
+
+
+# ------------------------------------------------------------------- spans
+
+
+def test_span_marks_and_durations():
+    sp = Span()
+    for i, stage in enumerate(("admit", "batch", "dispatch", "engine",
+                               "demux")):
+        sp.mark(stage, t=10.0 + i)
+    d = sp.durations()
+    assert d == {"queue": 1.0, "batch": 1.0, "engine": 1.0, "demux": 1.0,
+                 "total": 4.0}
+    with pytest.raises(ValueError, match="unknown stage"):
+        sp.mark("teleport")
+
+
+def test_span_partial_marks():
+    sp = Span()
+    sp.mark("admit", t=1.0)
+    assert sp.durations() == {}  # one mark, no interval
+    sp.mark("engine", t=3.0)  # batch/dispatch never marked
+    d = sp.durations()
+    assert d == {"admit_to_engine": 2.0, "total": 2.0}
+
+
+def test_trace_ids_unique_and_sortable():
+    ids = [new_trace_id() for _ in range(5)]
+    assert len(set(ids)) == 5
+    assert ids == sorted(ids)  # zero-padded -> lexicographic == numeric
+
+
+# ----------------------------------------------- schema on real engine stats
+
+
+def _bss_built(metric="l2"):
+    data = _space(metric, 660, seed=3)
+    db, q = data[:640], data[640:]
+    idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                               block=64, seed=5)
+    t = _snap(pairwise_np(metric, q, db), 0.04)
+    return idx, db, q, t
+
+
+def test_bss_stats_conform_and_cross_check():
+    idx, db, q, t = _bss_built()
+    hits, stats = flat_index.bss_query_batched(idx, q, t,
+                                               realisation="dense")
+    check_stats(stats)
+    assert stats["engine"] == "bss" and stats["kind"] == "range"
+    # attribution cross-check: the scan's only mechanism is the Hilbert
+    # four-point bound, so excluded blocks == blocks whose lower bound
+    # clears the radius
+    lb = flat_index.bss_lower_bounds(idx, q)
+    expect = (np.asarray(lb) > t).sum(axis=1)
+    assert (stats["excluded"]["hilbert"] == expect).all()
+
+    _, _, ks = flat_index.bss_knn_batched(idx, q, 4, realisation="dense")
+    check_stats(ks)
+    assert ks["kind"] == "knn" and ks["rounds"] >= 1
+    assert set(ks["excluded"]) == {"hilbert"}
+
+    # empty batch still conforms
+    _, es = flat_index.bss_query_batched(idx, q[:0], t)
+    check_stats(es)
+    _, _, eks = flat_index.bss_knn_batched(idx, q[:0], 4)
+    check_stats(eks)
+
+
+def test_bss_bf16_stats_conform():
+    idx, db, q, t = _bss_built()
+    _, stats = flat_index.bss_query_batched(idx, q, t, precision="bf16",
+                                            realisation="dense")
+    check_stats(stats)
+    assert stats["precision"] == "bf16"
+    assert "band_eps" in stats and "recheck_points_per_query" in stats
+
+
+def test_forest_stats_attribution_and_frontier():
+    db = _space("l2", 600, seed=21)
+    q = _space("l2", 8, seed=22)
+    tr = tree.build_tree("hpt_fft_log", "l2", db, seed=23)
+    enc = encode_tree(tr)
+    t = _snap(pairwise_np("l2", q, db), 0.04)
+    hits, stats = forest_range_search(enc, q, t)
+    check_stats(stats)
+    assert stats["engine"] == "forest"
+    excl = stats["excluded"]
+    assert set(excl) <= set(MECHANISMS) and "cover" in excl
+    # the walker attributes disjointly (priority cover > hyperplane >
+    # centre), so per-mechanism counts are individually sane and the
+    # batch pruned *something* at this selective radius
+    assert all((v >= 0).all() for v in excl.values())
+    assert sum(int(v.sum()) for v in excl.values()) > 0
+    assert stats["frontier_occupancy"].shape == (len(enc.levels),)
+    assert int(stats["frontier_occupancy"][0]) >= len(q)  # roots all live
+
+    # empty batch conforms with all-zero attribution
+    _, es = forest_range_search(enc, q[:0], t)
+    check_stats(es)
+    assert all(v.shape == (0,) for v in es["excluded"].values())
+
+
+def test_monotone_stats_conform():
+    from repro.core import lrt
+    from repro.forest import encode_monotone, monotone_range_search
+
+    db = _space("l2", 500, seed=31)
+    q = _space("l2", 6, seed=32)
+    mt = lrt.build_monotone_tree("closer", "far", "l2", db, seed=1)
+    enc = encode_monotone(mt)
+    t = _snap(pairwise_np("l2", q, db), 0.04)
+    _, stats = monotone_range_search(enc, q, t)
+    check_stats(stats)
+    assert stats["engine"] == "monotone"
+    assert set(stats["excluded"]) <= set(MECHANISMS)
+
+
+def test_validator_catches_tampering():
+    idx, db, q, t = _bss_built()
+    _, stats = flat_index.bss_query_batched(idx, q, t)
+    assert validate_stats(stats) == []
+    bad = dict(stats)
+    bad["excluded"] = {"warp-drive": stats["excluded"]["hilbert"]}
+    assert any("warp-drive" in p for p in validate_stats(bad))
+    bad = dict(stats)
+    bad["excluded"] = {"hilbert": np.zeros(3, np.int64)}  # wrong shape
+    assert any("hilbert" in p for p in validate_stats(bad))
+    bad = dict(stats)
+    bad["dists_per_query"] = stats["dists_per_query"] + 5.0
+    assert any("dists_per_query" in p for p in validate_stats(bad))
+    bad = dict(stats)
+    del bad["engine"]
+    assert any("missing core key" in p for p in validate_stats(bad))
+    assert validate_stats("nope") == ["stats is str, expected dict"]
+    with pytest.raises(ValueError, match="schema violation"):
+        check_stats({"schema": 1})
+
+
+# ----------------------------------------------------------------- folding
+
+
+def test_fold_engine_stats_counters():
+    reg = MetricsRegistry()
+    stats = {
+        "engine": "bss", "kind": "range", "n_queries": 3,
+        "per_query_dists": np.array([10, 20, 30], np.int64),
+        "dists_per_query": 20.0,
+        "excluded": {"hilbert": np.array([1, 2, 3], np.int64)},
+        "tiles_computed": 7, "tile_exclusion_rate": 0.5,
+        "frontier_occupancy": np.array([3, 5], np.int64),
+        "precision": "fp32",
+    }
+    fold_engine_stats(reg, stats)
+    fold_engine_stats(reg, stats)  # counters accumulate across calls
+    snap = reg.snapshot()
+    c = snap["counters"]
+    assert c["engine/queries{engine=bss,kind=range}"] == 6.0
+    assert c["engine/dists{engine=bss,kind=range}"] == 120.0
+    assert c["engine/excluded{engine=bss,kind=range,mechanism=hilbert}"] \
+        == 12.0
+    assert c["engine/tiles_computed{engine=bss,kind=range}"] == 14.0
+    assert c["engine/frontier_nodes{engine=bss,kind=range,level=1}"] == 10.0
+    assert snap["gauges"]["engine/tile_exclusion_rate{engine=bss,kind=range}"] \
+        == 0.5
+    h = snap["histograms"]["engine/dists_per_query{engine=bss,kind=range}"]
+    assert h["count"] == 6
+    # pre-schema dicts fold without error and contribute only what they have
+    fold_engine_stats(MetricsRegistry(), {"dists_per_query": 4.0})
+
+
+def test_poll_compile_counts_growth():
+    import jax
+
+    f = jax.jit(lambda x: x + 1)
+    if jit_cache_size(f) < 0:
+        pytest.skip("this jax exposes no jit cache hook")
+    reg = MetricsRegistry()
+    f(np.zeros(3, np.float32))
+    last = poll_compile(reg, {"f": f})
+    f(np.zeros(4, np.float32))  # new shape -> new cache entry
+    poll_compile(reg, {"f": f}, last)
+    snap = reg.snapshot()
+    assert snap["counters"]["compile/recompiles{fn=f}"] == 1.0
+    assert snap["gauges"]["compile/cache_size{fn=f}"] == 2.0
+
+
+# --------------------------------------- metrics-on/off bit-identity (ISSUE)
+
+
+@pytest.mark.parametrize("metric", ["l2", "cosine", "jsd", "triangular"])
+def test_metrics_on_off_bit_identity(metric):
+    """The acceptance bar: a metrics-on front and a metrics-off front
+    return bit-identical hits, neighbours, distances and counts on every
+    supermetric — collection is observation, never perturbation."""
+    data = _space(metric, 660, seed=7)
+    db, q = data[:640], data[640:]
+    idx = flat_index.build_bss(metric, db, n_pivots=8, n_pairs=10,
+                               block=64, seed=9)
+    t = _snap(pairwise_np(metric, q, db), 0.04)
+    k = 4
+
+    def run(metrics_on):
+        with ServingFront(idx, buckets=(8, 32), max_delay_s=0.02,
+                          metrics=metrics_on) as front:
+            futs = [
+                front.submit(qv, "knn", k=k) if i % 3 == 1
+                else front.submit(qv, "range", t=t)
+                for i, qv in enumerate(q)
+            ]
+            return [f.result(timeout=120) for f in futs]
+
+    on, off = run(True), run(False)
+    ref_hits, ref_s = flat_index.bss_query_batched(
+        idx, q, t, realisation="dense"
+    )
+    ref_i, ref_d, _ = flat_index.bss_knn_batched(
+        idx, q, k, realisation="dense"
+    )
+    for i, (a, b) in enumerate(zip(on, off)):
+        assert a.n_dists == b.n_dists, (metric, i)
+        if i % 3 == 1:
+            assert (a.indices == b.indices).all(), (metric, i)
+            assert (a.distances == b.distances).all(), (metric, i)
+            assert (a.indices == ref_i[i]).all(), (metric, i)
+            assert (a.distances == ref_d[i]).all(), (metric, i)
+        else:
+            assert a.hits == b.hits == ref_hits[i], (metric, i)
+            assert a.n_dists == ref_s["per_query_dists"][i], (metric, i)
+
+
+def test_metrics_off_front_stays_dark():
+    idx, db, q, t = _bss_built()
+    with ServingFront(idx, max_delay_s=0.01, metrics=False) as front:
+        r = front.submit(q[0], "range", t=t).result(timeout=120)
+        snap = front.metrics().snapshot()
+    assert r.trace_id  # spans always ride the request
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert front.explain() is None
+
+
+# ------------------------------------------------- spans + explain through
+
+
+def test_front_spans_and_explain():
+    idx, db, q, t = _bss_built()
+    with ServingFront(idx, buckets=(8,), max_delay_s=0.01,
+                      cache_size=16) as front:
+        res = [front.submit(qv, "range", t=t).result(timeout=120)
+               for qv in q[:5]]
+        hit = front.submit(q[0], "range", t=t).result(timeout=120)
+        reg = front.metrics()
+        snap = reg.snapshot()
+        rec = front.explain(res[2].trace_id)
+        latest = front.explain()
+
+    ids = [r.trace_id for r in res]
+    assert len(set(ids)) == 5 and all(ids)
+    for r in res:
+        assert set(r.spans) == {"queue", "batch", "engine", "demux",
+                                "total"}
+        assert all(v >= 0.0 for v in r.spans.values())
+        assert r.spans["total"] >= r.spans["engine"]
+    # cache hits keep their own trace but never reach the engine
+    assert hit.cache_hit and hit.trace_id not in ids
+    assert front.explain(hit.trace_id) is None
+
+    assert rec is not None and rec["trace_id"] == res[2].trace_id
+    assert rec["kind"] == "range" and rec["n_dists"] == res[2].n_dists
+    assert set(rec["excluded"]) == {"hilbert"}
+    assert rec["excluded"]["hilbert"] >= 0
+    assert latest["trace_id"] == res[-1].trace_id
+
+    c = snap["counters"]
+    assert c["engine/queries{engine=bss,kind=range}"] == 5.0
+    assert c["serve/cache_hits"] == 1.0
+    assert snap["histograms"]["serve/batch_size{kind=range}"]["count"] >= 1
+    assert any(k.startswith("serve/span_s") for k in snap["histograms"])
+    assert snap["gauges"]["compile/ladder_buckets"] >= 1
+    assert validate_exposition(reg.to_prometheus()) == []
+
+
+def test_front_forest_explain_attribution():
+    db = _space("l2", 600, seed=41)
+    q = _space("l2", 6, seed=42)
+    tr = tree.build_tree("hpt_fft_log", "l2", db, seed=43)
+    enc = encode_tree(tr)
+    t = _snap(pairwise_np("l2", q, db), 0.04)
+    with ServingFront(enc, buckets=(8,), max_delay_s=0.01) as front:
+        res = [front.submit(qv, "range", t=t).result(timeout=120)
+               for qv in q]
+        recs = [front.explain(r.trace_id) for r in res]
+        snap = front.metrics().snapshot()
+    for rec in recs:
+        assert rec["engine"] == "forest"
+        assert set(rec["excluded"]) <= set(MECHANISMS)
+    assert any(
+        k.startswith("engine/frontier_nodes") for k in snap["counters"]
+    )
+
+
+# --------------------------------------------------- jaxpr-audit self-check
+
+
+def test_instrumented_engines_have_zero_callbacks():
+    """The obs outputs are functional jit returns: tracing the very entry
+    points that now carry the counters shows no callback primitive
+    anywhere in their jaxprs (the PR 7 audit, run on the PR 8 engines)."""
+    from repro.analysis.jaxpr_audit import (
+        _check_no_callbacks,
+        _patched_engines,
+        _Recorder,
+    )
+
+    idx, db, q, t = _bss_built()
+    tr = tree.build_tree("hpt_fft_log", "l2", db, seed=51)
+    enc = encode_tree(tr)
+    rec = _Recorder()
+    with _patched_engines(rec):
+        flat_index.bss_query_batched(idx, q, t, realisation="dense")
+        flat_index.bss_knn_batched(idx, q, 3, realisation="dense")
+        forest_range_search(enc, q, t)
+    fns = {c.fn for c in rec.captures}
+    assert "_forest_walk_jit" in fns and "_dense_hit_mask_jit" in fns
+    assert "_knn_round_jit" in fns
+    for cap in rec.captures:
+        assert _check_no_callbacks(cap) == [], cap.fn
+
+
+# ----------------------------------------------------------------- export
+
+
+def test_write_snapshot(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("engine/dists").inc(3)
+    p = write_snapshot(reg, tmp_path / "OBS_snapshot.json",
+                       extra={"stats": {"x": np.int64(4),
+                                        "a": np.arange(2)}})
+    payload = json.loads(p.read_text())
+    assert payload["metrics"]["counters"]["engine/dists"] == 3.0
+    assert payload["stats"] == {"x": 4, "a": [0, 1]}
+
+
+def test_retrieval_server_folds_metrics():
+    from repro.serve.retrieval import RetrievalServer
+
+    rng = np.random.default_rng(0)
+    corpus = rng.normal(size=(400, DIM)).astype(np.float32)
+    srv = RetrievalServer(corpus, metric="cosine", seed=1)
+    q = rng.normal(size=(4, DIM)).astype(np.float32)
+    srv.range_query(q, 0.2)
+    srv.top_k(q, 3)
+    c = srv.metrics.snapshot()["counters"]
+    assert c["engine/queries{engine=bss,kind=range}"] == 4.0
+    assert c["engine/queries{engine=bss,kind=knn}"] == 4.0
+    assert srv.metrics.snapshot()["histograms"]["serve/call_s"]["count"] == 2
