@@ -28,6 +28,7 @@ from benchmarks.paper_common import (
     FULL, load_space, row, timed, write_bench_json,
 )
 from repro.core import flat_index, tree
+from repro.core.backends import EngineOpts
 from repro.core.npdist import pairwise_np
 from repro.data import metricsets
 
@@ -247,7 +248,8 @@ def run_all_precision(seed: int = 0, n: int | None = None, nq: int = 128,
     results dict for BENCH_bss_bf16.json)."""
     n = n or (16_384 if FULL else 4_096)
     rows, results = [], {}
-    kw = dict(realisation="dense")
+    kw = dict(opts=EngineOpts(realisation="dense"))
+    kw16 = dict(opts=EngineOpts(realisation="dense", precision="bf16"))
     for metric in SUPERMETRICS:
         db, q, t = _metric_space(metric, n, nq, seed)
         idx, dt_build = timed(
@@ -260,12 +262,12 @@ def run_all_precision(seed: int = 0, n: int | None = None, nq: int = 128,
 
         for fn in (flat_index.bss_query_batched,):  # warm both jit caches
             fn(idx, q, t, **kw)
-            fn(idx, q, t, precision="bf16", **kw)
+            fn(idx, q, t, **kw16)
         (h32, s32), dt32 = timed(
             flat_index.bss_query_batched, idx, q, t, **kw
         )
         (h16, s16), dt16 = timed(
-            flat_index.bss_query_batched, idx, q, t, precision="bf16", **kw
+            flat_index.bss_query_batched, idx, q, t, **kw16
         )
         range_ident = h32 == h16 and np.array_equal(
             s32["per_query_dists"], s16["per_query_dists"]
@@ -279,12 +281,12 @@ def run_all_precision(seed: int = 0, n: int | None = None, nq: int = 128,
                 + s16["recheck_tiles"] * tile_bytes * 4)
 
         flat_index.bss_knn_batched(idx, q, k, **kw)  # warm-up
-        flat_index.bss_knn_batched(idx, q, k, precision="bf16", **kw)
+        flat_index.bss_knn_batched(idx, q, k, **kw16)
         (i32, d32, k32), dtk32 = timed(
             flat_index.bss_knn_batched, idx, q, k, **kw
         )
         (i16, d16, k16), dtk16 = timed(
-            flat_index.bss_knn_batched, idx, q, k, precision="bf16", **kw
+            flat_index.bss_knn_batched, idx, q, k, **kw16
         )
         knn_ident = (
             np.array_equal(i32, i16)

@@ -1,0 +1,181 @@
+"""Living-corpus maintenance: append throughput and compaction payoff.
+
+Measures what `repro.index.maintain` buys over rebuilding:
+
+* **Append throughput** — rows/s through `maintain.append` (new blocks
+  against the EXISTING pivot tables, `m x P` host table distances) vs a
+  full `build_bss` over the grown corpus after every batch.  The speedup
+  is the point of the O(m) path; the table-distance counter in the
+  mutation stats proves no corpus re-derivation happened.
+
+* **Post-compact query cost** — distances/query and wall-clock on the
+  fragmented index (appends open fresh blocks, deletes leave loose boxes)
+  vs after `compact(refresh_pivots=True)` vs a fresh `build_bss` over the
+  same live rows.  The compacted and fresh indexes must agree EXACTLY
+  (same layout, same hits, same per-query distance counts) — compaction
+  is a rebuild the corpus never stops serving through (the front swaps
+  generations between micro-batches).
+
+`python -m benchmarks.bss_incremental` writes
+``BENCH_bss_incremental.json`` (final generation stamped) for the CI perf
+trajectory; `run()` is the `benchmarks.run` suite hook.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.paper_common import (
+    FULL, load_space, now, row, timed, write_bench_json,
+)
+from repro.core import flat_index
+from repro.index import maintain
+
+# base corpus fraction / append batches sized so the append phase roughly
+# doubles the corpus — the regime where rebuild-per-batch visibly loses
+N_BATCHES = 8
+DELETE_FRAC = 0.15
+
+
+def run_incremental(seed: int = 0) -> tuple[list[str], dict]:
+    rows: list[str] = []
+    db, q, t = load_space("colors", seed=seed)
+    n0 = len(db) // 2
+    base, grow = db[:n0], db[n0:]
+    idx, dt_build0 = timed(
+        flat_index.build_bss, "l2", base, n_pivots=16, n_pairs=24,
+        block=128, seed=seed,
+    )
+    # warm the device mirror so appends measure the extend path, not the
+    # first-touch transfer
+    flat_index.bss_query_batched(idx, q[:8], t)
+
+    # -- append throughput: m-row batches vs full rebuild of the grown corpus
+    batch = len(grow) // N_BATCHES
+    append_s = rebuild_s = 0.0
+    table_dists = appended = 0
+    for i in range(N_BATCHES):
+        chunk = grow[i * batch:(i + 1) * batch]
+        (idx, ms), dt = timed(maintain.append, idx, chunk)
+        append_s += dt
+        table_dists += ms.table_dists
+        appended += ms.rows
+        _, dt_rebuild = timed(
+            flat_index.build_bss, "l2", db[:n0 + (i + 1) * batch],
+            n_pivots=16, n_pairs=24, block=128, seed=seed,
+        )
+        rebuild_s += dt_rebuild
+    rows.append(row(
+        "bss_incremental/append", append_s / N_BATCHES * 1e6,
+        f"rows_per_s={appended / max(append_s, 1e-9):.0f};"
+        f"table_dists={table_dists};"
+        f"speedup_vs_rebuild={rebuild_s / max(append_s, 1e-9):.1f}x;"
+        f"generation={idx.generation}",
+    ))
+
+    # -- fragment further with deletes, then measure the compaction payoff
+    rng = np.random.default_rng(seed + 1)
+    dead = rng.choice(idx.next_id, size=int(DELETE_FRAC * idx.next_id),
+                      replace=False)
+    idx, _ = maintain.delete(idx, dead)
+    live = np.setdiff1d(np.arange(idx.next_id), dead)
+
+    (hits_frag, st_frag), dt_frag = timed(
+        flat_index.bss_query_batched, idx, q, t
+    )
+    (idx_c, ms_c), dt_compact = timed(maintain.compact, idx)
+    (hits_c, st_c), dt_c = timed(flat_index.bss_query_batched, idx_c, q, t)
+    fresh, dt_fresh_build = timed(
+        flat_index.build_bss, "l2", db[live], n_pivots=16, n_pairs=24,
+        block=128, seed=seed,
+    )
+    (hits_f, st_f), dt_f = timed(flat_index.bss_query_batched, fresh, q, t)
+
+    # exactness: every phase returns the same live hits; compacted == fresh
+    # down to the per-query distance counts (fresh hits are row positions
+    # into db[live] — map them back to original ids)
+    hits_f_ids = [sorted(int(live[j]) for j in h) for h in hits_f]
+    exact = (
+        [sorted(h) for h in hits_frag] == hits_f_ids
+        and [sorted(h) for h in hits_c] == hits_f_ids
+        and (st_c["per_query_dists"] == st_f["per_query_dists"]).all()
+    )
+    rows.append(row(
+        "bss_incremental/query_fragmented", dt_frag / len(q) * 1e6,
+        f"dists_per_query={st_frag['dists_per_query']:.0f};"
+        f"blocks={st_frag['n_blocks']};"
+        f"tombstone_frac={DELETE_FRAC:.2f}",
+    ))
+    rows.append(row(
+        "bss_incremental/query_compacted", dt_c / len(q) * 1e6,
+        f"dists_per_query={st_c['dists_per_query']:.0f};"
+        f"blocks={st_c['n_blocks']};compact_s={dt_compact:.2f};"
+        f"exact={exact};generation={idx_c.generation}",
+    ))
+    rows.append(row(
+        "bss_incremental/query_fresh_rebuild", dt_f / len(q) * 1e6,
+        f"dists_per_query={st_f['dists_per_query']:.0f};"
+        f"rebuild_s={dt_fresh_build:.2f};"
+        f"counts_equal_compacted={bool((st_c['per_query_dists'] == st_f['per_query_dists']).all())}",
+    ))
+
+    results = {
+        "base_rows": int(n0),
+        "base_build_s": round(dt_build0, 3),
+        "append": {
+            "batches": N_BATCHES,
+            "rows": int(appended),
+            "rows_per_s": round(appended / max(append_s, 1e-9), 1),
+            "table_dists": int(table_dists),
+            "append_s": round(append_s, 3),
+            "rebuild_s": round(rebuild_s, 3),
+            "speedup_vs_rebuild": round(rebuild_s / max(append_s, 1e-9), 2),
+        },
+        "compaction": {
+            "deleted_rows": int(dead.size),
+            "compact_s": round(dt_compact, 3),
+            "fresh_rebuild_s": round(dt_fresh_build, 3),
+            "dists_per_query_fragmented": round(
+                float(st_frag["dists_per_query"]), 1),
+            "dists_per_query_compacted": round(
+                float(st_c["dists_per_query"]), 1),
+            "dists_per_query_fresh": round(
+                float(st_f["dists_per_query"]), 1),
+            "us_per_query_fragmented": round(dt_frag / len(q) * 1e6, 1),
+            "us_per_query_compacted": round(dt_c / len(q) * 1e6, 1),
+            "refreshed_pivots": bool(ms_c.refreshed_pivots),
+        },
+        "generation": int(idx_c.generation),
+        "exact": bool(exact),
+    }
+    return rows, results
+
+
+def run(seed: int = 0) -> list[str]:
+    rows, _ = run_incremental(seed=seed)
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t0 = now()
+    rows, results = run_incremental(seed=args.seed)
+    for r in rows:
+        print(r, flush=True)
+    write_bench_json(args.out or "BENCH_bss_incremental.json", {
+        "bench": "bss_incremental",
+        "seed": args.seed,
+        "wall_s": round(now() - t0, 1),
+        "full": FULL,
+        **results,
+    })
+
+
+if __name__ == "__main__":
+    main()

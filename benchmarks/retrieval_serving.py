@@ -23,9 +23,12 @@ import numpy as np
 
 from benchmarks.paper_common import now, row
 from repro.configs.registry import get_arch
+from repro.core.backends import EngineOpts
 from repro.core.npdist import pairwise_np
 from repro.data import metricsets
 from repro.serve.retrieval import RetrievalServer
+
+_DENSE = EngineOpts(realisation="dense")
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 
@@ -188,10 +191,9 @@ def run_async(seed: int = 0, smoke: bool = False,
         i %= n_pool
         if kinds[i] == "range":
             return flat_index.bss_query_batched(
-                index, queries[i : i + 1], float(t_req[i]),
-                realisation="dense")
+                index, queries[i : i + 1], float(t_req[i]), opts=_DENSE)
         return flat_index.bss_knn_batched(
-            index, queries[i : i + 1], k, realisation="dense")
+            index, queries[i : i + 1], k, opts=_DENSE)
 
     # Warm the jit caches for both paths: batch-1 shapes for the sync
     # baseline; every bucket-ladder shape (range WITH a padded negative
@@ -206,8 +208,8 @@ def run_async(seed: int = 0, smoke: bool = False,
         qb = np.repeat(queries[:1], b, axis=0)
         tb = np.full(b, t_base, np.float32)
         tb[-1] = -1.0  # the front's padding sentinel shape
-        flat_index.bss_query_batched(index, qb, tb, realisation="dense")
-        flat_index.bss_knn_batched(index, qb, k, realisation="dense")
+        flat_index.bss_query_batched(index, qb, tb, opts=_DENSE)
+        flat_index.bss_knn_batched(index, qb, k, opts=_DENSE)
     with ServingFront(index, max_delay_s=0.001, max_queue=n_pool) as wf:
         warm = [
             wf.submit(queries[i], "range", t=float(t_req[i]))

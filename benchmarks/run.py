@@ -16,6 +16,7 @@ def main() -> None:
     from benchmarks import (
         analysis_cache,
         bss_engine,
+        bss_incremental,
         bss_sharded,
         paper_lrt,
         paper_scatter,
@@ -36,6 +37,7 @@ def main() -> None:
         "bss_metrics": bss_engine.run_metrics,  # 4-supermetric sweep
         "bss_bf16": bss_engine.run_precision,  # fp32-vs-bf16 exact phase
         "bss_sharded": bss_sharded.run,   # multi-device mesh sweep
+        "bss_incremental": bss_incremental.run,  # living-corpus maintenance
         "retrieval": retrieval_serving.run,  # serving integration
         "retrieval_async": retrieval_serving.run_async,  # async front, Poisson
         "roofline": roofline.run,         # dry-run derived terms

@@ -20,6 +20,7 @@ os.environ.setdefault(
 import numpy as np  # noqa: E402
 
 from repro.core import flat_index, tree  # noqa: E402
+from repro.core.backends import EngineOpts  # noqa: E402
 from repro.data import metricsets  # noqa: E402
 
 # 1. a clustered "real-world-like" metric space (colors surrogate)
@@ -153,7 +154,8 @@ print(
 #     counts stay bit-identical to the fp32 engine.  eps comes from the
 #     measured rounding displacement: eps = 2*max_p d(p, p~) + a small
 #     fp32-arithmetic term (see repro/core/precision.py).
-h16, s16 = flat_index.bss_query_batched(idx, queries, t, precision="bf16")
+h16, s16 = flat_index.bss_query_batched(
+    idx, queries, t, opts=EngineOpts(precision="bf16"))
 assert h16 == hits  # bit-identical to the fp32 engine of step 4
 assert (s16["per_query_dists"] == stats["per_query_dists"]).all()
 print(
@@ -201,4 +203,44 @@ print(
     f"excluded {trace['excluded']} blocks, span total "
     f"{1e3 * trace['spans']['total']:.1f}ms "
     f"(engine {1e3 * trace['spans']['engine']:.1f}ms)"
+)
+
+# 13. living corpus: the index of step 4 is not frozen.  append() packs new
+#     rows into fresh blocks against the EXISTING pivots (m x P distances,
+#     no rebuild), delete() tombstones, compact() re-permutes the layout —
+#     and every mutation bumps a monotonic generation the front swaps
+#     between micro-batches (in-flight queries finish on their snapshot,
+#     the answer cache keys on the generation, so nothing stale is ever
+#     served).  Results after any mutation are bit-identical to a fresh
+#     build_bss over the same live rows.
+new_rows = metricsets.colors_surrogate(512, dim=64, seed=7)
+with ServingFront(idx, max_delay_s=0.005, metrics=True) as front:
+    g0 = front.metrics().series()
+    gen0 = int(next(s.value for s in g0 if s.name == "index/generation"))
+    ms_a = front.append(new_rows)
+    grown = [front.submit(qv, "range", t=t).result(timeout=120)
+             for qv in queries[:8]]
+    ms_d = front.delete(np.arange(64))
+    ms_c = front.compact()
+    g1 = front.metrics().series()
+    gen1 = int(next(s.value for s in g1 if s.name == "index/generation"))
+    final = [front.submit(qv, "range", t=t).result(timeout=120)
+             for qv in queries[:8]]
+    live_index = front.index
+assert gen1 == gen0 + 3  # append, delete, compact: one generation each
+assert all(r.generation == gen1 for r in final)
+new_ids = len(db) + np.arange(len(new_rows))  # appended rows: ids next_id..
+live_ids = np.concatenate([np.arange(64, len(db)), new_ids])
+fresh = flat_index.build_bss(
+    "l2", np.concatenate([db[64:], new_rows]), n_pivots=16, n_pairs=24,
+    block=128, seed=idx.seed,
+)
+fresh_hits, _ = flat_index.bss_query_batched(fresh, queries[:8], t)
+remap = [sorted(live_ids[j] for j in h) for h in fresh_hits]
+assert [sorted(r.hits) for r in final] == remap  # == fresh rebuild
+print(
+    f"living corpus: +{ms_a.rows} rows ({ms_a.new_blocks} new blocks, "
+    f"{ms_a.table_dists} table distances), -{ms_d.rows} tombstoned, "
+    f"compacted to {ms_c.n_blocks} blocks — generation {gen0} -> {gen1}, "
+    f"results == fresh rebuild over the live rows"
 )

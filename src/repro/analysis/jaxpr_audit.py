@@ -39,6 +39,8 @@ import dataclasses
 import functools
 from typing import Any, Callable
 
+from repro.core.backends import EngineOpts
+
 __all__ = [
     "AuditProblem",
     "run_audit",
@@ -594,29 +596,30 @@ def run_audit(
             idx = flat_index.build_bss(
                 metric, db, n_pivots=6, n_pairs=8, block=32, seed=5
             )
-            # backend x realisation legs: the adaptive jnp path is run at
-            # both a pruning and a flooding radius so BOTH its exact-phase
+            # backend x realisation legs as EngineOpts — the audit drives
+            # the engines through the SAME frozen-options surface the
+            # serving stack uses; the adaptive jnp path is run at both a
+            # pruning and a flooding radius so BOTH its exact-phase
             # realisations (cell-gather and dense) trace.
             legs = [
-                ("jnp", "adaptive", None),
-                ("jnp", "dense", None),
-                ("pallas", "dense", True),
+                EngineOpts(backend="jnp", realisation="adaptive"),
+                EngineOpts(backend="jnp", realisation="dense"),
+                EngineOpts(backend="pallas", realisation="dense",
+                           interpret=True),
             ]
-            for backend, realisation, interpret in legs:
+            for leg in legs:
                 for precision in ("fp32", "bf16"):
-                    cell = f"bss/{metric}/{backend}-{realisation}/{precision}"
+                    opts = dataclasses.replace(leg, precision=precision)
+                    cell = (
+                        f"bss/{metric}/{opts.backend}-{opts.realisation}"
+                        f"/{precision}"
+                    )
                     rec.cell = cell
                     log(f"audit {cell}")
                     for t in (t_narrow, t_wide):
-                        flat_index.bss_query_batched(
-                            idx, q, t,
-                            backend=backend, interpret=interpret,
-                            realisation=realisation, precision=precision,
-                        )
+                        flat_index.bss_query_batched(idx, q, t, opts=opts)
                     flat_index.bss_knn_batched(
-                        idx, q, 3, r0=t_narrow, backend=backend,
-                        interpret=interpret, realisation=realisation,
-                        precision=precision,
+                        idx, q, 3, r0=t_narrow, opts=opts,
                     )
                     problems += _audit_captures(
                         rec, cell, bf16=precision == "bf16"
@@ -632,16 +635,14 @@ def run_audit(
             mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
             sidx = shard_index.shard_bss(idx, mesh)
             for precision in ("fp32", "bf16"):
+                opts = EngineOpts(backend="jnp", precision=precision)
                 cell = f"sharded/{metric}/jnp/{precision}"
                 rec.cell = cell
                 log(f"audit {cell}")
                 shard_index.sharded_query_batched(
-                    sidx, q, t_narrow, backend="jnp",
-                    precision=precision,
+                    sidx, q, t_narrow, opts=opts,
                 )
-                shard_index.sharded_knn_batched(
-                    sidx, q, 3, backend="jnp", precision=precision,
-                )
+                shard_index.sharded_knn_batched(sidx, q, 3, opts=opts)
                 problems += _audit_captures(
                     rec, cell, bf16=precision == "bf16"
                 )
@@ -653,17 +654,15 @@ def run_audit(
             menc = encode_monotone(mtr)
             for backend, interpret in (("jnp", None), ("pallas", True)):
                 for precision in ("fp32", "bf16"):
+                    opts = EngineOpts(
+                        backend=backend, interpret=interpret,
+                        precision=precision,
+                    )
                     cell = f"forest/{metric}/{backend}/{precision}"
                     rec.cell = cell
                     log(f"audit {cell}")
-                    forest_range_search(
-                        enc, q, t_narrow, backend=backend,
-                        interpret=interpret, precision=precision,
-                    )
-                    monotone_range_search(
-                        menc, q, t_narrow, backend=backend,
-                        interpret=interpret, precision=precision,
-                    )
+                    forest_range_search(enc, q, t_narrow, opts=opts)
+                    monotone_range_search(menc, q, t_narrow, opts=opts)
                     problems += _audit_captures(
                         rec, cell, bf16=precision == "bf16"
                     )

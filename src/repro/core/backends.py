@@ -1,6 +1,15 @@
 """Shared plumbing of the batched query engines (BSS scan + device forest):
-backend selection, query-tile survival, and the serving front's shape
-buckets.
+the engine option record, backend selection, query-tile survival, and the
+serving front's shape buckets.
+
+``EngineOpts`` is the ONE definition of the cross-cutting engine option
+space.  The five knobs (query-tile size, compute backend, Pallas interpret
+mode, jnp exact-phase realisation, exact-phase precision) used to be
+copy-pasted across every batched entry point — six signatures that had to
+agree, and did only by review.  Every entry point now accepts
+``opts=EngineOpts(...)``; the legacy per-knob kwargs still work through
+:func:`resolve_engine_opts` (and warn when ``REPRO_STRICT_API=1``), so the
+option space is defined, validated and documented exactly once.
 
 Both engines tile their work as (query-tile x corpus-block) cells fed to the
 masked Pallas kernels on TPU (``backend="pallas"``) or an equivalent fused
@@ -18,16 +27,110 @@ compile-guard tests (and the front's telemetry) count those lowerings with.
 
 from __future__ import annotations
 
+import dataclasses
+import os
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 __all__ = [
+    "EngineOpts",
+    "resolve_engine_opts",
     "resolve_backend",
     "tile_survival",
     "DEFAULT_BUCKETS",
     "bucket_for",
     "jit_cache_size",
 ]
+
+# set REPRO_STRICT_API=1 to make the legacy per-knob engine kwargs warn
+# (DeprecationWarning) — the migration ratchet for out-of-repo callers;
+# in-repo callers all pass opts= already
+STRICT_API_ENV = "REPRO_STRICT_API"
+
+_BACKENDS = ("auto", "pallas", "jnp")
+_REALISATIONS = ("adaptive", "dense")
+_PRECISIONS = ("fp32", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineOpts:
+    """The cross-cutting options of every batched query engine, as one
+    frozen (hashable, reusable) record.
+
+    * ``bq`` — query-tile row count fed to the masked kernels; ``None``
+      means the kernel default (``repro.kernels.tiles.TILE_BQ``, itself
+      env-overridable).  Engines that tile differently (the forest
+      walkers) ignore it.
+    * ``backend`` — ``"auto"`` (pallas on TPU, jnp elsewhere) | ``"pallas"``
+      | ``"jnp"``.
+    * ``interpret`` — Pallas interpret mode (tests run the kernel wiring
+      off-TPU with ``backend="pallas", interpret=True``); ``None`` leaves
+      the kernel default.
+    * ``realisation`` — jnp exact-phase realisation: ``"adaptive"`` picks
+      cell-gather vs dense by survivor density, ``"dense"`` pins the
+      fixed-shape pass (the serving front's choice — bounded recompiles).
+      Engines without the adaptive split (sharded, forest) ignore it.
+    * ``precision`` — exact-phase corpus precision, ``"fp32"`` | ``"bf16"``
+      (bf16 streams the half-width mirror with an fp32 boundary re-check;
+      results and counts bit-identical either way).
+
+    Validation lives here, once, instead of per entry point."""
+
+    bq: int | None = None
+    backend: str = "auto"
+    interpret: bool | None = None
+    realisation: str = "adaptive"
+    precision: str = "fp32"
+
+    def __post_init__(self):
+        if self.bq is not None and int(self.bq) <= 0:
+            raise ValueError(f"bq must be positive, got {self.bq}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(
+                f"backend must be auto|pallas|jnp, got {self.backend!r}"
+            )
+        if self.realisation not in _REALISATIONS:
+            raise ValueError(
+                f"realisation must be adaptive|dense, got "
+                f"{self.realisation!r}"
+            )
+        if self.precision not in _PRECISIONS:
+            raise ValueError(
+                f"precision must be fp32|bf16, got {self.precision!r}"
+            )
+
+
+def resolve_engine_opts(opts: EngineOpts | None = None, **legacy) -> EngineOpts:
+    """The legacy-kwarg shim every engine entry point funnels through.
+
+    ``opts`` given -> returned as-is (mixing it with a legacy kwarg is an
+    error: two sources of truth for one knob).  ``opts`` absent -> an
+    ``EngineOpts`` is assembled from whichever legacy kwargs the caller
+    passed (``None`` = not passed = the field default), with a
+    ``DeprecationWarning`` when ``REPRO_STRICT_API=1`` — the in-repo
+    callers all pass ``opts=``; the env var is the ratchet for the rest."""
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if opts is not None:
+        if not isinstance(opts, EngineOpts):
+            raise TypeError(
+                f"opts must be an EngineOpts, got {type(opts).__name__}"
+            )
+        if given:
+            raise ValueError(
+                f"pass opts= OR the legacy kwargs, not both (got opts= and "
+                f"{sorted(given)})"
+            )
+        return opts
+    if given and os.environ.get(STRICT_API_ENV) == "1":
+        warnings.warn(
+            f"legacy engine kwargs {sorted(given)} are deprecated; pass "
+            f"opts=EngineOpts(...) (repro.core.backends)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return EngineOpts(**given)
 
 # default micro-batch shape ladder of the serving front: 8 covers trickle
 # traffic, 512 is past the point where the fused engines are

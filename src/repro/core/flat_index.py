@@ -94,7 +94,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import projection
-from repro.core.backends import resolve_backend, tile_survival
+from repro.core.backends import EngineOpts, resolve_backend, resolve_engine_opts, tile_survival
 from repro.core.distances import Metric, get_metric
 from repro.core.npdist import pairwise_np
 from repro.core.refpoints import select_fft
@@ -163,6 +163,14 @@ class BSSIndex:
     deltas: np.ndarray        # (M,)
     boxes: np.ndarray         # (n_blocks, M, 4) = x_lo, x_hi, y_lo, y_hi
     block: int
+    # build provenance + living-corpus bookkeeping (repro.index.maintain):
+    # mutations are FUNCTIONAL — append/delete/compact return a new index
+    # sharing unchanged arrays — so a generation is a consistent snapshot
+    # (the serving front swaps whole generations between micro-batches).
+    seed: int = 0        # build seed; compact reuses it for layout parity
+    generation: int = 0  # bumped by every append/delete/compact
+    next_id: int = 0     # next original id an append will assign
+    tombstones: int = 0  # rows deleted since build/last compact
     # when set, device arrays are born with a NamedSharding over the mesh's
     # data axes (corpus blocks partitioned, reference tables replicated) and
     # the batched query paths route through the sharded engine
@@ -194,6 +202,12 @@ class BSSIndex:
     @property
     def n_valid(self) -> int:
         return int(self.valid.sum())
+
+    @property
+    def tombstone_frac(self) -> float:
+        """Deleted fraction of the rows the layout still carries — the
+        compaction trigger (``repro.index.maintain.maybe_compact``)."""
+        return self.tombstones / max(self.tombstones + self.n_valid, 1)
 
     @property
     def metric(self) -> Metric:
@@ -268,6 +282,62 @@ def _project_all(dp: np.ndarray, pairs: np.ndarray, deltas: np.ndarray):
     )
 
 
+def _split_perm(feats: np.ndarray, block: int) -> np.ndarray:
+    """Locality-preserving permutation of ``len(feats)`` rows: recursive
+    max-variance median split of the margin space down to block-sized
+    leaves.  Shared by ``build_bss`` and the append path
+    (``repro.index.maintain``) so both lay rows out identically."""
+    out: list[np.ndarray] = []
+
+    def split(idx: np.ndarray):
+        if len(idx) <= block:
+            out.append(idx)
+            return
+        sub = feats[idx]
+        dimm = int(np.argmax(sub.var(axis=0)))
+        order = np.argsort(sub[:, dimm], kind="stable")
+        half = len(idx) // 2
+        split(idx[order[:half]])
+        split(idx[order[half:]])
+
+    split(np.arange(len(feats), dtype=np.int64))
+    return np.concatenate(out)
+
+
+def _pack_blocks(
+    data_rows: np.ndarray, x: np.ndarray, y: np.ndarray, block: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad already-permuted engine-space rows to whole blocks and compute
+    the per (block × plane) bounding boxes — the packing half of
+    ``build_bss``, shared with the append path so appended blocks are
+    bit-identical to built ones.  Returns ``(data_pad, valid, boxes)``."""
+    n, m = x.shape
+    n_blocks = math.ceil(n / block)
+    pad = n_blocks * block - n
+    valid = np.concatenate(
+        [np.ones(n, dtype=bool), np.zeros(pad, dtype=bool)]
+    )
+    data_pad = np.concatenate(
+        [data_rows, np.zeros((pad, data_rows.shape[1]), np.float32)]
+    )
+    xs = np.concatenate([x, np.zeros((pad, m), np.float32)])
+    ys = np.concatenate([y, np.zeros((pad, m), np.float32)])
+    xs = xs.reshape(n_blocks, block, m)
+    ys = ys.reshape(n_blocks, block, m)
+    vmask = valid.reshape(n_blocks, block, 1)
+    big = np.float32(3.4e38)
+    boxes = np.stack(
+        [
+            np.where(vmask, xs, big).min(axis=1),
+            np.where(vmask, xs, -big).max(axis=1),
+            np.where(vmask, ys, big).min(axis=1),
+            np.where(vmask, ys, -big).max(axis=1),
+        ],
+        axis=-1,
+    ).astype(np.float32)  # (n_blocks, M, 4)
+    return data_pad, valid, boxes
+
+
 def build_bss(
     metric_name: str,
     data: np.ndarray,
@@ -288,7 +358,6 @@ def build_bss(
             f"exclusion would be unsound.  Use a supermetric, or its "
             f"power transform (e.g. {metric_name}^0.5, paper §2.2)."
         )
-    rng = np.random.default_rng(seed)
     data = np.asarray(data, np.float32)
     if metric_name == "cosine":
         # Corpus onto the unit sphere once: supermetric cosine distance IS
@@ -296,6 +365,28 @@ def build_bss(
         # runs the l2 path with zero approximation.
         norms = np.linalg.norm(data, axis=1, keepdims=True)
         data = data / np.maximum(norms, _MIN_NORM)
+    return _build_engine_index(
+        metric_name, data, n_pivots=n_pivots, n_pairs=n_pairs, block=block,
+        seed=seed, mesh=mesh,
+    )
+
+
+def _build_engine_index(
+    metric_name: str,
+    data: np.ndarray,
+    *,
+    n_pivots: int,
+    n_pairs: int,
+    block: int,
+    seed: int,
+    mesh: Mesh | None,
+) -> BSSIndex:
+    """``build_bss`` body over ENGINE-SPACE rows (already f32, already on
+    the unit sphere for cosine).  Split out so ``repro.index.maintain``'s
+    compact can rebuild from an index's stored rows with the EXACT ops of a
+    fresh build — stored cosine rows are normalised once at original build,
+    and renormalising them is not bit-stable."""
+    rng = np.random.default_rng(seed)
     build_metric = _engine_metric(metric_name)
     n = data.shape[0]
     piv_idx = select_fft(build_metric, data, n_pivots, rng)
@@ -314,45 +405,12 @@ def build_bss(
     x, y = _project_all(dp, pairs, deltas)  # (n, M) each
     feats = np.concatenate([x, y], axis=1)  # (n, 2M) margin space
 
-    # locality-preserving permutation: recursive max-variance median split
-    out: list[np.ndarray] = []
-
-    def split(idx: np.ndarray):
-        if len(idx) <= block:
-            out.append(idx)
-            return
-        sub = feats[idx]
-        dimm = int(np.argmax(sub.var(axis=0)))
-        order = np.argsort(sub[:, dimm], kind="stable")
-        half = len(idx) // 2
-        split(idx[order[:half]])
-        split(idx[order[half:]])
-
-    split(np.arange(n, dtype=np.int64))
-    perm = np.concatenate(out)
-
-    n_blocks = math.ceil(n / block)
-    n_pad = n_blocks * block
-    pad = n_pad - n
+    # locality-preserving permutation + MXU-aligned packing (helpers shared
+    # with the append path, which runs them over new rows only)
+    perm = _split_perm(feats, block)
+    dsorted, valid, boxes = _pack_blocks(data[perm], x[perm], y[perm], block)
+    pad = valid.shape[0] - n
     perm_pad = np.concatenate([perm, np.full(pad, -1, dtype=np.int64)])
-    valid = perm_pad >= 0
-    dsorted = np.concatenate([data[perm], np.zeros((pad, data.shape[1]), np.float32)])
-
-    xs = np.concatenate([x[perm], np.zeros((pad, m), np.float32)])
-    ys = np.concatenate([y[perm], np.zeros((pad, m), np.float32)])
-    xs = xs.reshape(n_blocks, block, m)
-    ys = ys.reshape(n_blocks, block, m)
-    vmask = valid.reshape(n_blocks, block, 1)
-    big = np.float32(3.4e38)
-    boxes = np.stack(
-        [
-            np.where(vmask, xs, big).min(axis=1),
-            np.where(vmask, xs, -big).max(axis=1),
-            np.where(vmask, ys, big).min(axis=1),
-            np.where(vmask, ys, -big).max(axis=1),
-        ],
-        axis=-1,
-    ).astype(np.float32)  # (n_blocks, M, 4)
 
     return BSSIndex(
         metric_name=metric_name,
@@ -364,6 +422,8 @@ def build_bss(
         deltas=deltas,
         boxes=boxes,
         block=block,
+        seed=seed,
+        next_id=n,
         mesh=mesh,
     )
 
@@ -470,6 +530,7 @@ def bss_query(
         "per_query_dists": n_pivots + exact,
         "block_exclusion_rate": float(1.0 - alive.mean()),
         "n_blocks": int(index.n_blocks),
+        "generation": int(index.generation),
     }
     return results, stats
 
@@ -836,6 +897,7 @@ def _batched_stats(index: BSSIndex, alive: np.ndarray, tile_mask: np.ndarray) ->
             float(1.0 - tile_mask.mean()) if tile_mask.size else 1.0
         ),
         "n_blocks": int(index.n_blocks),
+        "generation": int(index.generation),
         # per-mechanism attribution (repro.obs.schema): every block BSS
         # excludes is excluded by the planar four-point bound — the Hilbert
         # mechanism — read off the engine's functional `alive` output
@@ -863,13 +925,19 @@ def bss_query_batched(
     queries: np.ndarray,
     t,
     *,
-    bq: int = _DEFAULT_BQ,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    bq: int | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    realisation: str = "adaptive",
-    precision: str = "fp32",
+    realisation: str | None = None,
+    precision: str | None = None,
 ) -> tuple[list[list[int]], dict]:
     """Exact range search through the fused jitted engine.
+
+    Engine options travel as one ``opts=EngineOpts(...)`` record
+    (``repro.core.backends``); the per-knob kwargs are the legacy spelling,
+    kept working through :func:`resolve_engine_opts` (they warn under
+    ``REPRO_STRICT_API=1``).
 
     ``precision="bf16"`` streams the bfloat16 corpus mirror through the
     exact phase (half the corpus HBM traffic; fp32 accumulation unchanged)
@@ -911,20 +979,19 @@ def bss_query_batched(
     A mesh-built index (``build_bss(mesh=...)``) serves through the sharded
     engine — one shard-local fused pass per device, hit bitmasks
     concatenated back in corpus order; results and stats are identical."""
+    opts = resolve_engine_opts(
+        opts, bq=bq, backend=backend, interpret=interpret,
+        realisation=realisation, precision=precision,
+    )
     if index.mesh is not None:
         from repro.parallel.shard_index import sharded_query_batched
 
-        return sharded_query_batched(
-            index.sharded(), queries, t, bq=bq, backend=backend,
-            interpret=interpret, precision=precision,
-        )
-    if realisation not in ("adaptive", "dense"):
-        raise ValueError(
-            f"realisation must be adaptive|dense, got {realisation!r}"
-        )
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
-    backend = _resolve_backend(backend)
+        return sharded_query_batched(index.sharded(), queries, t, opts=opts)
+    bq = opts.bq if opts.bq is not None else _DEFAULT_BQ
+    interpret = opts.interpret
+    realisation = opts.realisation
+    precision = opts.precision
+    backend = _resolve_backend(opts.backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     nq = queries.shape[0]
@@ -1346,6 +1413,7 @@ def _knn_empty_stats(index: BSSIndex, nq: int, precision: str,
         "exact_dists_per_query": 0.0, "dists_per_query": 0.0,
         "per_query_dists": np.zeros(nq, np.int64),
         "tiles_computed": 0, "n_blocks": int(index.n_blocks),
+        "generation": int(index.generation),
         "precision": precision,
         "excluded": {"hilbert": np.zeros(nq, np.int64)},
     }
@@ -1362,14 +1430,20 @@ def bss_knn_batched(
     r0: float | None = None,
     growth: float = 2.0,
     max_rounds: int = 8,
-    bq: int = _DEFAULT_BQ,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    bq: int | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    realisation: str = "adaptive",
-    precision: str = "fp32",
+    realisation: str | None = None,
+    precision: str | None = None,
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Exact batched kNN: the range-search reduction run as jitted
     radius-deepening rounds over all queries at once.
+
+    Engine options travel as ``opts=EngineOpts(...)`` exactly as in
+    ``bss_query_batched`` (legacy per-knob kwargs shimmed the same way);
+    ``r0`` / ``growth`` / ``max_rounds`` are the radius SCHEDULE — kNN
+    semantics, not engine plumbing — and stay explicit kwargs.
 
     ``precision="bf16"`` runs every round's scan over the bfloat16 corpus
     mirror and re-checks the per-round radius band
@@ -1421,21 +1495,22 @@ def bss_knn_batched(
     engine: per-shard rounds merged by all-gather + global top-k under the
     same radius schedule — results and distance counts are identical.
     """
+    opts = resolve_engine_opts(
+        opts, bq=bq, backend=backend, interpret=interpret,
+        realisation=realisation, precision=precision,
+    )
     if index.mesh is not None:
         from repro.parallel.shard_index import sharded_knn_batched
 
         return sharded_knn_batched(
             index.sharded(), queries, k, r0=r0, growth=growth,
-            max_rounds=max_rounds, bq=bq, backend=backend,
-            interpret=interpret, precision=precision,
+            max_rounds=max_rounds, opts=opts,
         )
-    if realisation not in ("adaptive", "dense"):
-        raise ValueError(
-            f"realisation must be adaptive|dense, got {realisation!r}"
-        )
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
-    backend = _resolve_backend(backend)
+    bq = opts.bq if opts.bq is not None else _DEFAULT_BQ
+    interpret = opts.interpret
+    realisation = opts.realisation
+    precision = opts.precision
+    backend = _resolve_backend(opts.backend)
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
     nq = queries.shape[0]
@@ -1606,6 +1681,7 @@ def bss_knn_batched(
         "per_query_dists": n_pivots + total_exact,
         "tiles_computed": tiles_total,
         "n_blocks": int(index.n_blocks),
+        "generation": int(index.generation),
         "precision": precision,
         # rounds x blocks the Hilbert bound pruned from the exact phase,
         # accumulated per query over its unfinished rounds only

@@ -55,7 +55,12 @@ from repro.core import exclusion, projection
 from repro.core.distances import get_metric
 from repro.core.flat_index import _bf16_stats
 from repro.core.exclusion import HILBERT, HYPERBOLIC
-from repro.core.backends import resolve_backend, tile_survival
+from repro.core.backends import (
+    EngineOpts,
+    resolve_backend,
+    resolve_engine_opts,
+    tile_survival,
+)
 from repro.forest.encode import (
     EncodedForest,
     EncodedMonotone,
@@ -295,11 +300,18 @@ def forest_range_search(
     t: float,
     mechanism: str = HILBERT,
     *,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    precision: str = "fp32",
+    precision: str | None = None,
 ) -> tuple[list[list[int]], dict]:
     """Batched exact range search over an encoded partition tree.
+
+    Engine options travel as ``opts=EngineOpts(...)`` (legacy per-knob
+    kwargs shimmed via ``resolve_engine_opts``); the walker tiles by the
+    tree's own level/leaf shapes and has no adaptive split, so ``opts.bq``
+    and ``opts.realisation`` are ignored — only backend / interpret /
+    precision apply.
 
     Returns (per-query hit lists of original dataset indices, stats).
     ``stats["per_query_dists"]`` is the paper's figure of merit — identical
@@ -312,9 +324,12 @@ def forest_range_search(
     the bf16 stats keys (see ``bss_query_batched``)."""
     if mechanism not in (HILBERT, HYPERBOLIC):
         raise ValueError(mechanism)
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"unknown precision: {precision!r}")
-    backend = resolve_backend(backend)
+    opts = resolve_engine_opts(
+        opts, backend=backend, interpret=interpret, precision=precision,
+    )
+    interpret = opts.interpret
+    precision = opts.precision
+    backend = resolve_backend(opts.backend)
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:
@@ -500,23 +515,27 @@ def monotone_range_search(
     t: float,
     mechanism: str = HILBERT,
     *,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    precision: str = "fp32",
+    precision: str | None = None,
 ) -> tuple[list[list[int]], dict]:
     """Batched exact range search over an encoded monotone tree; counterpart
     of ``lrt.range_search_monotone`` with the same mechanism restriction
-    (Hyperbolic is only sound for the 'closer' split).  ``precision`` as in
-    ``forest_range_search``."""
+    (Hyperbolic is only sound for the 'closer' split).  ``opts`` /
+    ``precision`` as in ``forest_range_search``."""
     if mechanism == HYPERBOLIC and forest.partition != "closer":
         raise ValueError(
             "hyperbolic exclusion is only sound for the 'closer' split"
         )
     if mechanism not in (HILBERT, HYPERBOLIC):
         raise ValueError(mechanism)
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"unknown precision: {precision!r}")
-    backend = resolve_backend(backend)
+    opts = resolve_engine_opts(
+        opts, backend=backend, interpret=interpret, precision=precision,
+    )
+    interpret = opts.interpret
+    precision = opts.precision
+    backend = resolve_backend(opts.backend)
     queries = np.asarray(queries, np.float32)
     nq = queries.shape[0]
     if nq == 0:

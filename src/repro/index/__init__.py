@@ -1,0 +1,18 @@
+"""Living-corpus index maintenance: functional append / delete / compact
+over a built :class:`~repro.core.flat_index.BSSIndex` (see ``maintain``)."""
+
+from repro.index.maintain import (
+    MutationStats,
+    append,
+    compact,
+    delete,
+    maybe_compact,
+)
+
+__all__ = [
+    "MutationStats",
+    "append",
+    "compact",
+    "delete",
+    "maybe_compact",
+]

@@ -22,7 +22,7 @@ import numpy as np
 from repro.core.backends import jit_cache_size
 from repro.obs.registry import MetricsRegistry
 
-__all__ = ["fold_engine_stats", "poll_compile"]
+__all__ = ["fold_engine_stats", "fold_mutation", "poll_compile"]
 
 
 def fold_engine_stats(reg: MetricsRegistry, stats: dict) -> None:
@@ -84,6 +84,34 @@ def fold_engine_stats(reg: MetricsRegistry, stats: dict) -> None:
         reg.histogram("engine/knn_rounds", **lbl).observe(
             int(stats["rounds"])
         )
+
+
+def fold_mutation(reg: MetricsRegistry, mstats,
+                  seconds: float | None = None) -> None:
+    """Fold one living-corpus mutation (a
+    :class:`~repro.index.maintain.MutationStats`) into ``reg``.
+
+    Gauges track the index's CURRENT shape (``index/generation``,
+    ``index/tombstone_frac``, ``index/n_blocks`` — last write wins, so the
+    newest mutation's view is the live one); counters accumulate mutation
+    traffic per op; ``seconds`` (the host wall time of the mutation,
+    including any device-mirror splice) lands in ``index/mutation_s{op=}``.
+    """
+    lbl = dict(op=str(mstats.op))
+    reg.counter("index/mutations", **lbl).inc()
+    reg.counter("index/mutated_rows", **lbl).inc(int(mstats.rows))
+    reg.counter("index/table_dists", **lbl).inc(int(mstats.table_dists))
+    reg.gauge("index/generation").set(int(mstats.generation))
+    reg.gauge("index/tombstone_frac").set(float(mstats.tombstone_frac))
+    reg.gauge("index/n_blocks").set(int(mstats.n_blocks))
+    if mstats.op == "append":
+        reg.counter("index/new_blocks").inc(int(mstats.new_blocks))
+        if mstats.sharded_in_place:
+            reg.counter("index/sharded_in_place").inc()
+    if mstats.op == "compact" and mstats.refreshed_pivots:
+        reg.counter("index/pivot_refreshes").inc()
+    if seconds is not None:
+        reg.histogram("index/mutation_s", **lbl).observe(float(seconds))
 
 
 def poll_compile(reg: MetricsRegistry, watched: dict,

@@ -53,7 +53,12 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.backends import resolve_backend, tile_survival
+from repro.core.backends import (
+    EngineOpts,
+    resolve_backend,
+    resolve_engine_opts,
+    tile_survival,
+)
 from repro.core.flat_index import (
     _DEFAULT_BQ,
     _batched_stats,
@@ -386,6 +391,107 @@ class ShardedBSSIndex:
         return self._fns[key]
 
 
+    # --------------------------------------------------- living-corpus hooks
+
+    def _clone_for(self, new_index: BSSIndex) -> "ShardedBSSIndex":
+        """Shallow clone bound to a mutated index.  The jitted shard_map
+        cache (``_fns``) is SHARED — its closures capture only mesh
+        geometry and static knobs, and take the device arrays as call
+        arguments, so a mutation that preserves array shapes keeps serving
+        with zero recompiles."""
+        clone = object.__new__(ShardedBSSIndex)
+        clone.__dict__.update(self.__dict__)
+        clone.index = new_index
+        return clone
+
+    def _spliced(self, arr: jnp.ndarray, tail: np.ndarray, start: int,
+                 dtype) -> jnp.ndarray:
+        """Device-side in-place-style update of a sharded array (a fresh
+        buffer, but updated ON the devices) with the output pinned to the
+        array's own NamedSharding — the splice never gathers the corpus to
+        one device and never re-lands the unchanged blocks."""
+        fn = jax.jit(
+            lambda a, b: jax.lax.dynamic_update_slice_in_dim(
+                a, b, start, 0
+            ),
+            out_shardings=arr.sharding,
+        )
+        return fn(arr, jnp.asarray(tail, dtype))
+
+    def extended(
+        self,
+        new_index: BSSIndex,
+        tail_data: np.ndarray,
+        tail_valid: np.ndarray,
+        tail_boxes: np.ndarray,
+        tail_perm: np.ndarray,
+    ) -> "ShardedBSSIndex | None":
+        """Consume empty PADDING blocks for an append's fresh blocks.
+
+        The padded layout parks its empty blocks at the absolute end of
+        the block axis — on the least-loaded shard(s), since the partition
+        is contiguous-chunk.  When the new blocks fit in that free space
+        they are spliced into those slots device-side: no array changes
+        shape, the contiguous partition (and ``rows_per_shard``) is
+        untouched, and the shared ``_fns`` cache keeps every compiled
+        engine hot.  Returns ``None`` when they do NOT fit — the caller
+        falls back to a lazy full re-layout (the block count must grow,
+        which moves every chunk boundary)."""
+        nb_new = tail_boxes.shape[0]
+        free = self.n_blocks_pad - self.index.n_blocks
+        if nb_new > free:
+            return None
+        block = self.index.block
+        start_blk = self.index.n_blocks
+        start_row = start_blk * block
+        nrows = nb_new * block
+        clone = self._clone_for(new_index)
+        perm = self.perm.copy()
+        perm[start_row : start_row + nrows] = tail_perm
+        clone.perm = perm
+        host = self._host_data.copy()
+        host[start_row : start_row + nrows] = tail_data
+        clone._host_data = host
+        clone.dev = BSSDeviceArrays(
+            data=self._spliced(
+                self.dev.data, tail_data, start_row, jnp.float32
+            ),
+            pivots=self.dev.pivots,
+            pairs=self.dev.pairs,
+            deltas=self.dev.deltas,
+            boxes=self._spliced(
+                self.dev.boxes, tail_boxes, start_blk, jnp.float32
+            ),
+            valid=self._spliced(
+                self.dev.valid, tail_valid, start_row, jnp.bool_
+            ),
+        )
+        if self._data16 is not None:
+            clone._data16 = self._spliced(
+                self._data16, tail_data, start_row, jnp.bfloat16
+            )
+        return clone
+
+    def with_tombstones(
+        self, new_index: BSSIndex, positions: np.ndarray
+    ) -> "ShardedBSSIndex":
+        """Clear the valid bits of deleted slot positions on-device (data,
+        boxes and the bf16 mirror are untouched — the engines mask by
+        validity) and mirror the -1 perm sentinel on the host side."""
+        clone = self._clone_for(new_index)
+        perm = self.perm.copy()
+        perm[positions] = -1
+        clone.perm = perm
+        fn = jax.jit(
+            lambda v, p: v.at[p].set(False),
+            out_shardings=self.dev.valid.sharding,
+        )
+        clone.dev = self.dev._replace(
+            valid=fn(self.dev.valid, jnp.asarray(positions))
+        )
+        return clone
+
+
 def shard_bss(index: BSSIndex, mesh: Mesh) -> ShardedBSSIndex:
     """Partition a built index's blocks over the mesh (see class docs)."""
     return ShardedBSSIndex(index, mesh)
@@ -401,12 +507,18 @@ def sharded_query_batched(
     queries: np.ndarray,
     t,
     *,
-    bq: int = _DEFAULT_BQ,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    bq: int | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    precision: str = "fp32",
+    precision: str | None = None,
 ) -> tuple[list[list[int]], dict]:
     """Exact range search, one fused shard-local pass per device.
+
+    Engine options travel as ``opts=EngineOpts(...)`` (legacy per-knob
+    kwargs shimmed via ``resolve_engine_opts``); ``opts.realisation`` is
+    ignored — the shard-local body is always the dense masked pass, whose
+    fixed shapes are what keep per-device compiles bounded.
 
     ``t`` is a scalar threshold or a (Q,) vector of per-query radii (the
     serving front's mixed-threshold micro-batches; a negative radius —
@@ -419,9 +531,14 @@ def sharded_query_batched(
     dense path's.  ``precision="bf16"`` runs the shard-local bf16 scan with
     fp32 boundary re-check (``_range_bf16_fn``) — same results, same
     counts, with the re-check telemetry added to stats."""
-    backend = resolve_backend(backend)
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
+    opts = resolve_engine_opts(
+        opts, bq=bq, backend=backend, interpret=interpret,
+        precision=precision,
+    )
+    bq = opts.bq if opts.bq is not None else _DEFAULT_BQ
+    interpret = opts.interpret
+    precision = opts.precision
+    backend = resolve_backend(opts.backend)
     index = sidx.index
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -490,12 +607,18 @@ def sharded_knn_batched(
     r0: float | None = None,
     growth: float = 2.0,
     max_rounds: int = 8,
-    bq: int = _DEFAULT_BQ,
-    backend: str = "auto",
+    opts: EngineOpts | None = None,
+    bq: int | None = None,
+    backend: str | None = None,
     interpret: bool | None = None,
-    precision: str = "fp32",
+    precision: str | None = None,
 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Exact batched kNN over the sharded index.
+
+    Engine options travel as ``opts=EngineOpts(...)`` (legacy kwargs
+    shimmed; ``opts.realisation`` ignored — rounds are dense-pinned, see
+    ``sharded_query_batched``); ``r0`` / ``growth`` / ``max_rounds`` are
+    the radius schedule and stay explicit.
 
     ``precision="bf16"`` swaps each round for the bf16-scan +
     global-band + fp32-re-check round (``_knn_round_bf16_fn``); candidates,
@@ -512,9 +635,14 @@ def sharded_knn_batched(
     ``top_k`` (see module docstring for the tie-break argument); the
     shrinking radius is driven by the MERGED kth-nearest-so-far, keeping
     per-shard exclusion globally sound."""
-    backend = resolve_backend(backend)
-    if precision not in ("fp32", "bf16"):
-        raise ValueError(f"precision must be fp32|bf16, got {precision!r}")
+    opts = resolve_engine_opts(
+        opts, bq=bq, backend=backend, interpret=interpret,
+        precision=precision,
+    )
+    bq = opts.bq if opts.bq is not None else _DEFAULT_BQ
+    interpret = opts.interpret
+    precision = opts.precision
+    backend = resolve_backend(opts.backend)
     index = sidx.index
     metric_eng = _engine_metric(index.metric_name)
     queries = _engine_queries(index.metric_name, np.asarray(queries, np.float32))
@@ -636,6 +764,7 @@ def sharded_knn_batched(
         "tiles_computed": tiles_total,
         "n_blocks": int(n_blocks),
         "n_shards": sidx.n_shards,
+        "generation": int(index.generation),
         "precision": precision,
         "excluded": {"hilbert": excl_pq},
     }

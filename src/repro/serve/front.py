@@ -56,6 +56,27 @@ cache key, and the re-check volume rides the telemetry (``bf16_rows``,
 waste, engine time, shed/cache counters.  It is total: an empty telemetry
 window (fresh front, no completions yet) yields zeros, never a raise.
 
+Living corpus: a BSS front serves a MUTABLE corpus through the functional
+maintenance ops (``repro.index.maintain``).  ``front.append(rows)`` /
+``front.delete(ids)`` / ``front.compact()`` build a NEW index snapshot and
+swap ``self.index`` between micro-batches — ``_dispatch`` captures the
+index reference once per batch, so queries in flight finish on the old
+mirror (no torn reads; the swap is a single reference assignment).  Every
+mutation bumps the index ``generation``, which is a typed field of the
+exact-hit cache key — entries from older generations simply stop matching
+(invalidation by key, no flush) — and rides every ``ServeResult``.  The
+mutation itself is folded into the metrics registry
+(``index/generation`` / ``index/tombstone_frac`` gauges, per-op
+``index/mutation_s`` latency; see ``repro.obs.fold.fold_mutation``).
+
+Engine knobs ride one frozen :class:`~repro.core.backends.EngineOpts`
+(``opts=``); the per-request ``precision`` is overlaid per dispatch via
+``dataclasses.replace``.  The legacy ``backend=`` / ``interpret=`` /
+``realisation=`` kwargs still work (deprecation warning under
+``REPRO_STRICT_API=1``); the front's realisation DEFAULT stays "dense"
+(bucket-ladder recompile contract) unless an explicit ``opts=`` or
+``realisation=`` says otherwise.
+
 Host-side by design (and recorded as such in the ROADMAP): the queue, the
 driver thread, the cache and the demux all run in numpy/threading; only
 the engine call inside ``_dispatch`` touches jax.
@@ -72,7 +93,12 @@ from concurrent.futures import Future
 import numpy as np
 
 from repro.core import flat_index
-from repro.core.backends import DEFAULT_BUCKETS, bucket_for
+from repro.core.backends import (
+    DEFAULT_BUCKETS,
+    EngineOpts,
+    bucket_for,
+    resolve_engine_opts,
+)
 from repro.core.exclusion import HILBERT
 from repro.forest import (
     EncodedForest,
@@ -81,7 +107,8 @@ from repro.forest import (
     monotone_range_search,
 )
 from repro.forest import walk as forest_walk
-from repro.obs.fold import fold_engine_stats, poll_compile
+from repro.index import maintain as index_maintain
+from repro.obs.fold import fold_engine_stats, fold_mutation, poll_compile
 from repro.obs.registry import MetricsRegistry
 from repro.obs.spans import Span
 from repro.serve.queue import (
@@ -110,6 +137,7 @@ class ServeResult:
     batch_size: int = 0                  # real requests in the batch
     padded_to: int = 0                   # bucket the batch dispatched at
     cache_hit: bool = False
+    generation: int = 0                  # index snapshot this was served on
     trace_id: str = ""                   # obs trace id (front.explain(...))
     spans: dict | None = None            # per-stage durations (obs spans)
 
@@ -130,6 +158,7 @@ def _cache_key(
     kind: str,
     engine: str,
     precision: str,
+    generation: int,
     t: float | None,
     k: int | None,
     r0: float | None,
@@ -150,9 +179,14 @@ def _cache_key(
     * total — every dispatch parameter of BOTH kinds appears in its fixed
       slot (None where the kind doesn't use it), so a stray parameter of
       the other kind can neither split nor merge entries.
+
+    ``generation`` (v3) keys the entry to ONE index snapshot: a mutation
+    bumps the live generation, so every pre-mutation entry stops matching
+    — the cache needs no flush hook, stale results are unreachable by
+    construction (generations are monotonic, an old value never returns).
     """
     head = (
-        "v2", kind, engine, precision,
+        "v3", kind, engine, precision, int(generation),
         None if t is None else float(t),
         None if k is None else int(k),
         None if r0 is None else float(r0),
@@ -215,9 +249,10 @@ class ServingFront:
         max_queue: int = 1024,
         admission: str = "block",
         cache_size: int = 0,
-        backend: str = "auto",
+        opts: EngineOpts | None = None,
+        backend: str | None = None,
         interpret: bool | None = None,
-        realisation: str = "dense",
+        realisation: str | None = None,
         mechanism: str = HILBERT,
         prep=None,
         start: bool = True,
@@ -241,18 +276,30 @@ class ServingFront:
             raise ValueError(
                 f"admission must be block|shed, got {admission!r}"
             )
+        eopts = resolve_engine_opts(
+            opts, backend=backend, interpret=interpret,
+            realisation=realisation,
+        )
+        if opts is None and realisation is None:
+            # the front's realisation DEFAULT is "dense", not the engine's
+            # "adaptive": the sparse path's data-dependent padding class
+            # defeats the bucket-ladder recompile contract (see class doc)
+            eopts = dataclasses.replace(eopts, realisation="dense")
         self.index = index
         self.buckets = tuple(int(b) for b in buckets)
         self.max_delay_s = float(max_delay_s)
         self.admission = admission
-        self.backend = backend
-        self.interpret = interpret
-        self.realisation = realisation
+        self.opts = eopts
+        # legacy attribute views (older callers/tests read these)
+        self.backend = eopts.backend
+        self.interpret = eopts.interpret
+        self.realisation = eopts.realisation
         self.mechanism = mechanism
         self.prep = prep
         self._queue = BoundedRequestQueue(max_queue)
         self._cache = _LRU(cache_size) if cache_size > 0 else None
         self._lock = threading.Lock()  # telemetry + cache
+        self._mutate_lock = threading.Lock()  # serialises index mutations
         # telemetry: scalar tallies + a bounded window for percentiles
         self._n = dict(
             submitted=0, completed=0, shed=0, cache_hits=0, errors=0,
@@ -295,6 +342,15 @@ class ServingFront:
             self._metrics.gauge("compile/ladder_buckets").set(
                 len(self.buckets)
             )
+            if self._engine == "bss":
+                # the living-corpus gauges exist from birth (a fresh front
+                # reports its snapshot, not an absent series)
+                self._metrics.gauge("index/generation").set(
+                    int(index.generation)
+                )
+                self._metrics.gauge("index/tombstone_frac").set(
+                    float(index.tombstone_frac)
+                )
         self._thread: threading.Thread | None = None
         if start:
             self.start()
@@ -411,8 +467,14 @@ class ServingFront:
             # omits t (mixed-threshold batching), so t joins the key here;
             # a stray parameter of the OTHER kind can neither split nor
             # merge logically identical requests
+            # generation is read HERE, at admission: a hit must reflect the
+            # index the caller can observe right now.  If a mutation lands
+            # between admission and dispatch, the computed result is stored
+            # under this (now unreachable) key — generations are monotonic,
+            # so a mislabelled entry can never be served, only evicted.
             key = _cache_key(
                 kind, self._engine, precision,
+                int(getattr(self.index, "generation", 0)),
                 t if kind == "range" else None,
                 k if kind == "knn" else None,
                 (None if r0 is None else float(r0)) if kind == "knn" else None,
@@ -500,6 +562,12 @@ class ServingFront:
     def _dispatch(self, group: list[Request]) -> None:
         """One engine call for one compatible micro-batch: pad to the
         bucket, run the fused path, demux rows to futures."""
+        # ONE index snapshot per batch, captured before any engine work: a
+        # concurrent mutation swaps self.index between batches, and this
+        # whole batch finishes on whichever snapshot it started with — no
+        # torn reads, and every row's ServeResult.generation names it
+        index = self.index
+        generation = int(getattr(index, "generation", 0))
         # clients may have cancelled queued futures (the standard timeout
         # move); drop them before spending engine time
         group = [r for r in group if not r.future.cancelled()]
@@ -525,33 +593,31 @@ class ServingFront:
         for r in group:
             if r.span is not None:
                 r.span.mark("dispatch", t_wait)
+        # one EngineOpts per dispatch: the front's base knobs with this
+        # group's precision overlaid (precisions never share a batch)
+        eng_opts = dataclasses.replace(self.opts, precision=head.precision)
         with self._profiler():
             if head.kind == "range" and self._engine == "bss":
                 t_vec = np.array(
                     [r.t for r in group] + [-1.0] * pad, np.float32
                 )
                 hits, stats = flat_index.bss_query_batched(
-                    self.index, qs, t_vec, backend=self.backend,
-                    interpret=self.interpret, realisation=self.realisation,
-                    precision=head.precision,
+                    index, qs, t_vec, opts=eng_opts,
                 )
             elif head.kind == "range":  # forest: scalar-t walker
                 search = (
                     monotone_range_search
-                    if isinstance(self.index, EncodedMonotone)
+                    if isinstance(index, EncodedMonotone)
                     else forest_range_search
                 )
                 hits, stats = search(
-                    self.index, qs, head.t, self.mechanism,
-                    backend=self.backend, interpret=self.interpret,
-                    precision=head.precision,
+                    index, qs, head.t, self.mechanism, opts=eng_opts,
                 )
             else:  # knn
                 _, k, r0, max_rounds, _ = head.group
                 idx, dist, stats = flat_index.bss_knn_batched(
-                    self.index, qs, k, r0=r0, max_rounds=max_rounds,
-                    backend=self.backend, interpret=self.interpret,
-                    realisation=self.realisation, precision=head.precision,
+                    index, qs, k, r0=r0, max_rounds=max_rounds,
+                    opts=eng_opts,
                 )
         t_engine = now()
         engine_s = t_engine - t_wait
@@ -608,7 +674,7 @@ class ServingFront:
                 n_recheck=0 if recheck is None else int(recheck[i]),
                 queue_wait_s=wait,
                 engine_s=engine_s, batch_size=n, padded_to=bucket,
-                trace_id=r.trace_id, spans=durs,
+                generation=generation, trace_id=r.trace_id, spans=durs,
             )
             if r.kind == "range":
                 res.hits = hits[i]
@@ -629,6 +695,7 @@ class ServingFront:
                     "precision": head.precision,
                     "engine": stats.get("engine", self._engine),
                     "backend": stats.get("backend", self.backend),
+                    "generation": generation,
                     "batch_size": n,
                     "padded_to": bucket,
                     "n_dists": int(per_q[i]),
@@ -645,6 +712,85 @@ class ServingFront:
                 self._waits.append(wait)
                 if self._cache is not None and r.cache_key is not None:
                     self._cache.put(r.cache_key, res)
+
+    # ------------------------------------------------------------ mutations
+
+    def _mutate(self, fn):
+        """Run one functional mutation and swap the live index.
+
+        The mutation builds a NEW index (``repro.index.maintain`` never
+        touches the old one), then the swap is a single reference
+        assignment — atomic to the driver thread, so a micro-batch either
+        dispatches wholly on the old snapshot or wholly on the new one.
+        ``_mutate_lock`` only serialises concurrent MUTATORS (so two
+        appends compose instead of one clobbering the other); it is never
+        held by the query path.
+        """
+        if self._engine != "bss":
+            raise NotImplementedError(
+                "living-corpus mutations run on the BSS engine; the encoded "
+                "forest is immutable — rebuild it (incremental tree "
+                "maintenance is ROADMAP work)"
+            )
+        t0 = now()
+        with self._mutate_lock:
+            new_index, mstats = fn(self.index)
+            self.index = new_index
+        if mstats is not None and self.metrics_enabled:
+            fold_mutation(self._metrics, mstats, seconds=now() - t0)
+        return mstats
+
+    def append(self, rows):
+        """Add ``rows`` (raw metric space, same dim) to the served corpus:
+        fresh blocks against the existing pivot tables, generation bumped,
+        cache entries of the old generation orphaned by key.  Returns the
+        :class:`~repro.index.maintain.MutationStats`; queries admitted
+        after this call see the new rows."""
+        return self._mutate(lambda idx: index_maintain.append(idx, rows))
+
+    def delete(self, ids):
+        """Tombstone live corpus ids: they stop matching range/kNN from
+        the next micro-batch on (in-flight batches finish on the old
+        snapshot).  Returns the mutation's ``MutationStats``."""
+        return self._mutate(lambda idx: index_maintain.delete(idx, ids))
+
+    def compact(self, *, refresh_pivots: bool = True):
+        """Re-permute the live rows into dense blocks (drops tombstones;
+        ``refresh_pivots=True`` also rebuilds the pivot tables from the
+        surviving corpus — bit-identical to a fresh ``build_bss`` over the
+        live rows).  Returns the mutation's ``MutationStats``."""
+        return self._mutate(
+            lambda idx: index_maintain.compact(
+                idx, refresh_pivots=refresh_pivots
+            )
+        )
+
+    def maybe_compact(self, *, max_tombstone_frac: float = 0.25,
+                      max_block_growth: float = 2.0,
+                      refresh_pivots: bool | None = None):
+        """Compact only when degraded (tombstone fraction / block growth
+        thresholds — see :func:`repro.index.maintain.maybe_compact`).
+        With metrics on, the front feeds its own OBSERVED
+        ``engine/block_exclusion_rate`` gauge into the pivot-refresh
+        decision: measured exclusion decay is what triggers a pivot
+        refresh, exactly as the maintenance doc prescribes.  Returns the
+        ``MutationStats`` when a compaction ran, else None."""
+        rate = None
+        if self.metrics_enabled and refresh_pivots is None:
+            vals = [
+                s.value for s in self._metrics.series()
+                if s.kind == "gauge"
+                and s.name == "engine/block_exclusion_rate"
+            ]
+            if vals:
+                rate = min(vals)
+        return self._mutate(
+            lambda idx: index_maintain.maybe_compact(
+                idx, max_tombstone_frac=max_tombstone_frac,
+                max_block_growth=max_block_growth,
+                block_exclusion_rate=rate, refresh_pivots=refresh_pivots,
+            )
+        )
 
     # ------------------------------------------------------------ telemetry
 

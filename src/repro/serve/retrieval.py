@@ -31,6 +31,26 @@ tree walk — same exactness contract, tree-shaped pruning.  kNN serving
 stays a BSS capability (the forest walker is a range engine; its
 radius-deepening reduction is ROADMAP work), so ``top_k`` on a forest
 server raises.
+
+Unified search API
+------------------
+``server.search(queries, kind="range"|"knn", *, t=..., k=..., opts=...)``
+is THE entry point: both kinds, one typed :class:`SearchResult` (hits /
+indices / distances / engine stats / index generation), engine knobs as
+one frozen :class:`~repro.core.backends.EngineOpts`.  The older
+per-kind methods (``range_query`` / ``range_by_distance`` / ``top_k``)
+remain as thin delegates for compatibility.
+
+Living corpus
+-------------
+A BSS server mutates in place through the functional maintenance ops:
+``server.append(embeddings)`` / ``server.delete(ids)`` /
+``server.compact()`` swap ``self.index`` for the next snapshot (queries
+always see one consistent generation) and keep ``self.corpus`` — the
+scoring/oracle mirror — consistent: appends extend it with the SAME
+engine-space rows the index ingests, deletes mark a live mask that
+``top_k_oracle`` honours.  Mutations fold into ``server.metrics``
+(``index/generation``, ``index/tombstone_frac``, per-op latency).
 """
 
 from __future__ import annotations
@@ -40,15 +60,17 @@ import dataclasses
 import numpy as np
 
 from repro.core import flat_index, tree
+from repro.core.backends import EngineOpts, resolve_engine_opts
 from repro.core.exclusion import HILBERT
 from repro.core.npdist import pairwise_np
 from repro.forest import encode_tree, forest_range_search
-from repro.obs.fold import fold_engine_stats
+from repro.index import maintain as index_maintain
+from repro.obs.fold import fold_engine_stats, fold_mutation
 from repro.obs.registry import MetricsRegistry
 from repro.serve.queue import now
 
-__all__ = ["RetrievalServer", "score_to_distance", "distance_to_score",
-           "FOREST_KNN_ERROR"]
+__all__ = ["RetrievalServer", "SearchResult", "score_to_distance",
+           "distance_to_score", "FOREST_KNN_ERROR"]
 
 # The one message every forest-kNN refusal raises (RetrievalServer.top_k and
 # the async front's submit alike): point at the backend that CAN serve it
@@ -68,6 +90,21 @@ def score_to_distance(score: np.ndarray) -> np.ndarray:
 
 def distance_to_score(dist: np.ndarray) -> np.ndarray:
     return 1.0 - 0.5 * dist * dist
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """What :meth:`RetrievalServer.search` returns — one typed shape for
+    both kinds.  Range fills ``hits``; kNN fills ``indices``/``distances``;
+    both carry the engine's stats dict and the index generation the call
+    was served on (bumped by every mutation)."""
+
+    kind: str                            # "range" | "knn"
+    hits: list | None = None             # range: per-query corpus-id lists
+    indices: np.ndarray | None = None    # knn: (Q, k) ids, -1 padded
+    distances: np.ndarray | None = None  # knn: (Q, k) ascending
+    stats: dict | None = None            # the engine-call stats dict
+    generation: int = 0
 
 
 @dataclasses.dataclass
@@ -92,7 +129,8 @@ class RetrievalServer:
 
     def __init__(self, corpus_embeddings: np.ndarray, *, metric: str = "cosine",
                  n_pivots: int = 16, n_pairs: int = 24, block: int = 128,
-                 seed: int = 0, backend: str = "auto", index: str = "bss",
+                 seed: int = 0, opts: EngineOpts | None = None,
+                 backend: str | None = None, index: str = "bss",
                  forest_variant: str = "hpt_fft_log",
                  forest_mechanism: str = HILBERT, mesh=None):
         """``mesh`` (a ``jax.sharding.Mesh`` with a ``"data"`` axis) shards
@@ -115,7 +153,11 @@ class RetrievalServer:
             # own floor is reused so both normalisations agree bit-for-bit
             corpus = flat_index._engine_queries("cosine", corpus)
         self.corpus = corpus
-        self.backend = backend
+        # every live row of self.corpus; deletes flip entries False so the
+        # brute-force oracle stays aligned with the served index
+        self._live = np.ones(len(corpus), dtype=bool)
+        self.opts = resolve_engine_opts(opts, backend=backend)
+        self.backend = self.opts.backend  # legacy attribute view
         self.index_kind = index
         if index == "forest":
             # cosine rides the l2 geometry on the pre-normalised corpus,
@@ -145,15 +187,71 @@ class RetrievalServer:
     def _account(self, nq: int, engine_stats: dict, t0: float) -> None:
         self.stats.n_queries += nq
         self.stats.total_dists += engine_stats["dists_per_query"] * nq
-        self.stats.exhaustive_dists += nq * self.corpus.shape[0]
+        # the exhaustive comparator scans the LIVE corpus (tombstoned rows
+        # cost a brute-force scan nothing either)
+        self.stats.exhaustive_dists += nq * int(self._live.sum())
         self.stats.total_seconds += now() - t0
         fold_engine_stats(self.metrics, engine_stats)
         self.metrics.histogram("serve/call_s").observe(now() - t0)
 
+    def search(self, queries: np.ndarray, kind: str = "range", *,
+               t: float | None = None, k: int | None = None,
+               opts: EngineOpts | None = None,
+               r0: float | None = None,
+               max_rounds: int = 8) -> SearchResult:
+        """The unified entry point: both query kinds, one typed result.
+
+        ``kind="range"`` needs ``t`` (a METRIC distance — the cosine
+        specialisation's min-score maps through ``score_to_distance``, or
+        use the ``range_query`` delegate); ``kind="knn"`` needs a positive
+        ``k`` (``r0`` / ``max_rounds`` tune its radius schedule).  ``opts``
+        overrides the server's engine knobs for this call only.  The
+        result carries the engine stats dict and the index ``generation``
+        it was served on — after a mutation, results from the old snapshot
+        are distinguishable by that field alone."""
+        eng = self.opts if opts is None else resolve_engine_opts(opts)
+        q = self._prep(queries)
+        if kind == "range":
+            if t is None:
+                raise ValueError("range search needs t= (a metric distance)")
+            t0 = now()
+            if self.index_kind == "forest":
+                hits, s = forest_range_search(
+                    self.index, q, float(t), self.forest_mechanism, opts=eng,
+                )
+            else:
+                hits, s = flat_index.bss_query_batched(
+                    self.index, q, float(t), opts=eng,
+                )
+            self._account(len(q), s, t0)
+            return SearchResult(
+                kind="range", hits=hits, stats=s,
+                generation=int(s.get("generation", 0)),
+            )
+        if kind == "knn":
+            if self.index_kind == "forest":
+                raise NotImplementedError(FOREST_KNN_ERROR)
+            if k is None or int(k) <= 0:
+                raise ValueError(f"knn search needs a positive k, got {k}")
+            t0 = now()
+            idx, dists, s = flat_index.bss_knn_batched(
+                self.index, q, int(k), r0=r0, max_rounds=max_rounds,
+                opts=eng,
+            )
+            self._account(len(q), s, t0)
+            return SearchResult(
+                kind="knn", indices=idx, distances=dists, stats=s,
+                generation=int(s.get("generation", 0)),
+            )
+        raise ValueError(f"kind must be range|knn, got {kind!r}")
+
     def range_query(self, user_embeddings: np.ndarray, min_score: float):
         """All items with dot-score >= min_score — exact, one fused pass.
         Cosine (dot-product) serving only; other metrics threshold on
-        distance, use ``range_by_distance``."""
+        distance, use ``range_by_distance``.
+
+        Compatibility delegate: prefer
+        ``search(q, "range", t=score_to_distance(min_score))``."""
         if self.metric != "cosine":
             raise ValueError(
                 f"min-score retrieval is the cosine specialisation; the "
@@ -165,20 +263,11 @@ class RetrievalServer:
 
     def range_by_distance(self, user_embeddings: np.ndarray, t: float):
         """All items within metric distance t — exact, one fused pass
-        (BSS masked scan or jitted forest walk, per ``index=``)."""
-        q = self._prep(user_embeddings)
-        t0 = now()
-        if self.index_kind == "forest":
-            hits, s = forest_range_search(
-                self.index, q, float(t), self.forest_mechanism,
-                backend=self.backend,
-            )
-        else:
-            hits, s = flat_index.bss_query_batched(
-                self.index, q, float(t), backend=self.backend
-            )
-        self._account(len(q), s, t0)
-        return hits
+        (BSS masked scan or jitted forest walk, per ``index=``).
+
+        Compatibility delegate: prefer ``search(q, "range", t=t)``, which
+        also returns the engine stats and index generation."""
+        return self.search(user_embeddings, "range", t=t).hits
 
     def top_k(self, user_embeddings: np.ndarray, k: int,
               t0_guess: float | None = None, max_rounds: int = 8):
@@ -186,17 +275,84 @@ class RetrievalServer:
         is one jitted pass over ALL pending queries, each query's
         kth-nearest-so-far distance tightening its pruning radius (see
         ``bss_knn_batched``).  ``t0_guess`` optionally seeds the radius
-        (None = the engine's per-query scale-free estimate)."""
-        if self.index_kind == "forest":
-            raise NotImplementedError(FOREST_KNN_ERROR)
-        q = self._prep(user_embeddings)
-        t0 = now()
-        idx, dists, s = flat_index.bss_knn_batched(
-            self.index, q, k, r0=t0_guess, max_rounds=max_rounds,
-            backend=self.backend,
+        (None = the engine's per-query scale-free estimate).
+
+        Compatibility delegate: prefer ``search(q, "knn", k=k)``, whose
+        result also carries the per-query distances, the engine stats and
+        the index generation."""
+        res = self.search(
+            user_embeddings, "knn", k=k, r0=t0_guess, max_rounds=max_rounds,
         )
-        self._account(len(q), s, t0)
-        return [idx[i] for i in range(idx.shape[0])]
+        return [res.indices[i] for i in range(res.indices.shape[0])]
+
+    # ------------------------------------------------------------ mutations
+
+    def _mutate(self, fn):
+        if self.index_kind != "bss":
+            raise NotImplementedError(
+                "living-corpus mutations run on the BSS engine; the encoded "
+                "forest is immutable — rebuild the server (incremental tree "
+                "maintenance is ROADMAP work)"
+            )
+        t0 = now()
+        new_index, mstats = fn(self.index)
+        self.index = new_index
+        if mstats is not None:
+            fold_mutation(self.metrics, mstats, seconds=now() - t0)
+        return mstats
+
+    def append(self, embeddings: np.ndarray):
+        """Add rows to the served corpus (fresh blocks against the existing
+        pivot tables — no rebuild; see ``repro.index.maintain.append``).
+        ``self.corpus`` extends with the SAME engine-space rows the index
+        ingests (cosine pre-normalises exactly as ``__init__`` does), so
+        dot-product scoring and ``top_k_oracle`` stay aligned.  Returns the
+        mutation's ``MutationStats``."""
+        rows = np.array(embeddings, np.float32, copy=True)
+        if self.metric == "cosine":
+            rows = flat_index._engine_queries("cosine", rows)
+
+        def run(idx):
+            out = index_maintain.append(idx, rows)
+            # corpus mirror only grows once the mutation validated
+            self.corpus = np.concatenate([self.corpus, rows])
+            self._live = np.concatenate(
+                [self._live, np.ones(len(rows), dtype=bool)]
+            )
+            return out
+
+        return self._mutate(run)
+
+    def delete(self, ids):
+        """Tombstone corpus ids (they stop matching immediately; storage is
+        reclaimed by ``compact``).  ``top_k_oracle`` honours the same live
+        mask.  Returns the mutation's ``MutationStats``."""
+
+        def run(idx):
+            out = index_maintain.delete(idx, ids)
+            self._live[np.asarray(list(ids), dtype=np.int64)] = False
+            return out
+
+        return self._mutate(run)
+
+    def compact(self, *, refresh_pivots: bool = True):
+        """Re-permute live rows into dense blocks (drops tombstones;
+        ``refresh_pivots=True`` rebuilds pivot tables — bit-identical to a
+        fresh build over the live rows).  Corpus ids are stable across
+        compaction.  Returns the mutation's ``MutationStats``."""
+        return self._mutate(
+            lambda idx: index_maintain.compact(
+                idx, refresh_pivots=refresh_pivots
+            )
+        )
+
+    def maybe_compact(self, **kw):
+        """Compact only when degraded — thresholds and the pivot-refresh
+        policy pass through to ``repro.index.maintain.maybe_compact``.
+        Returns the ``MutationStats`` when a compaction ran, else None."""
+        return self._mutate(
+            lambda idx: index_maintain.maybe_compact(idx, **kw)
+        )
 
     def async_front(self, **kw):
         """An :class:`~repro.serve.front.ServingFront` over this server's
@@ -206,7 +362,10 @@ class RetrievalServer:
         space — use ``score_to_distance`` for the cosine/min-score
         specialisation).  Keyword args pass through to ``ServingFront``;
         the caller owns the front's lifecycle (``with server.async_front()
-        as front: ...``)."""
+        as front: ...``).  The front snapshots ``self.index`` at
+        construction: mutate a LIVE front through its own
+        ``append``/``delete``/``compact`` methods (server-side mutations
+        after this call don't reach an already-built front)."""
         from repro.serve.front import ServingFront
 
         if self.index_kind == "forest":
@@ -215,15 +374,23 @@ class RetrievalServer:
                 # the tree was built on the normalised corpus under the l2
                 # engine metric, so raw queries need the same mapping
                 kw.setdefault("prep", self._prep)
-        return ServingFront(self.index, backend=self.backend, **kw)
+        if not ({"opts", "backend", "interpret", "realisation"} & kw.keys()):
+            # inherit the server's engine knobs, but let the front keep its
+            # own "dense" realisation default (bucket-ladder contract);
+            # any explicit engine kwarg hands full control to the caller
+            kw["opts"] = dataclasses.replace(self.opts, realisation="dense")
+        return ServingFront(self.index, **kw)
 
     def top_k_oracle(self, user_embeddings: np.ndarray, k: int) -> list:
         """Brute-force reference (numpy float64) — for tests/benchmarks.
         Chunked over queries: the probability-space metrics broadcast a
         (Q, N, dim) float64 intermediate, which must stay bounded."""
         q = self._prep(user_embeddings)
+        dead = ~self._live
         out = []
         for lo in range(0, len(q), 32):
             d = pairwise_np(self.metric, q[lo:lo + 32], self.corpus)
+            # tombstoned rows are out of the corpus for the oracle too
+            d[:, dead] = np.inf
             out.extend(np.argsort(d[i])[:k] for i in range(d.shape[0]))
         return out

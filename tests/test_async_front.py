@@ -23,11 +23,12 @@ import pytest
 from multidevice_shim import run_simulated_mesh
 
 from repro.core import flat_index
-from repro.core.backends import jit_cache_size
+from repro.core.backends import EngineOpts, jit_cache_size
 from repro.core.npdist import pairwise_np
 from repro.serve.front import ServingFront, ShedError
 
 DIM = 16
+DENSE = EngineOpts(realisation="dense")
 
 
 def _space(metric: str, n: int, seed: int) -> np.ndarray:
@@ -89,13 +90,13 @@ def test_interleaved_stream_bit_identical(metric):
     k_rows = [i for i, (kind, _) in enumerate(reqs) if kind == "knn"]
     t_vec = np.array([reqs[i][1] for i in r_rows], np.float32)
     ref_hits, ref_stats = flat_index.bss_query_batched(
-        idx, q[r_rows], t_vec, realisation="dense"
+        idx, q[r_rows], t_vec, opts=DENSE
     )
     for j, i in enumerate(r_rows):
         assert res[i].hits == ref_hits[j], (metric, i)
         assert res[i].n_dists == ref_stats["per_query_dists"][j], (metric, i)
     ref_i, ref_d, ref_ks = flat_index.bss_knn_batched(
-        idx, q[k_rows], k, realisation="dense"
+        idx, q[k_rows], k, opts=DENSE
     )
     for j, i in enumerate(k_rows):
         assert (res[i].indices == ref_i[j]).all(), (metric, i)
@@ -106,7 +107,7 @@ def test_interleaved_stream_bit_identical(metric):
     # it inside any bucket)
     i = r_rows[0]
     h1, s1 = flat_index.bss_query_batched(
-        idx, q[i : i + 1], float(reqs[i][1]), realisation="dense"
+        idx, q[i : i + 1], float(reqs[i][1]), opts=DENSE
     )
     assert res[i].hits == h1[0]
     assert res[i].n_dists == s1["per_query_dists"][0]
@@ -125,7 +126,7 @@ def test_batch_sizes_one_and_beyond_largest_bucket():
         stats = front.stats()
     assert lone.batch_size == 1 and lone.padded_to == 4
     ref, ref_s = flat_index.bss_query_batched(
-        idx, q[:21], t, realisation="dense"
+        idx, q[:21], t, opts=DENSE
     )
     for i in range(21):
         assert res[i].hits == ref[i]
@@ -150,12 +151,12 @@ def test_padded_rows_provably_excluded_from_counts():
     t_vec[5:] = -1.0
     qpad = np.concatenate([q[:5], np.repeat(q[:1], 3, axis=0)])
     hits, stats = flat_index.bss_query_batched(
-        idx, qpad, t_vec, realisation="dense"
+        idx, qpad, t_vec, opts=DENSE
     )
     assert (stats["per_query_dists"][5:] == n_pivots).all()
     assert all(hits[i] == [] for i in range(5, 8))
     ref, ref_s = flat_index.bss_query_batched(
-        idx, q[:5], ts[1], realisation="dense"
+        idx, q[:5], ts[1], opts=DENSE
     )
     assert hits[:5] == ref
     assert (stats["per_query_dists"][:5] == ref_s["per_query_dists"]).all()
@@ -188,7 +189,7 @@ def test_compile_guard_jnp_backend():
     if any(v < 0 for v in before.values()):
         pytest.skip("this jax exposes no jit cache hook")
     with ServingFront(idx, buckets=(4, 8), max_delay_s=0.02,
-                      backend="jnp") as front:
+                      opts=EngineOpts(backend="jnp")) as front:
         _sweep_sizes(front, q, ts[1], 3, n_max=10)
     for name, fn in fns.items():
         grew = jit_cache_size(fn) - before[name]
@@ -209,7 +210,8 @@ def test_compile_guard_pallas_interpret():
     sizes = (1, 3, 4, 5, 8)
     results = {}
     with ServingFront(idx, buckets=(4, 8), max_delay_s=0.02,
-                      backend="pallas", interpret=True) as front:
+                      opts=EngineOpts(backend="pallas",
+                                      interpret=True)) as front:
         for n in sizes:
             results[n] = _drain(
                 [front.submit(qv, "range", t=t) for qv in q[:n]]
@@ -218,7 +220,8 @@ def test_compile_guard_pallas_interpret():
     assert jit_cache_size(flat_index._query_batched_jit) - before <= 2
     for n in sizes:
         ref, _ = flat_index.bss_query_batched(
-            idx, q[:n], t, backend="pallas", interpret=True
+            idx, q[:n], t,
+            opts=EngineOpts(backend="pallas", interpret=True),
         )
         assert [r.hits for r in results[n]] == ref, n
 
@@ -325,7 +328,7 @@ def test_cancelled_future_does_not_poison_batch():
     res = [futs[i].result(timeout=120) for i in range(6) if i not in (2, 4)]
     front.close()
     ref, _ = flat_index.bss_query_batched(
-        idx, q[:6], ts[1], realisation="dense"
+        idx, q[:6], ts[1], opts=DENSE
     )
     for r, i in zip(res, (0, 1, 3, 5)):
         assert r.hits == ref[i], i
@@ -468,11 +471,14 @@ def test_cache_key_injective_header():
     for kind, t, k in [("range", 1.0, None), ("range", 1, None),
                        ("knn", None, 3), ("knn", None, 5)]:
         for qq in (qa, qb):
-            seen.add(_cache_key(kind, "bss", "fp32", t, k, None,
+            seen.add(_cache_key(kind, "bss", "fp32", 0, t, k, None,
                                 8 if kind == "knn" else None, qq))
     assert len(seen) == 6  # t=1 and t=1.0 collapse; everything else distinct
-    assert _cache_key("range", "bss", "fp32", 1.0, None, None, None, qa) != \
-        _cache_key("range", "bss", "bf16", 1.0, None, None, None, qa)
+    assert _cache_key("range", "bss", "fp32", 0, 1.0, None, None, None, qa) \
+        != _cache_key("range", "bss", "bf16", 0, 1.0, None, None, None, qa)
+    # generation is a typed header slot: a mutation's bump splits the key
+    assert _cache_key("range", "bss", "fp32", 0, 1.0, None, None, None, qa) \
+        != _cache_key("range", "bss", "fp32", 1, 1.0, None, None, None, qa)
 
 
 def test_stats_total_on_empty_window():

@@ -15,12 +15,15 @@ exceeds ``bf16_margin`` — the guarantee that the band cannot falsely
 exclude a true hit.
 """
 
+import dataclasses
+
 import numpy as np
 import pytest
 from hypothesis_shim import given, settings, st
 from multidevice_shim import run_simulated_mesh
 
 from repro.core import flat_index
+from repro.core.backends import EngineOpts
 from repro.core.npdist import pairwise_np
 from repro.core.precision import bf16_margin, bf16_round_np
 
@@ -120,9 +123,11 @@ def spaces():
 @pytest.mark.parametrize("metric", SUPERMETRICS)
 def test_range_bit_identical(spaces, metric, backend, interpret, realisation):
     idx, q, t = spaces(metric)
-    kw = dict(backend=backend, interpret=interpret, realisation=realisation)
-    h32, s32 = flat_index.bss_query_batched(idx, q, t, **kw)
-    h16, s16 = flat_index.bss_query_batched(idx, q, t, precision="bf16", **kw)
+    o32 = EngineOpts(backend=backend, interpret=interpret,
+                     realisation=realisation)
+    o16 = dataclasses.replace(o32, precision="bf16")
+    h32, s32 = flat_index.bss_query_batched(idx, q, t, opts=o32)
+    h16, s16 = flat_index.bss_query_batched(idx, q, t, opts=o16)
     assert h16 == h32
     assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
     assert s32["precision"] == "fp32" and s16["precision"] == "bf16"
@@ -135,10 +140,11 @@ def test_range_bit_identical(spaces, metric, backend, interpret, realisation):
 @pytest.mark.parametrize("metric", SUPERMETRICS)
 def test_knn_bit_identical(spaces, metric, backend, interpret, realisation):
     idx, q, _ = spaces(metric)
-    kw = dict(backend=backend, interpret=interpret, realisation=realisation)
-    i32, d32, s32 = flat_index.bss_knn_batched(idx, q, 5, **kw)
-    i16, d16, s16 = flat_index.bss_knn_batched(idx, q, 5, precision="bf16",
-                                               **kw)
+    o32 = EngineOpts(backend=backend, interpret=interpret,
+                     realisation=realisation)
+    o16 = dataclasses.replace(o32, precision="bf16")
+    i32, d32, s32 = flat_index.bss_knn_batched(idx, q, 5, opts=o32)
+    i16, d16, s16 = flat_index.bss_knn_batched(idx, q, 5, opts=o16)
     assert np.array_equal(i16, i32)
     assert np.array_equal(d16, d32)
     assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
@@ -151,7 +157,8 @@ def test_range_bf16_matches_oracle(spaces):
     tests, but cheap to assert directly: bf16 hits == the float64 oracle."""
     idx, q, t = spaces("l2")
     oracle, _ = flat_index.bss_query(idx, q, t)
-    h16, _ = flat_index.bss_query_batched(idx, q, t, precision="bf16")
+    h16, _ = flat_index.bss_query_batched(
+        idx, q, t, opts=EngineOpts(precision="bf16"))
     assert h16 == oracle
 
 
@@ -165,8 +172,8 @@ def test_precision_validation(spaces):
 
 def test_empty_batch_carries_precision(spaces):
     idx, q, t = spaces("l2")
-    hits, stats = flat_index.bss_query_batched(idx, q[:0], t,
-                                               precision="bf16")
+    hits, stats = flat_index.bss_query_batched(
+        idx, q[:0], t, opts=EngineOpts(precision="bf16"))
     assert hits == [] and stats["precision"] == "bf16"
 
 
@@ -183,9 +190,10 @@ def test_forest_leaf_bit_identical(metric, backend, interpret):
     db, q = data[:440], data[440:452]
     t = _snap(pairwise_np(metric, q, db), 0.02)
     enc = encode_tree(tree.build_tree("hpt_fft_log", metric, db, seed=11))
-    kw = dict(backend=backend, interpret=interpret)
-    r32, s32 = forest_range_search(enc, q, t, **kw)
-    r16, s16 = forest_range_search(enc, q, t, precision="bf16", **kw)
+    o32 = EngineOpts(backend=backend, interpret=interpret)
+    o16 = dataclasses.replace(o32, precision="bf16")
+    r32, s32 = forest_range_search(enc, q, t, opts=o32)
+    r16, s16 = forest_range_search(enc, q, t, opts=o16)
     assert [sorted(a) for a in r32] == [sorted(b) for b in r16]
     assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
     assert s16["precision"] == "bf16" and s16["band_eps"] > 0.0
@@ -202,9 +210,10 @@ def test_monotone_leaf_bit_identical(backend, interpret):
     enc = encode_monotone(
         lrt.build_monotone_tree("closer", "far", "l2", db, seed=6)
     )
-    kw = dict(backend=backend, interpret=interpret)
-    r32, s32 = monotone_range_search(enc, q, t, **kw)
-    r16, s16 = monotone_range_search(enc, q, t, precision="bf16", **kw)
+    o32 = EngineOpts(backend=backend, interpret=interpret)
+    o16 = dataclasses.replace(o32, precision="bf16")
+    r32, s32 = monotone_range_search(enc, q, t, opts=o32)
+    r16, s16 = monotone_range_search(enc, q, t, opts=o16)
     assert [sorted(a) for a in r32] == [sorted(b) for b in r16]
     assert np.array_equal(s16["per_query_dists"], s32["per_query_dists"])
 
@@ -225,6 +234,7 @@ _SHARDED = """
     import numpy as np, jax
     from jax.sharding import Mesh
     from repro.core import flat_index
+    from repro.core.backends import EngineOpts
     from repro.core.npdist import pairwise_np
     from repro.parallel.shard_index import (
         ShardedBSSIndex, sharded_query_batched, sharded_knn_batched,
@@ -257,16 +267,18 @@ _SHARDED = """
         t = snap(pairwise_np(metric, q, db), 0.02)
         mesh = Mesh(np.array(devs[:4]), ("data",))
         sidx = ShardedBSSIndex(idx, mesh)
-        h32, s32 = sharded_query_batched(sidx, q, t, backend="jnp")
-        h16, s16 = sharded_query_batched(sidx, q, t, backend="jnp",
-                                         precision="bf16")
+        h32, s32 = sharded_query_batched(
+            sidx, q, t, opts=EngineOpts(backend="jnp"))
+        h16, s16 = sharded_query_batched(
+            sidx, q, t, opts=EngineOpts(backend="jnp", precision="bf16"))
         assert h16 == h32, metric
         assert np.array_equal(s16["per_query_dists"],
                               s32["per_query_dists"]), metric
         assert s16["precision"] == "bf16" and s16["band_eps"] > 0.0
-        i32, d32, k32 = sharded_knn_batched(sidx, q, k, backend="jnp")
-        i16, d16, k16 = sharded_knn_batched(sidx, q, k, backend="jnp",
-                                            precision="bf16")
+        i32, d32, k32 = sharded_knn_batched(
+            sidx, q, k, opts=EngineOpts(backend="jnp"))
+        i16, d16, k16 = sharded_knn_batched(
+            sidx, q, k, opts=EngineOpts(backend="jnp", precision="bf16"))
         assert np.array_equal(i16, i32) and np.array_equal(d16, d32), metric
         assert np.array_equal(k16["per_query_dists"],
                               k32["per_query_dists"]), metric

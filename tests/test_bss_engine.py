@@ -17,8 +17,12 @@ import pytest
 from hypothesis_shim import given, settings, st
 
 from repro.core import flat_index
+from repro.core.backends import EngineOpts
 from repro.core.distances import METRICS, get_metric
 from repro.core.npdist import DistanceCounter, pairwise_np
+
+_JNP = EngineOpts(backend="jnp")
+_PALLAS = EngineOpts(backend="pallas", interpret=True, bq=8)
 
 SUPERMETRICS = ["l2", "cosine", "jsd", "triangular"]
 # every four-point metric the registry serves, incl. a power transform
@@ -66,7 +70,7 @@ def test_range_matches_oracle(metric, n, dim, block, nq):
                                block=block, seed=1)
     t = safe_threshold(pairwise_np(metric, q, db), 0.02)
     oracle, so = flat_index.bss_query(idx, q, t)
-    batched, sb = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    batched, sb = flat_index.bss_query_batched(idx, q, t, opts=_JNP)
     assert batched == oracle  # same indices AND same per-query order
     # both paths prune identically (shared lower bound definition)
     assert sb["dists_per_query"] == pytest.approx(so["dists_per_query"])
@@ -82,9 +86,7 @@ def test_range_matches_oracle_pallas_interpret(metric):
                                block=128, seed=2)
     t = safe_threshold(pairwise_np(metric, q, db), 0.03)
     oracle, _ = flat_index.bss_query(idx, q, t)
-    batched, _ = flat_index.bss_query_batched(
-        idx, q, t, backend="pallas", interpret=True, bq=8
-    )
+    batched, _ = flat_index.bss_query_batched(idx, q, t, opts=_PALLAS)
     assert batched == oracle
 
 
@@ -98,7 +100,7 @@ def test_range_all_and_none_excluded(t, expect_all):
     idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=64,
                                seed=3)
     oracle, _ = flat_index.bss_query(idx, q, t)
-    batched, sb = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    batched, sb = flat_index.bss_query_batched(idx, q, t, opts=_JNP)
     assert batched == oracle
     if expect_all:
         assert all(len(r) == len(db) for r in batched)
@@ -126,9 +128,8 @@ def test_knn_matches_bruteforce(metric, n, dim, block, nq, k):
                                block=block, seed=4)
     truth = pairwise_np(metric, q, db)
     want_idx = np.argsort(truth, axis=1)[:, :k]
-    got_idx, got_d, stats = flat_index.bss_knn_batched(
-        idx, q, k, backend="jnp"
-    )
+    got_idx, got_d, stats = flat_index.bss_knn_batched(idx, q, k,
+                                                       opts=_JNP)
     for i in range(nq):
         assert set(got_idx[i].tolist()) == set(want_idx[i].tolist()), i
         np.testing.assert_allclose(  # ascending exact distances
@@ -147,10 +148,8 @@ def test_knn_pallas_interpret_matches_jnp(metric):
     q = _space(metric, 9, 8, seed=7)
     idx = flat_index.build_bss(metric, db, n_pivots=6, n_pairs=8, block=128,
                                seed=5)
-    i_jnp, d_jnp, _ = flat_index.bss_knn_batched(idx, q, 6, backend="jnp")
-    i_pal, d_pal, _ = flat_index.bss_knn_batched(
-        idx, q, 6, backend="pallas", interpret=True, bq=8
-    )
+    i_jnp, d_jnp, _ = flat_index.bss_knn_batched(idx, q, 6, opts=_JNP)
+    i_pal, d_pal, _ = flat_index.bss_knn_batched(idx, q, 6, opts=_PALLAS)
     np.testing.assert_array_equal(np.sort(i_jnp, 1), np.sort(i_pal, 1))
     np.testing.assert_allclose(d_jnp, d_pal, rtol=1e-5, atol=1e-6)
 
@@ -160,7 +159,7 @@ def test_knn_k_exceeding_corpus_pads():
     q = _space("l2", 3, 6, seed=9)
     idx = flat_index.build_bss("l2", db, n_pivots=4, n_pairs=4, block=32,
                                seed=6)
-    got_idx, got_d, _ = flat_index.bss_knn_batched(idx, q, 50, backend="jnp")
+    got_idx, got_d, _ = flat_index.bss_knn_batched(idx, q, 50, opts=_JNP)
     assert got_idx.shape == (3, 50)
     assert (got_idx[:, :40] >= 0).all() and (got_idx[:, 40:] == -1).all()
     assert np.isinf(got_d[:, 40:]).all()
@@ -180,7 +179,7 @@ def test_knn_fixed_r0_and_serving_path():
                                seed=7)
     truth = np.argsort(pairwise_np("l2", q, db), axis=1)[:, :5]
     for r0 in (1e-6, 0.3, 100.0):
-        got, _, _ = flat_index.bss_knn_batched(idx, q, 5, r0=r0, backend="jnp")
+        got, _, _ = flat_index.bss_knn_batched(idx, q, 5, r0=r0, opts=_JNP)
         for i in range(len(q)):
             assert set(got[i].tolist()) == set(truth[i].tolist()), (r0, i)
 
@@ -226,7 +225,7 @@ def test_batched_range_property(n, dim, seed):
                                block=32, seed=seed % 17)
     t = safe_threshold(pairwise_np("l2", q, db), 0.05)
     oracle, _ = flat_index.bss_query(idx, q, t)
-    batched, _ = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    batched, _ = flat_index.bss_query_batched(idx, q, t, opts=_JNP)
     assert batched == oracle
 
 
@@ -293,7 +292,7 @@ def test_exact_dists_accounting_excludes_padding(n):
 
     for results, stats in (
         flat_index.bss_query(idx, q, t),
-        flat_index.bss_query_batched(idx, q, t, backend="jnp"),
+        flat_index.bss_query_batched(idx, q, t, opts=_JNP),
     ):
         assert stats["exact_dists_per_query"] == pytest.approx(counter.mean)
         assert stats["dists_per_query"] == pytest.approx(
@@ -314,9 +313,7 @@ def test_knn_accounting_excludes_padding():
     q = _space("l2", 5, 8, seed=4)
     idx = flat_index.build_bss("l2", db, n_pivots=6, n_pairs=8, block=128,
                                seed=3)
-    _, _, stats = flat_index.bss_knn_batched(
-        idx, q, 3, r0=1e6, backend="jnp"
-    )
+    _, _, stats = flat_index.bss_knn_batched(idx, q, 3, r0=1e6, opts=_JNP)
     assert stats["rounds"] == 1
     assert stats["exact_dists_per_query"] == pytest.approx(200.0)
     assert stats["dists_per_query"] == pytest.approx(206.0)  # + 6 pivots
@@ -347,5 +344,5 @@ def test_duplicate_pivots_delta_zero_stays_sound():
     assert np.all(np.isfinite(lb)), "degenerate plane produced inf/nan bound"
     t = safe_threshold(d[np.isfinite(d)], 0.05)
     oracle, _ = flat_index.bss_query(idx, q, t)
-    batched, _ = flat_index.bss_query_batched(idx, q, t, backend="jnp")
+    batched, _ = flat_index.bss_query_batched(idx, q, t, opts=_JNP)
     assert batched == oracle

@@ -13,6 +13,7 @@ import numpy as np
 import pytest
 
 from repro.core import lrt, tree
+from repro.core.backends import EngineOpts
 from repro.core.exclusion import HILBERT, HYPERBOLIC
 from repro.data import metricsets
 from repro.forest import (
@@ -162,7 +163,8 @@ def test_forest_non_multiple_frontier_widths(space, tree_cache,
 def test_forest_empty_query_batch(space, tree_cache):
     db, q, t = space
     _, enc = tree_cache("hpt_fft_log")
-    res, stats = forest_range_search(enc, q[:0], t, HILBERT, backend="jnp")
+    res, stats = forest_range_search(enc, q[:0], t, HILBERT,
+                                     opts=EngineOpts(backend="jnp"))
     assert res == []
     assert stats["per_query_dists"].shape == (0,)
 
@@ -224,13 +226,13 @@ def test_forest_tiny_dataset_root_leaf():
     truth = tree.exhaustive_search("l2", db, q, t)
     tr = tree.build_tree("hpt_random_fixed", "l2", db, seed=1)
     res, stats = forest_range_search(encode_tree(tr), q, t, HILBERT,
-                                     backend="jnp")
+                                     opts=EngineOpts(backend="jnp"))
     assert _same_results(res, truth)
     _, counter = tree.range_search(tr, q, t, HILBERT)
     assert np.array_equal(stats["per_query_dists"], counter.per_query)
     mtr = lrt.build_monotone_tree("closer", "far", "l2", db, seed=1)
     mres, mstats = monotone_range_search(encode_monotone(mtr), q, t, HILBERT,
-                                         backend="jnp")
+                                         opts=EngineOpts(backend="jnp"))
     assert _same_results(mres, truth)
     _, mcounter = lrt.range_search_monotone(mtr, q, t, HILBERT)
     assert np.array_equal(mstats["per_query_dists"], mcounter.per_query)

@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core import flat_index, tree
-from repro.core.backends import jit_cache_size
+from repro.core.backends import EngineOpts, jit_cache_size
 from repro.core.npdist import pairwise_np
 from repro.forest import encode_tree, forest_range_search
 from repro.obs import (
@@ -36,6 +36,8 @@ from repro.obs import (
     write_snapshot,
 )
 from repro.serve.front import ServingFront
+
+_DENSE = EngineOpts(realisation="dense")
 
 DIM = 12
 
@@ -209,8 +211,7 @@ def _bss_built(metric="l2"):
 
 def test_bss_stats_conform_and_cross_check():
     idx, db, q, t = _bss_built()
-    hits, stats = flat_index.bss_query_batched(idx, q, t,
-                                               realisation="dense")
+    hits, stats = flat_index.bss_query_batched(idx, q, t, opts=_DENSE)
     check_stats(stats)
     assert stats["engine"] == "bss" and stats["kind"] == "range"
     # attribution cross-check: the scan's only mechanism is the Hilbert
@@ -220,7 +221,7 @@ def test_bss_stats_conform_and_cross_check():
     expect = (np.asarray(lb) > t).sum(axis=1)
     assert (stats["excluded"]["hilbert"] == expect).all()
 
-    _, _, ks = flat_index.bss_knn_batched(idx, q, 4, realisation="dense")
+    _, _, ks = flat_index.bss_knn_batched(idx, q, 4, opts=_DENSE)
     check_stats(ks)
     assert ks["kind"] == "knn" and ks["rounds"] >= 1
     assert set(ks["excluded"]) == {"hilbert"}
@@ -234,8 +235,8 @@ def test_bss_stats_conform_and_cross_check():
 
 def test_bss_bf16_stats_conform():
     idx, db, q, t = _bss_built()
-    _, stats = flat_index.bss_query_batched(idx, q, t, precision="bf16",
-                                            realisation="dense")
+    _, stats = flat_index.bss_query_batched(
+        idx, q, t, opts=EngineOpts(realisation="dense", precision="bf16"))
     check_stats(stats)
     assert stats["precision"] == "bf16"
     assert "band_eps" in stats and "recheck_points_per_query" in stats
@@ -376,12 +377,8 @@ def test_metrics_on_off_bit_identity(metric):
             return [f.result(timeout=120) for f in futs]
 
     on, off = run(True), run(False)
-    ref_hits, ref_s = flat_index.bss_query_batched(
-        idx, q, t, realisation="dense"
-    )
-    ref_i, ref_d, _ = flat_index.bss_knn_batched(
-        idx, q, k, realisation="dense"
-    )
+    ref_hits, ref_s = flat_index.bss_query_batched(idx, q, t, opts=_DENSE)
+    ref_i, ref_d, _ = flat_index.bss_knn_batched(idx, q, k, opts=_DENSE)
     for i, (a, b) in enumerate(zip(on, off)):
         assert a.n_dists == b.n_dists, (metric, i)
         if i % 3 == 1:
@@ -482,8 +479,8 @@ def test_instrumented_engines_have_zero_callbacks():
     enc = encode_tree(tr)
     rec = _Recorder()
     with _patched_engines(rec):
-        flat_index.bss_query_batched(idx, q, t, realisation="dense")
-        flat_index.bss_knn_batched(idx, q, 3, realisation="dense")
+        flat_index.bss_query_batched(idx, q, t, opts=_DENSE)
+        flat_index.bss_knn_batched(idx, q, 3, opts=_DENSE)
         forest_range_search(enc, q, t)
     fns = {c.fn for c in rec.captures}
     assert "_forest_walk_jit" in fns and "_dense_hit_mask_jit" in fns

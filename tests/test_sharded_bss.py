@@ -88,6 +88,9 @@ _COMMON = """
     from repro.parallel.shard_index import (
         ShardedBSSIndex, sharded_query_batched, sharded_knn_batched,
     )
+    from repro.core.backends import EngineOpts
+
+    JNP = EngineOpts(backend="jnp")
 
     # Pin the single-device reference to its DENSE exact-phase realisation:
     # the sparse cell-gather path may differ from the dense pass in the last
@@ -133,18 +136,17 @@ _MATRIX = _COMMON + """
         assert idx.n_blocks % 2, (metric, idx.n_blocks)  # exercise padding
         t = snap(pairwise_np(metric, q, db), 0.02)
         oracle, so = flat_index.bss_query(idx, q, t)
-        single, ss = flat_index.bss_query_batched(idx, q, t, backend="jnp")
-        ks_i, ks_d, ks_s = flat_index.bss_knn_batched(idx, q, k,
-                                                      backend="jnp")
+        single, ss = flat_index.bss_query_batched(idx, q, t, opts=JNP)
+        ks_i, ks_d, ks_s = flat_index.bss_knn_batched(idx, q, k, opts=JNP)
         for n_shards in (2, 4, 8):
             mesh = Mesh(np.array(devs[:n_shards]), ("data",))
             sidx = ShardedBSSIndex(idx, mesh)
-            hits, st = sharded_query_batched(sidx, q, t, backend="jnp")
+            hits, st = sharded_query_batched(sidx, q, t, opts=JNP)
             assert hits == oracle == single, (metric, n_shards)
             assert abs(st["dists_per_query"] - so["dists_per_query"]) < 1e-9
             assert abs(st["dists_per_query"] - ss["dists_per_query"]) < 1e-9
             assert st["n_shards"] == n_shards
-            ki, kd, kst = sharded_knn_batched(sidx, q, k, backend="jnp")
+            ki, kd, kst = sharded_knn_batched(sidx, q, k, opts=JNP)
             assert np.array_equal(ki, ks_i), (metric, n_shards)
             np.testing.assert_allclose(kd, ks_d, rtol=1e-6, atol=1e-7)
             assert kst["rounds"] == ks_s["rounds"], (metric, n_shards)
@@ -162,16 +164,14 @@ _PALLAS = _COMMON + """
                                seed=2)
     t = snap(pairwise_np("l2", q, db), 0.03)
     oracle, _ = flat_index.bss_query(idx, q, t)
-    single, _ = flat_index.bss_query_batched(
-        idx, q, t, backend="pallas", interpret=True, bq=8)
+    PALLAS = EngineOpts(backend="pallas", interpret=True, bq=8)
+    single, _ = flat_index.bss_query_batched(idx, q, t, opts=PALLAS)
     mesh = Mesh(np.array(devs[:2]), ("data",))
     sidx = ShardedBSSIndex(idx, mesh)
-    hits, _ = sharded_query_batched(
-        sidx, q, t, backend="pallas", interpret=True, bq=8)
+    hits, _ = sharded_query_batched(sidx, q, t, opts=PALLAS)
     assert hits == oracle == single
-    ki, kd, _ = sharded_knn_batched(
-        sidx, q, 6, backend="pallas", interpret=True, bq=8)
-    kj, dj, _ = sharded_knn_batched(sidx, q, 6, backend="jnp")
+    ki, kd, _ = sharded_knn_batched(sidx, q, 6, opts=PALLAS)
+    kj, dj, _ = sharded_knn_batched(sidx, q, 6, opts=JNP)
     assert np.array_equal(np.sort(ki, 1), np.sort(kj, 1))
     np.testing.assert_allclose(np.sort(kd, 1), np.sort(dj, 1),
                                rtol=1e-5, atol=1e-6)
@@ -192,7 +192,7 @@ _EDGES = _COMMON + """
 
     # k=60 exceeds n_valid (50) AND rows_per_shard (32): the per-shard
     # top_k clamps to its rows, the merge still returns every valid point
-    ki, kd, kst = sharded_knn_batched(sidx, q, 60, backend="jnp")
+    ki, kd, kst = sharded_knn_batched(sidx, q, 60, opts=JNP)
     assert ki.shape == (5, 60)
     assert (ki[:, :50] >= 0).all() and (ki[:, 50:] == -1).all()
     assert np.isinf(kd[:, 50:]).all()
@@ -204,7 +204,7 @@ _EDGES = _COMMON + """
     # range over the whole space (t above every distance) on the padded
     # mesh: every real point hits, padding slots never leak (no -1 ids)
     t_all = float(truth.max() * 2.0)
-    hits, st = sharded_query_batched(sidx, q, t_all, backend="jnp")
+    hits, st = sharded_query_batched(sidx, q, t_all, opts=JNP)
     assert all(sorted(r) == list(range(50)) for r in hits)
     assert st["block_exclusion_rate"] == 0.0
 
@@ -217,9 +217,8 @@ _EDGES = _COMMON + """
     # explicit r0 (the serving layer's t0_guess), too tight and too wide,
     # must agree with the single-device engine under the same r0
     for r0 in (1e-6, 100.0):
-        gi, gd, gs = sharded_knn_batched(sidx, q, 5, r0=r0, backend="jnp")
-        si, sd, ss = flat_index.bss_knn_batched(idx, q, 5, r0=r0,
-                                                backend="jnp")
+        gi, gd, gs = sharded_knn_batched(sidx, q, 5, r0=r0, opts=JNP)
+        si, sd, ss = flat_index.bss_knn_batched(idx, q, 5, r0=r0, opts=JNP)
         assert np.array_equal(gi, si), r0
         assert gs["rounds"] == ss["rounds"]
         assert abs(gs["dists_per_query"] - ss["dists_per_query"]) < 1e-9
