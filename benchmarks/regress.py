@@ -1,0 +1,422 @@
+"""Benchmark regression sentinel.
+
+Every benchmark writes its own ``BENCH_*.json`` shape; this module
+normalises them into ONE schema-versioned trajectory
+(``BENCH_trajectory.json``: flat ``name -> {value, unit, class, better}``
+rows plus a host fingerprint) and compares trajectories with noise-aware
+thresholds, so CI can fail on a real slowdown without flaking on timer
+jitter:
+
+* metric **classes** carry the tolerance — ``work`` rows (distance
+  counts, kNN rounds) are deterministic given the seed and get a tight
+  relative bound; ``ratio`` rows (speedups, bytes ratios) are
+  machine-independent but mildly noisy; ``time`` / ``throughput`` rows
+  are wall-clock and get a loose relative bound PLUS an absolute floor
+  (sub-millisecond jitter never trips), doubled again when the baseline
+  was recorded on a different host fingerprint; ``flag`` rows (exactness
+  booleans) regress on any decrease.
+* a regression needs to exceed BOTH the relative and the absolute slack —
+  tiny values are judged by the floor, large values by the ratio.
+* ``--ci`` runs the smoke benchmark set ``--runs`` times and compares the
+  per-row MEDIAN against the committed ``benchmarks/BENCH_baseline.json``
+  (refreshed via ``--rebase``), printing a delta table and exiting
+  non-zero on any regression or vanished row.
+
+Usage::
+
+    python -m benchmarks.regress --ci            # CI gate (perf-sentinel)
+    python -m benchmarks.regress --rebase        # refresh the baseline
+    python -m benchmarks.regress --collect DIR   # normalise existing jsons
+    python -m benchmarks.regress --compare A B   # diff two trajectories
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+from statistics import median
+
+TRAJECTORY_SCHEMA = 1
+REPO_ROOT = Path(__file__).resolve().parents[1]
+BASELINE_PATH = REPO_ROOT / "benchmarks" / "BENCH_baseline.json"
+
+# the CI smoke set: module args + the artifact each invocation writes.
+# Each is CI-sized (seconds, not minutes) so --runs medians stay cheap.
+SMOKE_SET = (
+    (("benchmarks.bss_engine", "--all-metrics"), "BENCH_bss_metrics.json"),
+    (("benchmarks.bss_incremental",), "BENCH_bss_incremental.json"),
+    (("benchmarks.retrieval_serving", "--async", "--smoke"),
+     "BENCH_serving_async.json"),
+)
+
+# class -> (relative slack, absolute floor).  A row regresses only when
+# the worse-direction delta exceeds BOTH bounds.
+THRESHOLDS = {
+    "work": (1.05, 2.0),
+    "ratio": (1.25, 0.05),
+    "time": (1.75, None),   # absolute floor from the unit table below
+    "throughput": (1.75, None),
+    "flag": (1.0, 0.0),
+}
+_ABS_FLOOR_BY_UNIT = {
+    "us": 100.0, "ms": 1.0, "s": 0.05, "rps": 25.0, "rows/s": 1000.0,
+    "count": 2.0, "ratio": 0.05, "bool": 0.0,
+}
+# wall-clock rows measured on a different host are barely comparable:
+# widen their relative slack by this factor instead of dropping them
+_CROSS_HOST_RELAX = 2.0
+
+
+def host_fingerprint() -> dict:
+    return {
+        "platform": platform.machine() + "-" + platform.system().lower(),
+        "cpu_count": os.cpu_count() or 1,
+    }
+
+
+def _row(value, unit, cls, better="lower") -> dict:
+    return {"value": float(value), "unit": unit, "class": cls,
+            "better": better}
+
+
+# ---------------------------------------------------------------------------
+# per-benchmark extractors: BENCH payload -> flat trajectory rows
+# ---------------------------------------------------------------------------
+
+
+def _extract_bss_metrics(d: dict) -> dict:
+    rows = {}
+    for m, r in d.get("metrics", {}).items():
+        for kind in ("range", "knn"):
+            kr = r.get(kind, {})
+            p = f"bss/{m}/{kind}"
+            if "dists_per_query" in kr:
+                rows[f"{p}/dists_per_query"] = _row(
+                    kr["dists_per_query"], "count", "work")
+            if "us_per_query" in kr:
+                rows[f"{p}/us_per_query"] = _row(
+                    kr["us_per_query"], "us", "time")
+            if "exact" in kr:
+                rows[f"{p}/exact"] = _row(
+                    kr["exact"], "bool", "flag", better="higher")
+            if "rounds" in kr:
+                rows[f"{p}/rounds"] = _row(kr["rounds"], "count", "work")
+    return rows
+
+
+def _extract_bss_bf16(d: dict) -> dict:
+    rows = {}
+    for m, r in d.get("metrics", {}).items():
+        for kind in ("range", "knn"):
+            kr = r.get(kind, {})
+            p = f"bf16/{m}/{kind}"
+            if "bit_identical" in kr:
+                rows[f"{p}/bit_identical"] = _row(
+                    kr["bit_identical"], "bool", "flag", better="higher")
+            if "bytes_ratio" in kr:
+                rows[f"{p}/bytes_ratio"] = _row(
+                    kr["bytes_ratio"], "ratio", "ratio")
+            if "us_per_query_bf16" in kr:
+                rows[f"{p}/us_per_query"] = _row(
+                    kr["us_per_query_bf16"], "us", "time")
+    return rows
+
+
+def _extract_bss_incremental(d: dict) -> dict:
+    rows = {}
+    ap, cp = d.get("append", {}), d.get("compaction", {})
+    if "rows_per_s" in ap:
+        rows["incremental/append/rows_per_s"] = _row(
+            ap["rows_per_s"], "rows/s", "throughput", better="higher")
+    if "speedup_vs_rebuild" in ap:
+        rows["incremental/append/speedup_vs_rebuild"] = _row(
+            ap["speedup_vs_rebuild"], "ratio", "ratio", better="higher")
+    if "table_dists" in ap:
+        rows["incremental/append/table_dists"] = _row(
+            ap["table_dists"], "count", "work")
+    for key in ("dists_per_query_fragmented", "dists_per_query_compacted"):
+        if key in cp:
+            rows[f"incremental/{key}"] = _row(cp[key], "count", "work")
+    if "compact_s" in cp:
+        rows["incremental/compact_s"] = _row(cp["compact_s"], "s", "time")
+    if "exact" in d:
+        rows["incremental/exact"] = _row(
+            d["exact"], "bool", "flag", better="higher")
+    return rows
+
+
+def _extract_serving_async(d: dict) -> dict:
+    rows = {}
+    wl = d.get("workload", {})
+    if "sync_service_ms" in wl:
+        rows["serving/sync_service_ms"] = _row(
+            wl["sync_service_ms"], "ms", "time")
+    # rates are host-load dependent; label by position (low/mid/high of
+    # the sync-saturation sweep), not by the absolute rps
+    names = ("under", "saturated", "overload")
+    for name, rec in zip(names, d.get("rates", [])):
+        a = rec.get("async", {})
+        if "p95_ms" in a:
+            rows[f"serving/{name}/async_p95_ms"] = _row(
+                a["p95_ms"], "ms", "time")
+        if "goodput_rps" in a:
+            rows[f"serving/{name}/async_goodput_rps"] = _row(
+                a["goodput_rps"], "rps", "throughput", better="higher")
+    return rows
+
+
+def _extract_bss_sharded(d: dict) -> dict:
+    rows = {}
+    sweep = d.get("sweep", {})
+    sd = sweep.get("single_device", {})
+    if "range_us_per_query" in sd:
+        rows["sharded/1dev/range_us_per_query"] = _row(
+            sd["range_us_per_query"], "us", "time")
+    for c, w in sweep.get("widths", {}).items():
+        p = f"sharded/{c}dev"
+        if "range_us_per_query" in w:
+            rows[f"{p}/range_us_per_query"] = _row(
+                w["range_us_per_query"], "us", "time")
+        if "dists_per_query" in w:
+            rows[f"{p}/dists_per_query"] = _row(
+                w["dists_per_query"], "count", "work")
+        if "exact" in w:
+            rows[f"{p}/exact"] = _row(
+                w["exact"], "bool", "flag", better="higher")
+    return rows
+
+
+_EXTRACTORS = {
+    "bss_metrics": _extract_bss_metrics,
+    "bss_bf16": _extract_bss_bf16,
+    "bss_incremental": _extract_bss_incremental,
+    "bss_sharded": _extract_bss_sharded,
+}
+
+
+def normalise_payload(d: dict) -> dict:
+    """One BENCH payload -> trajectory rows; unknown shapes yield {}."""
+    bench = d.get("bench")
+    if bench in _EXTRACTORS:
+        return _EXTRACTORS[bench](d)
+    if "rates" in d and "workload" in d:  # retrieval_serving writes no tag
+        return _extract_serving_async(d)
+    return {}
+
+
+def collect(paths, host: dict | None = None) -> dict:
+    """Normalise BENCH json files into one trajectory dict."""
+    rows, sources = {}, []
+    for p in sorted(Path(p) for p in paths):
+        with open(p) as fh:
+            payload = json.load(fh)
+        extracted = normalise_payload(payload)
+        if extracted:
+            overlap = rows.keys() & extracted.keys()
+            if overlap:
+                raise ValueError(
+                    f"{p.name}: duplicate trajectory rows {sorted(overlap)}"
+                )
+            rows.update(extracted)
+            sources.append(p.name)
+    return {
+        "schema": TRAJECTORY_SCHEMA,
+        "host": host if host is not None else host_fingerprint(),
+        "sources": sources,
+        "rows": rows,
+    }
+
+
+def median_of(trajectories: list[dict]) -> dict:
+    """Per-row median across repeated runs (rows missing from some runs
+    are medianed over the runs that have them)."""
+    if not trajectories:
+        raise ValueError("no trajectories to median")
+    out = dict(trajectories[0])
+    rows = {}
+    for t in trajectories:
+        for name, r in t["rows"].items():
+            rows.setdefault(name, []).append(r)
+    out["rows"] = {
+        name: {**rs[0], "value": float(median(r["value"] for r in rs))}
+        for name, rs in rows.items()
+    }
+    out["runs"] = len(trajectories)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# comparison
+# ---------------------------------------------------------------------------
+
+
+def _slack(row: dict, cross_host: bool):
+    rel, abs_floor = THRESHOLDS[row["class"]]
+    if abs_floor is None:
+        abs_floor = _ABS_FLOOR_BY_UNIT.get(row["unit"], 0.0)
+    if cross_host and row["class"] in ("time", "throughput"):
+        rel *= _CROSS_HOST_RELAX
+    return rel, abs_floor
+
+
+def compare(baseline: dict, current: dict) -> list[dict]:
+    """Row-by-row deltas; each entry has a ``status`` in
+    ``ok | improved | new | REGRESSION | MISSING``.  The two capitalised
+    states are the failing ones."""
+    if baseline.get("schema") != TRAJECTORY_SCHEMA:
+        raise ValueError(
+            f"baseline schema {baseline.get('schema')!r} != "
+            f"{TRAJECTORY_SCHEMA}; re-run --rebase"
+        )
+    cross_host = baseline.get("host") != current.get("host")
+    deltas = []
+    brows, crows = baseline["rows"], current["rows"]
+    for name in sorted(brows.keys() | crows.keys()):
+        b, c = brows.get(name), crows.get(name)
+        if b is None:
+            deltas.append({"name": name, "base": None,
+                           "cur": c["value"], "status": "new"})
+            continue
+        if c is None:
+            deltas.append({"name": name, "base": b["value"],
+                           "cur": None, "status": "MISSING"})
+            continue
+        rel, abs_floor = _slack(b, cross_host)
+        bv, cv = b["value"], c["value"]
+        if b.get("better") == "higher":
+            worse = cv < bv / rel and cv < bv - abs_floor
+            better = cv > bv
+        else:
+            worse = cv > bv * rel and cv > bv + abs_floor
+            better = cv < bv
+        status = ("REGRESSION" if worse
+                  else "improved" if better and abs(cv - bv) > 1e-12
+                  else "ok")
+        deltas.append({
+            "name": name, "base": bv, "cur": cv, "unit": b["unit"],
+            "class": b["class"], "status": status,
+            "ratio": (cv / bv) if bv else None,
+        })
+    return deltas
+
+
+def delta_table(deltas: list[dict]) -> str:
+    lines = [
+        "| row | base | current | ratio | status |",
+        "|---|---:|---:|---:|---|",
+    ]
+    for d in deltas:
+        base = "-" if d["base"] is None else f"{d['base']:g}"
+        cur = "-" if d["cur"] is None else f"{d['cur']:g}"
+        ratio = ("-" if d.get("ratio") is None or d["base"] in (None, 0)
+                 else f"{d['ratio']:.2f}x")
+        lines.append(
+            f"| {d['name']} | {base} | {cur} | {ratio} | {d['status']} |"
+        )
+    return "\n".join(lines)
+
+
+def failures(deltas: list[dict]) -> list[dict]:
+    return [d for d in deltas if d["status"] in ("REGRESSION", "MISSING")]
+
+
+# ---------------------------------------------------------------------------
+# CI driver
+# ---------------------------------------------------------------------------
+
+
+def _run_smoke_once(workdir: Path) -> list[Path]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO_ROOT / "src"), str(REPO_ROOT)]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out_paths = []
+    for modargs, artifact in SMOKE_SET:
+        out = workdir / artifact
+        cmd = [sys.executable, "-m", *modargs, "--out", str(out)]
+        print(f"# regress: {' '.join(cmd[2:])}", flush=True)
+        subprocess.run(cmd, check=True, env=env, cwd=REPO_ROOT, timeout=1800)
+        out_paths.append(out)
+    return out_paths
+
+
+def run_smoke_trajectory(runs: int) -> dict:
+    trajectories = []
+    with tempfile.TemporaryDirectory(prefix="regress-") as td:
+        for i in range(runs):
+            d = Path(td) / f"run{i}"
+            d.mkdir()
+            trajectories.append(collect(_run_smoke_once(d)))
+    return median_of(trajectories)
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--ci", action="store_true",
+                      help="run the smoke set and gate against the "
+                           "committed baseline")
+    mode.add_argument("--rebase", action="store_true",
+                      help="run the smoke set and rewrite the baseline")
+    mode.add_argument("--collect", metavar="DIR",
+                      help="normalise existing BENCH_*.json files in DIR")
+    mode.add_argument("--compare", nargs=2, metavar=("BASE", "CUR"),
+                      help="diff two trajectory files")
+    ap.add_argument("--runs", type=int, default=3,
+                    help="benchmark repetitions medianed per row (ci/rebase)")
+    ap.add_argument("--against", default=str(BASELINE_PATH),
+                    help="baseline trajectory to compare against")
+    ap.add_argument("--out", default="BENCH_trajectory.json")
+    ap.add_argument("--table-out", default="REGRESS_delta.md",
+                    help="where --ci writes the markdown delta table")
+    args = ap.parse_args(argv)
+
+    if args.collect:
+        paths = sorted(Path(args.collect).glob("BENCH_*.json"))
+        traj = collect(paths)
+        Path(args.out).write_text(json.dumps(traj, indent=2) + "\n")
+        print(f"# wrote {args.out} ({len(traj['rows'])} rows from "
+              f"{len(traj['sources'])} files)")
+        return 0
+
+    if args.compare:
+        base = json.loads(Path(args.compare[0]).read_text())
+        cur = json.loads(Path(args.compare[1]).read_text())
+        deltas = compare(base, cur)
+        print(delta_table(deltas))
+        return 1 if failures(deltas) else 0
+
+    traj = run_smoke_trajectory(max(1, args.runs))
+
+    if args.rebase:
+        BASELINE_PATH.write_text(json.dumps(traj, indent=2) + "\n")
+        print(f"# wrote {BASELINE_PATH} ({len(traj['rows'])} rows, "
+              f"median of {traj['runs']} runs)")
+        return 0
+
+    Path(args.out).write_text(json.dumps(traj, indent=2) + "\n")
+    baseline = json.loads(Path(args.against).read_text())
+    deltas = compare(baseline, traj)
+    table = delta_table(deltas)
+    Path(args.table_out).write_text(table + "\n")
+    print(table)
+    bad = failures(deltas)
+    if bad:
+        print(f"# REGRESSION: {len(bad)} failing rows: "
+              + ", ".join(d["name"] for d in bad))
+        return 1
+    print(f"# regress: {len(deltas)} rows within thresholds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

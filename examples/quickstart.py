@@ -244,3 +244,34 @@ print(
     f"compacted to {ms_c.n_blocks} blocks — generation {gen0} -> {gen1}, "
     f"results == fresh rebuild over the live rows"
 )
+
+# 14. performance tracing: everything the front does — each request's
+#     queue/batch/engine/demux span slices, the driver's per-dispatch
+#     phases, every index mutation — lands in one trace buffer on one
+#     monotonic clock.  export_trace() writes Chrome trace-event JSON:
+#     open it at https://ui.perfetto.dev (or chrome://tracing) and each
+#     request is its own track, with mutations inline on the driver
+#     track.  Building the front with profile_dir="..." additionally
+#     wraps each engine dispatch in a jax.profiler trace so device-level
+#     profiles line up with these host-side spans.  On a sharded index
+#     the same stats carry per-shard work splits — the shard/imbalance
+#     gauge in render() (max/mean, 1.0 = perfectly balanced) is the row a
+#     rebalancing policy would watch.
+from repro.obs import load_trace, validate_trace  # noqa: E402
+
+with ServingFront(idx, max_delay_s=0.005) as front:
+    for qv in queries[:8]:
+        front.submit(qv, "range", t=t).result(timeout=120)
+    front.append(metricsets.colors_surrogate(256, dim=64, seed=8))
+    front.submit(queries[0], "knn", k=5).result(timeout=120)
+    trace_path = front.export_trace("TRACE_quickstart.json")
+payload = load_trace(trace_path)
+assert validate_trace(payload) == []
+kinds = {e["name"] for e in payload["traceEvents"]}
+assert {"queue", "engine", "demux", "dispatch/engine",
+        "mutation/append"} <= kinds
+print(
+    f"trace: {len(payload['traceEvents'])} events -> {trace_path} "
+    "(load in https://ui.perfetto.dev; benchmarks/regress.py watches "
+    "the matching BENCH_* numbers for regressions in CI)"
+)

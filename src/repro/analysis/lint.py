@@ -320,6 +320,60 @@ class _Linter:
                     "ValueError/TypeError",
                 )
 
+    # -- R6: unregistered runtime metric names -------------------------------
+
+    _SCHEMA_RELPATH = "src/repro/obs/schema.py"
+    _METRIC_METHODS = ("counter", "gauge", "histogram")
+
+    def _metric_names(self):
+        """The schema's METRIC_NAMES set, read from the AST of
+        ``src/repro/obs/schema.py`` (never imported — the lint stays
+        import-free).  ``None`` when the file or the literal is absent,
+        which disables R6 (fixture repos without a schema lint clean)."""
+        if not hasattr(self, "_metric_names_cache"):
+            names = None
+            fi = self.files.get(self._SCHEMA_RELPATH)
+            if fi is not None:
+                for stmt in fi.tree.body:
+                    if (
+                        isinstance(stmt, ast.Assign)
+                        and len(stmt.targets) == 1
+                        and isinstance(stmt.targets[0], ast.Name)
+                        and stmt.targets[0].id == "METRIC_NAMES"
+                    ):
+                        try:
+                            names = frozenset(ast.literal_eval(stmt.value))
+                        except (ValueError, TypeError):
+                            names = None
+            self._metric_names_cache = names
+        return self._metric_names_cache
+
+    def check_r6(self, fi: _FileInfo) -> None:
+        if not fi.relpath.startswith("src/"):
+            return
+        if fi.relpath == self._SCHEMA_RELPATH:
+            return
+        names = self._metric_names()
+        if names is None:
+            return
+        for node in ast.walk(fi.tree):
+            if not (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in self._METRIC_METHODS
+                and node.args
+                and isinstance(node.args[0], ast.Constant)
+                and isinstance(node.args[0].value, str)
+            ):
+                continue
+            name = node.args[0].value
+            if name not in names:
+                self.emit(
+                    "R6", fi.relpath, node.lineno, node.col_offset,
+                    f"metric name {name!r} is not listed in "
+                    "repro.obs.schema.METRIC_NAMES; register it there",
+                )
+
     # -- R2: host sync inside jit-reachable functions ------------------------
 
     def _resolve_callable(self, mods: dict, mod: str, fi: _FileInfo,
@@ -521,6 +575,7 @@ def lint_repo(
         linter.check_r3(fi)
         linter.check_r4(fi)
         linter.check_r5(fi)
+        linter.check_r6(fi)
     linter.check_r2()
     return sorted(
         linter.violations, key=lambda v: (v.path, v.line, v.col, v.rule)

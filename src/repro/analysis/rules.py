@@ -76,6 +76,14 @@ RULES: dict[str, Rule] = {
             "bare `assert` used for input validation in library code — "
             "stripped under python -O; raise ValueError/TypeError",
         ),
+        Rule(
+            "R6",
+            "unregistered-metric-name",
+            "metric name registered at runtime (counter/gauge/histogram "
+            "call) that is absent from repro.obs.schema.METRIC_NAMES — "
+            "dashboards and the regression sentinel key on the schema "
+            "namespace, so an unlisted name is a silent observability hole",
+        ),
     )
 }
 

@@ -22,7 +22,18 @@ import numpy as np
 from repro.core.backends import jit_cache_size
 from repro.obs.registry import MetricsRegistry
 
-__all__ = ["fold_engine_stats", "fold_mutation", "poll_compile"]
+__all__ = ["fold_engine_stats", "fold_mutation", "poll_compile",
+           "shard_imbalance"]
+
+
+def shard_imbalance(per_shard) -> float:
+    """Max/mean ratio of a per-shard work vector: 1.0 is perfectly
+    balanced, S is everything-on-one-shard (for S shards).  Defined as
+    1.0 on an all-zero vector (no work is trivially balanced)."""
+    vals = [int(v) for v in np.asarray(per_shard).reshape(-1).tolist()]
+    if not vals or sum(vals) == 0:
+        return 1.0
+    return max(vals) * len(vals) / sum(vals)
 
 
 def fold_engine_stats(reg: MetricsRegistry, stats: dict) -> None:
@@ -84,6 +95,20 @@ def fold_engine_stats(reg: MetricsRegistry, stats: dict) -> None:
         reg.histogram("engine/knn_rounds", **lbl).observe(
             int(stats["rounds"])
         )
+
+    if "shard_dists" in stats:
+        # the sharded engine's per-shard split of the exact-phase work
+        # (functional jit outputs, one slot per mesh device): per-shard
+        # traffic counters plus a max/mean imbalance gauge — the number a
+        # rebalancing policy would watch
+        sd = np.asarray(stats["shard_dists"], dtype=np.int64)
+        sb = np.asarray(
+            stats.get("shard_blocks", np.zeros_like(sd)), dtype=np.int64
+        )
+        for i, (d, b) in enumerate(zip(sd.tolist(), sb.tolist())):
+            reg.counter("shard/dists", shard=i, **lbl).inc(int(d))
+            reg.counter("shard/blocks", shard=i, **lbl).inc(int(b))
+        reg.gauge("shard/imbalance", **lbl).set(shard_imbalance(sd))
 
 
 def fold_mutation(reg: MetricsRegistry, mstats,

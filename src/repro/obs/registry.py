@@ -6,9 +6,12 @@ Everything here is host-side and thread-safe (one lock per registry — the
 serving front's driver thread and its clients fold concurrently).  The
 histogram keeps a bounded ring of recent observations (percentiles are a
 *window* statistic, like the front's ``queue_wait_s`` deque) next to
-cumulative ``count`` / ``sum`` tallies (a *lifetime* statistic, which is
-what the Prometheus summary convention exports) — so a long-running front
-reports recent latency percentiles without unbounded memory.
+cumulative ``count`` / ``sum`` / per-bucket tallies (*lifetime*
+statistics, which is what the Prometheus histogram convention exports) —
+so a long-running front reports recent latency percentiles without
+unbounded memory while the exposition carries real ``_bucket`` series.
+Bucket boundaries come from ``repro.obs.buckets`` (log-spaced default,
+per-metric overrides) unless the caller passes an explicit ladder.
 
 Metric names are slash-namespaced repo-side (``serve/span_s``,
 ``engine/dists``); :func:`prom_name` maps them to the exposition's
@@ -22,8 +25,11 @@ from __future__ import annotations
 import json
 import re
 import threading
+from bisect import bisect_left
 from collections import deque
+from itertools import accumulate
 
+from repro.obs.buckets import ladder_for, validate_ladder
 from repro.serve.queue import nearest_rank
 
 __all__ = [
@@ -31,13 +37,20 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "fmt_le",
     "metric_key",
     "prom_name",
 ]
 
 _DEFAULT_WINDOW = 2048
 _PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
-_QUANTILES = (0.5, 0.95, 0.99)
+
+
+def fmt_le(bound: float) -> str:
+    """Render a bucket boundary as its ``le`` label value (``+Inf`` for
+    the overflow bucket) — shared with the parser so round-trips are
+    exact."""
+    return "+Inf" if bound == float("inf") else f"{bound:.9g}"
 
 
 def metric_key(name: str, labels: dict) -> str:
@@ -58,7 +71,11 @@ def prom_name(name: str) -> str:
 def _prom_label_str(labels: dict) -> str:
     if not labels:
         return ""
-    esc = lambda v: str(v).replace("\\", r"\\").replace('"', r"\"")  # noqa: E731
+    # text-format 0.0.4 label-value escapes: backslash, double-quote and
+    # newline (an unescaped newline would split the sample line in two)
+    esc = lambda v: (  # noqa: E731
+        str(v).replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n")
+    )
     inner = ",".join(f'{k}="{esc(labels[k])}"' for k in sorted(labels))
     return f"{{{inner}}}"
 
@@ -99,13 +116,21 @@ class Gauge:
 
 
 class Histogram:
-    """Bounded-ring histogram: a deque of the last ``window`` observations
-    (p50/p95/p99/max via the serving stack's nearest-rank percentile) plus
-    cumulative ``count`` / ``sum`` that never forget."""
+    """Bounded-ring + cumulative-bucket histogram.
+
+    A deque of the last ``window`` observations backs the dashboard
+    percentiles (p50/p95/p99/max via the serving stack's nearest-rank
+    percentile); cumulative ``count`` / ``sum`` and one per-bucket tally
+    per boundary (``le`` semantics: observation counted in the first
+    bucket whose bound is >= the value, overflow in the implicit ``+Inf``
+    bucket) never forget — they are what the Prometheus exposition
+    exports as ``_bucket`` / ``_sum`` / ``_count`` series.
+    """
 
     kind = "histogram"
 
-    def __init__(self, name: str, labels: dict, window: int = _DEFAULT_WINDOW):
+    def __init__(self, name: str, labels: dict, window: int = _DEFAULT_WINDOW,
+                 buckets=None):
         if window < 1:
             raise ValueError(f"window must be >= 1, got {window}")
         self.name = name
@@ -114,15 +139,28 @@ class Histogram:
         self.ring: deque[float] = deque(maxlen=self.window)
         self.count = 0
         self.sum = 0.0
+        self.buckets = (
+            ladder_for(name) if buckets is None else validate_ladder(buckets)
+        )
+        # raw (non-cumulative) per-bucket tallies; index len(buckets) is
+        # the +Inf overflow bucket
+        self._bucket_raw = [0] * (len(self.buckets) + 1)
 
     def observe(self, value: float) -> None:
         v = float(value)
         self.ring.append(v)
         self.count += 1
         self.sum += v
+        self._bucket_raw[bisect_left(self.buckets, v)] += 1
 
     def percentile(self, p: float) -> float:
         return nearest_rank(self.ring, p)
+
+    def bucket_counts(self) -> list:
+        """Cumulative ``(le, count)`` pairs ending with ``(+Inf, count)``
+        — exactly the ``_bucket`` series the exposition emits."""
+        bounds = list(self.buckets) + [float("inf")]
+        return list(zip(bounds, accumulate(self._bucket_raw)))
 
     def summary(self) -> dict:
         vals = list(self.ring)
@@ -134,6 +172,9 @@ class Histogram:
             "p95": nearest_rank(vals, 0.95),
             "p99": nearest_rank(vals, 0.99),
             "max": nearest_rank(vals, 1.0),
+            "buckets": {
+                fmt_le(le): c for le, c in self.bucket_counts()
+            },
         }
 
 
@@ -171,12 +212,18 @@ class MetricsRegistry:
         return self._get(Gauge, name, labels)
 
     def histogram(self, name: str, window: int = _DEFAULT_WINDOW,
-                  **labels) -> Histogram:
-        h = self._get(Histogram, name, labels, window=window)
+                  buckets=None, **labels) -> Histogram:
+        h = self._get(Histogram, name, labels, window=window,
+                      buckets=buckets)
         if h.window != int(window):
             raise ValueError(
                 f"histogram {metric_key(name, labels)!r} already registered "
                 f"with window={h.window}, got {window}"
+            )
+        if buckets is not None and h.buckets != validate_ladder(buckets):
+            raise ValueError(
+                f"histogram {metric_key(name, labels)!r} already registered "
+                f"with buckets={h.buckets}, got {tuple(buckets)}"
             )
         return h
 
@@ -205,8 +252,8 @@ class MetricsRegistry:
 
     def to_prometheus(self) -> str:
         """Prometheus text exposition (format 0.0.4): counters and gauges
-        as plain samples, histograms as summaries (``quantile`` label +
-        ``_sum`` / ``_count``)."""
+        as plain samples, histograms as cumulative ``_bucket{le="..."}``
+        series (``+Inf`` bucket included) plus ``_sum`` / ``_count``."""
         lines: list[str] = []
         typed: set[str] = set()
         for s in self.series():
@@ -214,18 +261,13 @@ class MetricsRegistry:
             if s.kind == "histogram":
                 if pname not in typed:
                     typed.add(pname)
-                    lines.append(f"# TYPE {pname} summary")
-                summ = s.summary()
-                for q in _QUANTILES:
-                    lbl = _prom_label_str(
-                        {**s.labels, "quantile": f"{q:g}"}
-                    )
-                    lines.append(
-                        f"{pname}{lbl} {s.percentile(q):.9g}"
-                    )
+                    lines.append(f"# TYPE {pname} histogram")
+                for le, cum in s.bucket_counts():
+                    lbl = _prom_label_str({**s.labels, "le": fmt_le(le)})
+                    lines.append(f"{pname}_bucket{lbl} {cum}")
                 base = _prom_label_str(s.labels)
-                lines.append(f"{pname}_sum{base} {summ['sum']:.9g}")
-                lines.append(f"{pname}_count{base} {summ['count']}")
+                lines.append(f"{pname}_sum{base} {s.sum:.9g}")
+                lines.append(f"{pname}_count{base} {s.count}")
             else:
                 if pname not in typed:
                     typed.add(pname)

@@ -25,8 +25,18 @@ key                     meaning
 ======================  =====================================================
 
 Engine-specific keys (``n_blocks``, ``tiles_computed``, ``n_levels``,
-``frontier_occupancy``, ``rounds``, the bf16 band keys, ...) ride along
-unchanged — the schema fixes the shared core, it does not forbid extras.
+``frontier_occupancy``, ``rounds``, the bf16 band keys, the sharded
+engine's ``shard_dists`` / ``shard_blocks`` per-shard work vectors, ...)
+ride along unchanged — the schema fixes the shared core, it does not
+forbid extras.
+
+This module is also the one home of the RUNTIME METRIC NAMESPACE:
+:data:`METRIC_NAMES` lists every metric name the codebase may register
+on a :class:`~repro.obs.registry.MetricsRegistry`.  Lint rule R6
+(``repro.analysis``) fails CI on any ``counter(...)`` / ``gauge(...)`` /
+``histogram(...)`` call in ``src/`` whose name literal is not listed
+here — dashboards and the regression sentinel key on these names, so an
+unregistered name is a silent observability hole.
 
 Host-side and numpy-only: validation runs at the jit boundary on
 materialised stats, never inside a traced function.
@@ -42,6 +52,7 @@ __all__ = [
     "KINDS",
     "PRECISIONS",
     "MECHANISMS",
+    "METRIC_NAMES",
     "normalise_stats",
     "validate_stats",
     "check_stats",
@@ -55,6 +66,50 @@ PRECISIONS = ("fp32", "bf16")
 # exclusion mechanisms: the two hyperplane bounds (paper §3), the
 # cover-radius ball test, and the centre-witness test
 MECHANISMS = ("hilbert", "hyperbolic", "cover", "centre")
+
+# every metric name the codebase registers at runtime (lint rule R6: a
+# name used in src/ but absent here fails CI).  Kept as a plain set
+# literal so the import-free AST lint can read it with ast.literal_eval.
+METRIC_NAMES = {
+    # engine-call folding (repro.obs.fold.fold_engine_stats)
+    "engine/queries",
+    "engine/dists",
+    "engine/dists_per_query",
+    "engine/excluded",
+    "engine/tiles_computed",
+    "engine/tile_exclusion_rate",
+    "engine/block_exclusion_rate",
+    "engine/frontier_nodes",
+    "engine/recheck_points",
+    "engine/recheck_tiles",
+    "engine/knn_rounds",
+    # sharded-engine work split (fold_engine_stats on sharded stats)
+    "shard/dists",
+    "shard/blocks",
+    "shard/imbalance",
+    # living-corpus mutations (fold_mutation)
+    "index/mutations",
+    "index/mutated_rows",
+    "index/table_dists",
+    "index/generation",
+    "index/tombstone_frac",
+    "index/n_blocks",
+    "index/new_blocks",
+    "index/sharded_in_place",
+    "index/pivot_refreshes",
+    "index/mutation_s",
+    # compile-cache polling (poll_compile) + the bucket-ladder contract
+    "compile/cache_size",
+    "compile/recompiles",
+    "compile/ladder_buckets",
+    # serving front / retrieval server
+    "serve/cache_hits",
+    "serve/batch_size",
+    "serve/engine_s",
+    "serve/padded_rows",
+    "serve/span_s",
+    "serve/call_s",
+}
 
 _CORE_KEYS = (
     "schema", "engine", "kind", "backend", "precision",

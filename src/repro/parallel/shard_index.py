@@ -27,6 +27,14 @@ under ``shard_map`` — same kernels, same bound math, same masking):
   ``bss_knn_batched``'s radius schedule step for step, which is what makes
   the per-query distance accounting identical to the single-device engine.
 
+Shard telemetry: every query path also returns per-shard exact-phase
+distance counts and surviving-block counts (``stats["shard_dists"]`` /
+``stats["shard_blocks"]``, one slot per shard) as FUNCTIONAL jit outputs
+— tiny shard-local reductions concatenated by the out-spec, never a
+callback, so the jaxpr audit's no-callback and bit-identity contracts
+hold unchanged.  The serving layer folds them into ``shard/imbalance``
+gauges (``repro.obs.fold.shard_imbalance``).
+
 Block-count padding: when ``n_blocks`` is not a multiple of the shard
 count, empty padding blocks are appended — zero data rows marked invalid,
 and boxes carrying the same (min=+big, max=-big) empty-box sentinel a
@@ -87,6 +95,27 @@ __all__ = [
 # against (min=+big, max=-big) overflows to +inf in float32, so a padding
 # block is excluded by ANY finite radius
 _BIG = np.float32(3.4e38)
+
+
+def _shard_work(alive, valid_l, block):
+    """Shard-local work summary, as functional jit outputs (shape (1,)
+    each, concatenated to (n_shards,) by the out-spec — never a callback).
+
+    ``sdist`` is this shard's exact-phase distance-evaluation count: for
+    every (query, surviving block) pair, the block's valid-row count —
+    the shard-local slice of the very sum ``_batched_stats`` charges per
+    query, so the shard vector totals to the batch's exact-phase work.
+    ``sblk`` counts surviving NON-EMPTY blocks (a padding or fully
+    tombstoned block admitted by an infinite radius does no work and is
+    not this gauge's business).  int32 like the engines' other traced
+    tallies (x64 stays off).
+    """
+    valid_pb = jnp.sum(
+        valid_l.reshape(-1, block), axis=1, dtype=jnp.int32
+    )
+    sdist = jnp.sum(alive * valid_pb[None, :], dtype=jnp.int32)
+    sblk = jnp.sum(alive & (valid_pb > 0)[None, :], dtype=jnp.int32)
+    return sdist.reshape(1), sblk.reshape(1)
 
 
 class ShardedBSSIndex:
@@ -188,7 +217,8 @@ class ShardedBSSIndex:
                     metric, q, data_l, valid_l, tmask,
                     backend=backend, block=block, bq=bq, interpret=interpret,
                 )
-                return dist <= t[:, None], alive, tmask
+                sdist, sblk = _shard_work(alive, valid_l, block)
+                return dist <= t[:, None], alive, tmask, sdist, sblk
 
             self._fns[key] = jax.jit(shard_map(
                 local, self.mesh,
@@ -196,7 +226,10 @@ class ShardedBSSIndex:
                     P(), P(), P(axes, None), P(axes), P(axes, None, None),
                     P(), P(), P(),
                 ),
-                out_specs=(P(None, axes), P(None, axes), P(None, axes)),
+                out_specs=(
+                    P(None, axes), P(None, axes), P(None, axes),
+                    P(axes), P(axes),
+                ),
                 check_rep=False,
             ))
         return self._fns[key]
@@ -234,9 +267,11 @@ class ShardedBSSIndex:
                     backend=backend, block=block, bq=bq, interpret=interpret,
                 )
                 hit = sure | (band & (d32 <= t_col))
+                sdist, sblk = _shard_work(alive, valid_l, block)
                 return (
                     hit, alive, tmask, rmask,
                     jnp.sum(band, axis=1, dtype=jnp.int32)[:, None],
+                    sdist, sblk,
                 )
 
             self._fns[key] = jax.jit(shard_map(
@@ -247,7 +282,7 @@ class ShardedBSSIndex:
                 ),
                 out_specs=(
                     P(None, axes), P(None, axes), P(None, axes),
-                    P(None, axes), P(None, axes),
+                    P(None, axes), P(None, axes), P(axes), P(axes),
                 ),
                 check_rep=False,
             ))
@@ -303,7 +338,8 @@ class ShardedBSSIndex:
                 allidx = jnp.moveaxis(allidx, 0, 1).reshape(nq, -1)
                 neg2, sel = jax.lax.top_k(allneg, k)  # global k smallest
                 cand_idx = jnp.take_along_axis(allidx, sel, axis=1)
-                return cand_idx, -neg2, alive, tmask
+                sdist, sblk = _shard_work(alive, valid_l, block)
+                return cand_idx, -neg2, alive, tmask, sdist, sblk
 
             self._fns[key] = jax.jit(shard_map(
                 local, self.mesh,
@@ -312,7 +348,7 @@ class ShardedBSSIndex:
                 ),
                 out_specs=(
                     P(None, None), P(None, None), P(None, axes),
-                    P(None, axes),
+                    P(None, axes), P(axes), P(axes),
                 ),
                 check_rep=False,
             ))
@@ -371,9 +407,11 @@ class ShardedBSSIndex:
                 allidx = jnp.moveaxis(allidx, 0, 1).reshape(nq, -1)
                 neg2, sel = jax.lax.top_k(allneg, k)
                 cand_idx = jnp.take_along_axis(allidx, sel, axis=1)
+                sdist, sblk = _shard_work(alive, valid_l, block)
                 return (
                     cand_idx, -neg2, alive, tmask, rmask,
                     jnp.sum(band, axis=1, dtype=jnp.int32)[:, None],
+                    sdist, sblk,
                 )
 
             self._fns[key] = jax.jit(shard_map(
@@ -385,6 +423,7 @@ class ShardedBSSIndex:
                 out_specs=(
                     P(None, None), P(None, None), P(None, axes),
                     P(None, axes), P(None, axes), P(None, axes),
+                    P(axes), P(axes),
                 ),
                 check_rep=False,
             ))
@@ -547,6 +586,8 @@ def sharded_query_batched(
         empty = np.zeros((0, index.n_blocks), bool)
         stats = _batched_stats(index, empty, empty)
         stats["n_shards"] = sidx.n_shards
+        stats["shard_dists"] = np.zeros(sidx.n_shards, np.int64)
+        stats["shard_blocks"] = np.zeros(sidx.n_shards, np.int64)
         stats["precision"] = precision
         if precision == "bf16":
             _bf16_stats(stats, index.bf16_margin(), 0, np.zeros(0, np.int64))
@@ -557,7 +598,7 @@ def sharded_query_batched(
     if precision == "bf16":
         eps = index.bf16_margin()
         fn = sidx._range_bf16_fn(metric_eng, backend, bq, interpret)
-        hit, alive, tmask, rmask, band_counts = fn(
+        hit, alive, tmask, rmask, band_counts, sdist, sblk = fn(
             jnp.asarray(queries), jnp.asarray(t_vec), jnp.float32(eps),
             sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
             sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
@@ -565,7 +606,7 @@ def sharded_query_batched(
         )
     else:
         fn = sidx._range_fn(metric_eng, backend, bq, interpret)
-        hit, alive, tmask = fn(
+        hit, alive, tmask, sdist, sblk = fn(
             jnp.asarray(queries), jnp.asarray(t_vec),
             sidx.dev.data, sidx.dev.valid, sidx.dev.boxes,
             sidx.dev.pivots, sidx.dev.pairs, sidx.dev.deltas,
@@ -583,6 +624,11 @@ def sharded_query_batched(
     tmask = np.asarray(tmask)[:, : index.n_blocks]
     stats = _batched_stats(index, alive, tmask)
     stats["n_shards"] = sidx.n_shards
+    # per-shard exact-phase work split (functional jit outputs, one slot
+    # per shard): the shard totals partition the batch's exact-phase
+    # distance sum, so imbalance is read straight off this vector
+    stats["shard_dists"] = np.asarray(sdist, dtype=np.int64)
+    stats["shard_blocks"] = np.asarray(sblk, dtype=np.int64)
     stats["precision"] = precision
     if precision == "bf16":
         _bf16_stats(
@@ -654,6 +700,8 @@ def sharded_knn_batched(
         stats = _knn_empty_stats(index, 0, precision, backend,
                                  engine="sharded")
         stats["n_shards"] = sidx.n_shards
+        stats["shard_dists"] = np.zeros(sidx.n_shards, np.int64)
+        stats["shard_blocks"] = np.zeros(sidx.n_shards, np.int64)
         return (
             np.zeros((0, k), np.int64), np.zeros((0, k), np.float32), stats,
         )
@@ -662,6 +710,8 @@ def sharded_knn_batched(
         stats = _knn_empty_stats(index, nq, precision, backend,
                                  engine="sharded")
         stats["n_shards"] = sidx.n_shards
+        stats["shard_dists"] = np.zeros(sidx.n_shards, np.int64)
+        stats["shard_blocks"] = np.zeros(sidx.n_shards, np.int64)
         return (
             np.full((nq, k), -1, np.int64),
             np.full((nq, k), np.inf, np.float32),
@@ -697,6 +747,11 @@ def sharded_knn_batched(
     valid_pb = _valid_per_block(index)
     total_exact = np.zeros(nq, np.int64)
     excl_pq = np.zeros(nq, np.int64)
+    # per-shard accumulation across rounds: a finished query's radius is
+    # -1 from the round after it completes, so its rows survive no block
+    # and the in-jit shard sums agree with the `upd`-masked host tallies
+    shard_dists = np.zeros(sidx.n_shards, np.int64)
+    shard_blocks = np.zeros(sidx.n_shards, np.int64)
     tiles_total = 0
     recheck_pq = np.zeros(nq, np.int64)
     recheck_tiles_total = 0
@@ -708,7 +763,7 @@ def sharded_knn_batched(
         if rounds == max_rounds + 1:
             radii = np.where(done, radii, np.inf).astype(np.float32)
         if bf16:
-            ci, cd, alive, tmask, rmask, band_counts = round_fn(
+            ci, cd, alive, tmask, rmask, band_counts, sdist, sblk = round_fn(
                 qj, jnp.asarray(radii), jnp.float32(eps), lb_dev,
                 sidx.dev.data, sidx.dev.valid, data16,
             )
@@ -719,9 +774,11 @@ def sharded_knn_batched(
                 ~done, np.asarray(band_counts).sum(axis=1), 0
             )
         else:
-            ci, cd, alive, tmask = round_fn(
+            ci, cd, alive, tmask, sdist, sblk = round_fn(
                 qj, jnp.asarray(radii), lb_dev, sidx.dev.data, sidx.dev.valid,
             )
+        shard_dists += np.asarray(sdist, dtype=np.int64)
+        shard_blocks += np.asarray(sblk, dtype=np.int64)
         ci, cd = np.asarray(ci), np.asarray(cd)
         # real-block columns only: identical to the single-device alive set
         # (padding is only ever admitted by the radius=inf fallback round,
@@ -764,6 +821,8 @@ def sharded_knn_batched(
         "tiles_computed": tiles_total,
         "n_blocks": int(n_blocks),
         "n_shards": sidx.n_shards,
+        "shard_dists": shard_dists,
+        "shard_blocks": shard_blocks,
         "generation": int(index.generation),
         "precision": precision,
         "excluded": {"hilbert": excl_pq},

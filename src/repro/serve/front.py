@@ -108,9 +108,21 @@ from repro.forest import (
 )
 from repro.forest import walk as forest_walk
 from repro.index import maintain as index_maintain
-from repro.obs.fold import fold_engine_stats, fold_mutation, poll_compile
+from repro.obs.fold import (
+    fold_engine_stats,
+    fold_mutation,
+    poll_compile,
+    shard_imbalance as _shard_imbalance,
+)
 from repro.obs.registry import MetricsRegistry
 from repro.obs.spans import Span
+from repro.obs.trace import (
+    TraceBuffer,
+    complete_event,
+    metadata_event,
+    span_events,
+    write_trace,
+)
 from repro.serve.queue import (
     BoundedRequestQueue,
     Request,
@@ -316,6 +328,7 @@ class ServingFront:
         self.metrics_enabled = bool(metrics)
         self.profile_dir = profile_dir
         self._metrics = MetricsRegistry()
+        self._trace = TraceBuffer()
         self._explain: deque[dict] = deque(maxlen=256)
         self._compile_last: dict[str, int] = {}
         if self._engine == "bss":
@@ -559,6 +572,19 @@ class ServingFront:
 
         return jax.profiler.trace(self.profile_dir)
 
+    def _annotate(self, name: str):
+        """Opt-in ``jax.profiler.TraceAnnotation`` around the engine call.
+
+        The annotation name carries the dispatch's span timestamp on the
+        serving clock, so the device-side profile and the host trace
+        (``export_trace``) can be lined up on one timeline even though the
+        profiler keeps its own epoch."""
+        if self.profile_dir is None:
+            return contextlib.nullcontext()
+        import jax
+
+        return jax.profiler.TraceAnnotation(name)
+
     def _dispatch(self, group: list[Request]) -> None:
         """One engine call for one compatible micro-batch: pad to the
         bucket, run the fused path, demux rows to futures."""
@@ -596,7 +622,11 @@ class ServingFront:
         # one EngineOpts per dispatch: the front's base knobs with this
         # group's precision overlaid (precisions never share a batch)
         eng_opts = dataclasses.replace(self.opts, precision=head.precision)
-        with self._profiler():
+        ann = (
+            f"serve/engine kind={head.kind} bucket={bucket} "
+            f"gen={generation} t_dispatch={t_wait:.6f}"
+        )
+        with self._profiler(), self._annotate(ann):
             if head.kind == "range" and self._engine == "bss":
                 t_vec = np.array(
                     [r.t for r in group] + [-1.0] * pad, np.float32
@@ -663,12 +693,18 @@ class ServingFront:
                 # bucket artefact, not precision cost
                 self._n["bf16_rows"] += n
                 self._n["recheck_points"] += int(recheck[:n].sum())
+        trace_evs: list[dict] = []
         for i, r in enumerate(group):
             wait = t_wait - r.t_submit
             durs = None
             if r.span is not None:
                 r.span.mark("demux")
                 durs = r.span.durations()
+                if self.metrics_enabled:
+                    trace_evs.extend(span_events(
+                        r.span, tid=int(r.trace_id[1:]),
+                        args={"kind": r.kind, "generation": generation},
+                    ))
             res = ServeResult(
                 n_dists=int(per_q[i]),
                 n_recheck=0 if recheck is None else int(recheck[i]),
@@ -703,6 +739,15 @@ class ServingFront:
                     "excluded": {m: int(v[i]) for m, v in excluded.items()},
                     "spans": durs,
                 }
+                if "shard_dists" in stats:
+                    # the sharded engine's per-shard split of the batch's
+                    # exact-phase work — batch-level, same for every row
+                    sd = np.asarray(stats["shard_dists"], np.int64)
+                    rec["shard_dists"] = sd.tolist()
+                    rec["shard_blocks"] = np.asarray(
+                        stats["shard_blocks"], np.int64
+                    ).tolist()
+                    rec["shard_imbalance"] = _shard_imbalance(sd)
                 with self._lock:
                     self._explain.append(rec)
             if not self._resolve(r.future, res):
@@ -712,6 +757,26 @@ class ServingFront:
                 self._waits.append(wait)
                 if self._cache is not None and r.cache_key is not None:
                     self._cache.put(r.cache_key, res)
+        if self.metrics_enabled:
+            # one clock for everything: the dispatch's engine-phase slices
+            # land on the driver track (tid 0), each request's stage slices
+            # on its own per-request track — all stamped by `now()`
+            args = {
+                "kind": head.kind, "batch_size": n, "padded_to": bucket,
+                "generation": generation,
+                "engine": str(stats.get("engine", self._engine)),
+                "n_dists": int(per_q[:n].sum()),
+            }
+            trace_evs.extend([
+                complete_event("dispatch/assemble", t_batch,
+                               t_wait - t_batch, tid=0, cat="dispatch",
+                               args=args),
+                complete_event("dispatch/engine", t_wait, engine_s, tid=0,
+                               cat="dispatch", args=args),
+                complete_event("dispatch/demux", t_engine, now() - t_engine,
+                               tid=0, cat="dispatch", args=args),
+            ])
+            self._trace.extend(trace_evs)
 
     # ------------------------------------------------------------ mutations
 
@@ -737,7 +802,20 @@ class ServingFront:
             new_index, mstats = fn(self.index)
             self.index = new_index
         if mstats is not None and self.metrics_enabled:
-            fold_mutation(self._metrics, mstats, seconds=now() - t0)
+            t1 = now()
+            fold_mutation(self._metrics, mstats, seconds=t1 - t0)
+            # mutations share the driver track (tid 0): index maintenance
+            # shows up inline with the dispatches it interleaves with
+            self._trace.add(complete_event(
+                f"mutation/{mstats.op}", t0, t1 - t0, tid=0, cat="mutation",
+                args={
+                    "op": str(mstats.op),
+                    "rows": int(mstats.rows),
+                    "generation": int(mstats.generation),
+                    "n_blocks": int(mstats.n_blocks),
+                    "tombstone_frac": float(mstats.tombstone_frac),
+                },
+            ))
         return mstats
 
     def append(self, rows):
@@ -804,10 +882,16 @@ class ServingFront:
     def explain(self, trace_id: str | None = None) -> dict | None:
         """The per-request explain record for ``trace_id`` (most recent
         request when None): span durations, batch shape, this row's
-        distance charge and per-mechanism exclusion attribution.  Records
-        live in a bounded ring (the last 256 dispatched requests); returns
-        None when the id has aged out, was a cache hit, or metrics are
-        off."""
+        distance charge, per-mechanism exclusion attribution and — on the
+        sharded engine — the batch's per-shard work split.
+
+        Records live in a bounded ring of the last 256 dispatched
+        requests.  Asking for a specific ``trace_id`` that is not in the
+        ring raises ``KeyError`` naming the capacity — the id either aged
+        out, was served from the exact-hit cache (cache hits never
+        dispatch), or the front runs with metrics off.  ``explain()``
+        with no id returns the most recent record, or None when the ring
+        is empty."""
         with self._lock:
             recs = list(self._explain)
         if trace_id is None:
@@ -815,7 +899,29 @@ class ServingFront:
         for rec in reversed(recs):
             if rec["trace_id"] == trace_id:
                 return rec
-        return None
+        raise KeyError(
+            f"no explain record for trace id {trace_id!r}: the ring keeps "
+            f"the last {self._explain.maxlen} dispatched requests, and "
+            f"cache hits / metrics-off requests never enter it"
+        )
+
+    def export_trace(self, path, *, extra: dict | None = None):
+        """Write everything the trace buffer holds (request stage slices,
+        per-dispatch engine phases, mutation slices — one monotonic clock)
+        as Chrome trace-event JSON to ``path``; returns the path.  Load it
+        in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``."""
+        meta = [
+            metadata_event("process_name", "repro-serving"),
+            metadata_event("thread_name", "driver", tid=0),
+        ]
+        other = {
+            "engine": self._engine,
+            "backend": self.backend,
+            "clock": "repro.serve.queue.now (monotonic, seconds*1e6)",
+        }
+        if extra:
+            other.update(extra)
+        return write_trace(path, meta + self._trace.events(), extra=other)
 
     def stats(self) -> dict:
         """Snapshot of the pipeline telemetry (host-side counters only —

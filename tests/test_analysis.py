@@ -52,7 +52,7 @@ def _subprocess_env():
 
 
 def test_rule_registry_complete():
-    assert set(RULES) == {"R1", "R2", "R3", "R4", "R5"}
+    assert set(RULES) == {"R1", "R2", "R3", "R4", "R5", "R6"}
     for rid, rule in RULES.items():
         assert rule.summary, rid
 
@@ -427,6 +427,82 @@ def test_r5_allows_assert_in_tests(tmp_path):
             assert 1 + 1 == 2
         """})
     assert v == []
+
+
+# ---------------------------------------------------------------------------
+# R6: unregistered metric names
+# ---------------------------------------------------------------------------
+
+
+_R6_SCHEMA = """\
+    METRIC_NAMES = {
+        "engine/queries",
+        "serve/cache_hits",
+    }
+    """
+
+
+def test_r6_flags_unregistered_metric_name(tmp_path):
+    v = run_lint(tmp_path, {
+        "src/repro/obs/schema.py": _R6_SCHEMA,
+        "src/repro/x.py": """\
+        def fold(reg):
+            reg.counter("engine/queries").inc()
+            reg.gauge("engine/typo_rate").set(1.0)
+            reg.histogram("serve/cache_hits").observe(2)
+        """,
+    })
+    assert [(x.rule, x.line) for x in v] == [("R6", 3)]
+    assert "engine/typo_rate" in v[0].message
+
+
+def test_r6_skips_non_literal_and_non_src(tmp_path):
+    v = run_lint(tmp_path, {
+        "src/repro/obs/schema.py": _R6_SCHEMA,
+        # dynamic names can't be checked statically; tests/ are exempt
+        "src/repro/y.py": """\
+        def fold(reg, name):
+            reg.counter(name).inc()
+        """,
+        "tests/test_y.py": """\
+        def test_fold(reg):
+            reg.counter("made/up_name").inc()
+        """,
+    })
+    assert v == []
+
+
+def test_r6_disabled_without_schema_file(tmp_path):
+    v = run_lint(tmp_path, {"src/repro/z.py": """\
+        def fold(reg):
+            reg.counter("any/name").inc()
+        """})
+    assert v == []
+
+
+def test_r6_honors_inline_disable(tmp_path):
+    v = run_lint(tmp_path, {
+        "src/repro/obs/schema.py": _R6_SCHEMA,
+        "src/repro/w.py": """\
+        def fold(reg):
+            reg.counter("scratch/dev_only").inc()  # lint: disable=R6
+        """,
+    })
+    assert v == []
+
+
+def test_r6_head_schema_covers_every_registered_name():
+    # the real repo's METRIC_NAMES must cover every literal registration
+    # in src/ — this is what the CI gate enforces
+    from repro.analysis.lint import _Linter
+
+    linter = _Linter(REPO_ROOT, EMPTY)
+    linter.load(dirs=("src",))
+    names = linter._metric_names()
+    assert names is not None and "engine/queries" in names
+    for fi in linter.files.values():
+        linter.check_r6(fi)
+    assert [v for v in linter.violations if v.rule == "R6"] == []
 
 
 # ---------------------------------------------------------------------------

@@ -22,18 +22,30 @@ from repro.core.backends import EngineOpts, jit_cache_size
 from repro.core.npdist import pairwise_np
 from repro.forest import encode_tree, forest_range_search
 from repro.obs import (
+    DEFAULT_LADDER,
     MECHANISMS,
+    METRIC_NAMES,
     MetricsRegistry,
     Span,
+    TraceBuffer,
     check_stats,
+    complete_event,
     fold_engine_stats,
+    instant_event,
+    ladder_for,
+    load_trace,
+    log_ladder,
+    metadata_event,
     metric_key,
     new_trace_id,
     parse_prometheus,
     poll_compile,
+    shard_imbalance,
     validate_exposition,
     validate_stats,
+    validate_trace,
     write_snapshot,
+    write_trace,
 )
 from repro.serve.front import ServingFront
 
@@ -136,11 +148,17 @@ def test_snapshot_and_prometheus_round_trip():
     ]
     assert by_name["serve_engine_s_count"][0][1] == 2.0
     assert by_name["serve_engine_s_sum"][0][1] == 1.0
-    quantiles = {
-        lbl["quantile"] for lbl, _ in by_name["serve_engine_s"]
-    }
-    assert quantiles == {"0.5", "0.95", "0.99"}
+    # real cumulative buckets: monotone counts over the le ladder ending
+    # at +Inf == _count (0.25 and 0.75 land in adjacent seconds buckets)
+    buckets = by_name["serve_engine_s_bucket"]
+    counts = [v for _, v in buckets]
+    assert counts == sorted(counts) and counts[-1] == 2.0
+    by_le = {lbl["le"]: v for lbl, v in buckets}
+    assert by_le["+Inf"] == 2.0
+    assert by_le["0.1"] == 0.0
+    assert by_le["0.316227766"] == 1.0 and by_le["1"] == 2.0
     assert "# TYPE engine_dists counter" in text
+    assert "# TYPE serve_engine_s histogram" in text
 
 
 def test_prometheus_label_escaping_parses_back():
@@ -148,6 +166,29 @@ def test_prometheus_label_escaping_parses_back():
     reg.counter("m", path='a"b\\c').inc(1)
     samples = parse_prometheus(reg.to_prometheus())
     assert samples[0][1] == {"path": 'a"b\\c'}
+
+
+def test_prometheus_malformed_label_values_round_trip():
+    """Text-format spec escapes: backslash, double-quote AND newline must
+    survive exposition -> parse, including the adversarial ``\\n``
+    (escaped backslash followed by a literal n), which a sequential
+    str.replace unescaper corrupts into a newline."""
+    nasty = {
+        "newline": "a\nb",
+        "backslash_n": "a\\nb",   # literal backslash + 'n', NOT a newline
+        "mixed": 'q"\\\n"end',
+    }
+    reg = MetricsRegistry()
+    for key, val in nasty.items():
+        reg.counter("m", which=key, v=val).inc(1)
+    text = reg.to_prometheus()
+    assert validate_exposition(text) == []
+    got = {lbl["which"]: lbl["v"] for _, lbl, _ in parse_prometheus(text)}
+    assert got == nasty
+    # every exposition line is a single sample line (newlines escaped)
+    assert all(
+        line.startswith(("#", "m{")) for line in text.strip().splitlines()
+    )
 
 
 def test_parse_prometheus_rejects_malformed():
@@ -423,9 +464,11 @@ def test_front_spans_and_explain():
                                 "total"}
         assert all(v >= 0.0 for v in r.spans.values())
         assert r.spans["total"] >= r.spans["engine"]
-    # cache hits keep their own trace but never reach the engine
+    # cache hits keep their own trace but never reach the engine: asking
+    # for their id is a KeyError naming the ring capacity
     assert hit.cache_hit and hit.trace_id not in ids
-    assert front.explain(hit.trace_id) is None
+    with pytest.raises(KeyError, match="last 256 dispatched"):
+        front.explain(hit.trace_id)
 
     assert rec is not None and rec["trace_id"] == res[2].trace_id
     assert rec["kind"] == "range" and rec["n_dists"] == res[2].n_dists
@@ -516,3 +559,218 @@ def test_retrieval_server_folds_metrics():
     assert c["engine/queries{engine=bss,kind=range}"] == 4.0
     assert c["engine/queries{engine=bss,kind=knn}"] == 4.0
     assert srv.metrics.snapshot()["histograms"]["serve/call_s"]["count"] == 2
+
+
+# ----------------------------------------------------------------- buckets
+
+
+def test_log_ladder_shape_and_overrides():
+    lad = log_ladder(1e-2, 1e2, per_decade=2)
+    assert lad[0] == pytest.approx(1e-2) and lad[-1] == pytest.approx(1e2)
+    assert all(a < b for a, b in zip(lad, lad[1:]))
+    assert len(lad) == 9  # 4 decades x 2 + endpoint
+    # per-metric overrides resolve; unknown names get the default ladder
+    assert ladder_for("serve/engine_s") != DEFAULT_LADDER
+    assert ladder_for("serve/batch_size") == (1, 2, 4, 8, 16, 32, 64, 128,
+                                              256)
+    assert ladder_for("not/a_metric") == DEFAULT_LADDER
+    with pytest.raises(ValueError, match="lo < hi"):
+        log_ladder(10.0, 1.0)
+
+
+def test_histogram_cumulative_buckets():
+    reg = MetricsRegistry()
+    h = reg.histogram("h", buckets=(1.0, 10.0, 100.0))
+    for v in (0.5, 5.0, 50.0, 500.0, 10.0):  # 10.0 on the boundary: le
+        h.observe(v)
+    bc = h.bucket_counts()
+    assert [le for le, _ in bc] == [1.0, 10.0, 100.0, float("inf")]
+    assert [c for _, c in bc] == [1, 3, 4, 5]
+    assert h.summary()["buckets"] == {"1": 1, "10": 3, "100": 4, "+Inf": 5}
+    # same series again is fine; a DIFFERENT ladder for the same series is
+    # a registration error, as is a malformed ladder
+    assert reg.histogram("h", buckets=(1.0, 10.0, 100.0)) is h
+    with pytest.raises(ValueError, match="buckets"):
+        reg.histogram("h", buckets=(1.0, 2.0))
+    with pytest.raises(ValueError, match="strictly increase"):
+        reg.histogram("h2", buckets=(3.0, 2.0))
+
+
+def test_validate_exposition_catches_broken_histogram():
+    reg = MetricsRegistry()
+    reg.histogram("serve/engine_s", kind="x").observe(0.2)
+    good = reg.to_prometheus()
+    assert validate_exposition(good) == []
+    # non-cumulative bucket counts must be flagged
+    broken = good.replace(
+        'serve_engine_s_bucket{kind="x",le="+Inf"} 1',
+        'serve_engine_s_bucket{kind="x",le="+Inf"} 0',
+    )
+    assert broken != good
+    assert any("cumulative" in p or "+Inf" in p
+               for p in validate_exposition(broken))
+    # a histogram family without its +Inf bucket is invalid
+    lines = [ln for ln in good.splitlines() if 'le="+Inf"' not in ln]
+    assert any("+Inf" in p for p in validate_exposition("\n".join(lines)))
+
+
+# ------------------------------------------------ shard-imbalance telemetry
+
+
+def test_shard_imbalance_units():
+    assert shard_imbalance([]) == 1.0
+    assert shard_imbalance([0, 0, 0]) == 1.0
+    assert shard_imbalance([5, 5, 5, 5]) == 1.0
+    assert shard_imbalance([12, 0, 0, 0]) == 4.0
+    assert shard_imbalance(np.array([3, 1])) == pytest.approx(1.5)
+
+
+def test_fold_shard_telemetry():
+    reg = MetricsRegistry()
+    stats = {
+        "engine": "sharded", "kind": "range", "n_queries": 2,
+        "per_query_dists": np.array([5, 7], np.int64),
+        "dists_per_query": 6.0, "excluded": {},
+        "shard_dists": np.array([9, 3], np.int64),
+        "shard_blocks": np.array([2, 1], np.int64),
+    }
+    fold_engine_stats(reg, stats)
+    snap = reg.snapshot()
+    c = snap["counters"]
+    assert c["shard/dists{engine=sharded,kind=range,shard=0}"] == 9.0
+    assert c["shard/dists{engine=sharded,kind=range,shard=1}"] == 3.0
+    assert c["shard/blocks{engine=sharded,kind=range,shard=0}"] == 2.0
+    g = snap["gauges"]["shard/imbalance{engine=sharded,kind=range}"]
+    assert g == pytest.approx(shard_imbalance([9, 3])) == pytest.approx(1.5)
+    assert "shard/imbalance" in reg.render()
+    # single-device stats without the shard split fold nothing shard-wise
+    reg2 = MetricsRegistry()
+    fold_engine_stats(reg2, {k: v for k, v in stats.items()
+                             if not k.startswith("shard_")})
+    assert not any(k.startswith("shard/")
+                   for k in reg2.snapshot()["counters"])
+
+
+def test_metric_names_schema_is_complete():
+    # every name the obs layer itself registers is in the R6 namespace
+    for name in ("engine/dists", "shard/imbalance", "serve/span_s",
+                 "index/mutation_s", "compile/recompiles"):
+        assert name in METRIC_NAMES
+
+
+# ------------------------------------------------------- trace-event export
+
+
+def test_trace_event_round_trip(tmp_path):
+    evs = [
+        complete_event("phase", 1.0, 0.5, tid=3, args={"k": 1}),
+        instant_event("ping", 2.0, tid=3),
+        metadata_event("thread_name", "req t000003", tid=3),
+    ]
+    p = write_trace(tmp_path / "t.json", evs, extra={"note": "unit"})
+    payload = load_trace(p)
+    assert validate_trace(payload) == []
+    got = payload["traceEvents"]
+    # metadata events sort first; ts/dur are microseconds on one clock
+    assert got[0]["ph"] == "M"
+    x = [e for e in got if e["ph"] == "X"][0]
+    assert x["ts"] == pytest.approx(1.0e6) and x["dur"] == pytest.approx(5e5)
+    assert payload["otherData"]["note"] == "unit"
+    # negative duration is clamped, never emitted
+    assert complete_event("x", 5.0, -1.0, tid=0)["dur"] == 0
+
+
+def test_trace_buffer_is_a_ring():
+    buf = TraceBuffer(capacity=3)
+    buf.extend(instant_event(f"e{i}", float(i), tid=0) for i in range(5))
+    names = [e["name"] for e in buf.events()]
+    assert names == ["e2", "e3", "e4"] and len(buf) == 3
+
+
+def test_validate_trace_flags_problems():
+    assert validate_trace({"nope": 1})
+    bad = {"traceEvents": [
+        {"ph": "Z", "name": "x", "pid": 1, "tid": 0, "ts": 0.0},
+        {"ph": "X", "pid": 1, "tid": 0, "ts": 0.0, "dur": 1.0},
+        {"ph": "X", "name": "y", "pid": 1, "tid": 0, "ts": float("nan"),
+         "dur": 1.0},
+    ]}
+    problems = validate_trace(bad)
+    assert len(problems) >= 3
+
+
+def test_front_trace_export_end_to_end(tmp_path):
+    """The tentpole acceptance: a serving run (with ``profile_dir=``, so
+    engine dispatches are also wrapped in jax-profiler annotations)
+    exports a Perfetto-loadable trace holding the admit->demux request
+    spans, the driver's dispatch phase slices, and the index mutation
+    events — all on the one serving clock."""
+    idx, db, q, t = _bss_built()
+    prof = tmp_path / "prof"
+    with ServingFront(idx, buckets=(8,), max_delay_s=0.01, cache_size=4,
+                      profile_dir=str(prof)) as front:
+        r1 = front.submit(q[0], "range", t=t).result(timeout=120)
+        ms = front.append(_space("l2", 64, seed=6))
+        r2 = front.submit(q[1], "knn", k=3).result(timeout=120)
+        front.compact()
+        r3 = front.submit(q[2], "range", t=t).result(timeout=120)
+        path = front.export_trace(tmp_path / "trace.json")
+
+    payload = load_trace(path)
+    assert validate_trace(payload) == []
+    evs = payload["traceEvents"]
+    names = {e["name"] for e in evs}
+    assert {"queue", "batch", "engine", "demux"} <= names
+    assert {"dispatch/assemble", "dispatch/engine", "dispatch/demux"} \
+        <= names
+    assert {"mutation/append", "mutation/compact"} <= names
+    assert payload["otherData"]["engine"] == "bss"
+    assert ms.generation == 1
+
+    # each request rides its own tid track with the four stage slices
+    for r in (r1, r2, r3):
+        tid = int(r.trace_id[1:])
+        mine = {e["name"] for e in evs
+                if e.get("tid") == tid and e["ph"] == "X"}
+        assert mine == {"queue", "batch", "engine", "demux"}, r.trace_id
+    # one clock: r1 finished before the append started, which finished
+    # before r2 was admitted — event timestamps must agree on that order
+    append_ev = next(e for e in evs if e["name"] == "mutation/append")
+    r1_demux = next(e for e in evs if e["name"] == "demux"
+                    and e["tid"] == int(r1.trace_id[1:]))
+    r2_queue = next(e for e in evs if e["name"] == "queue"
+                    and e["tid"] == int(r2.trace_id[1:]))
+    assert r1_demux["ts"] + r1_demux["dur"] <= append_ev["ts"] + 1.0
+    assert append_ev["ts"] + append_ev["dur"] <= r2_queue["ts"] + 1.0
+    # the jax profiler actually ran around the dispatches
+    assert prof.exists() and any(prof.rglob("*"))
+
+
+def test_explain_and_spans_survive_generation_swap():
+    """Trace ids and explain records must survive living-corpus mutations:
+    a request dispatched on generation g keeps its record (stamped with g)
+    after appends and compactions have swapped the index under the
+    front."""
+    idx, db, q, t = _bss_built()
+    with ServingFront(idx, buckets=(8,), max_delay_s=0.01) as front:
+        r1 = front.submit(q[0], "range", t=t).result(timeout=120)
+        front.append(_space("l2", 96, seed=16))          # gen 0 -> 1
+        r2 = front.submit(q[1], "range", t=t).result(timeout=120)
+        front.compact()                                  # gen 1 -> 2
+        r3 = front.submit(q[2], "knn", k=3).result(timeout=120)
+        recs = {r.trace_id: front.explain(r.trace_id)
+                for r in (r1, r2, r3)}
+        trace_evs = front._trace.events()
+
+    assert [recs[r.trace_id]["generation"] for r in (r1, r2, r3)] \
+        == [0, 1, 2]
+    for r in (r1, r2, r3):
+        rec = recs[r.trace_id]
+        assert rec["trace_id"] == r.trace_id
+        assert rec["n_dists"] == r.n_dists
+        assert set(rec["spans"]) >= {"queue", "engine", "total"}
+        # the span slices for every request are still in the trace buffer
+        tids = {e.get("tid") for e in trace_evs}
+        assert int(r.trace_id[1:]) in tids
+    # generation swaps were real: results were served on three snapshots
+    assert (r1.generation, r2.generation, r3.generation) == (0, 1, 2)

@@ -1,0 +1,181 @@
+"""Regression-sentinel semantics (benchmarks/regress.py).
+
+The sentinel's one job: fail CI on a real slowdown, never on timer noise.
+These tests pin the comparison semantics on synthetic trajectories — a 2x
+slowdown fails, a vanished row fails, ordinary jitter passes, cross-host
+baselines get relaxed wall-clock slack — and check the normalisers
+against miniature BENCH payloads plus the committed baseline itself.
+"""
+
+from __future__ import annotations
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.regress import (
+    BASELINE_PATH,
+    TRAJECTORY_SCHEMA,
+    collect,
+    compare,
+    delta_table,
+    failures,
+    median_of,
+    normalise_payload,
+    _row,
+)
+
+HOST = {"platform": "test", "cpu_count": 4}
+
+
+def _traj(rows, host=HOST):
+    return {"schema": TRAJECTORY_SCHEMA, "host": dict(host),
+            "sources": ["synthetic"], "rows": rows}
+
+
+def _base():
+    return _traj({
+        "a/us_per_query": _row(1000.0, "us", "time"),
+        "a/dists_per_query": _row(2000.0, "count", "work"),
+        "a/exact": _row(True, "bool", "flag", better="higher"),
+        "b/goodput_rps": _row(1000.0, "rps", "throughput", better="higher"),
+        "c/bytes_ratio": _row(0.55, "ratio", "ratio"),
+    })
+
+
+def test_identical_trajectories_pass():
+    t = _base()
+    deltas = compare(t, t)
+    assert failures(deltas) == []
+    assert all(d["status"] == "ok" for d in deltas)
+
+
+def test_two_x_slowdown_fails():
+    base, cur = _base(), _base()
+    cur["rows"]["a/us_per_query"]["value"] *= 2.0
+    bad = failures(compare(base, cur))
+    assert [d["name"] for d in bad] == ["a/us_per_query"]
+    assert bad[0]["status"] == "REGRESSION"
+    assert "REGRESSION" in delta_table(compare(base, cur))
+
+
+def test_jitter_within_slack_passes():
+    base, cur = _base(), _base()
+    cur["rows"]["a/us_per_query"]["value"] *= 1.4       # < 1.75x rel slack
+    cur["rows"]["b/goodput_rps"]["value"] /= 1.3
+    cur["rows"]["c/bytes_ratio"]["value"] *= 1.1
+    assert failures(compare(base, cur)) == []
+
+
+def test_absolute_floor_protects_tiny_times():
+    # 3x on a 20us row is under the 100us absolute floor: noise, not a
+    # regression; the same ratio at 1000us is real
+    base = _traj({"t": _row(20.0, "us", "time")})
+    cur = _traj({"t": _row(60.0, "us", "time")})
+    assert failures(compare(base, cur)) == []
+    big_b = _traj({"t": _row(1000.0, "us", "time")})
+    big_c = _traj({"t": _row(3000.0, "us", "time")})
+    assert failures(compare(big_b, big_c))
+
+
+def test_work_counts_are_tight():
+    base, cur = _base(), _base()
+    cur["rows"]["a/dists_per_query"]["value"] *= 1.10   # >5% more work
+    assert failures(compare(base, cur))
+
+
+def test_flag_regression_fails():
+    base, cur = _base(), _base()
+    cur["rows"]["a/exact"]["value"] = 0.0
+    bad = failures(compare(base, cur))
+    assert [d["name"] for d in bad] == ["a/exact"]
+
+
+def test_missing_row_fails_new_row_passes():
+    base, cur = _base(), _base()
+    del cur["rows"]["c/bytes_ratio"]
+    cur["rows"]["d/new_metric"] = _row(1.0, "count", "work")
+    deltas = compare(base, cur)
+    by = {d["name"]: d["status"] for d in deltas}
+    assert by["c/bytes_ratio"] == "MISSING"
+    assert by["d/new_metric"] == "new"
+    assert len(failures(deltas)) == 1
+
+
+def test_cross_host_relaxes_wall_clock_only():
+    base = _base()
+    cur = copy.deepcopy(_base())
+    cur["host"] = {"platform": "other", "cpu_count": 96}
+    cur["rows"]["a/us_per_query"]["value"] *= 2.5   # < 1.75*2 cross-host
+    assert failures(compare(base, cur)) == []
+    # work counts stay tight across hosts (deterministic given the seed)
+    cur["rows"]["a/dists_per_query"]["value"] *= 1.10
+    assert failures(compare(base, cur))
+
+
+def test_schema_mismatch_rejected():
+    base = _base()
+    base["schema"] = 999
+    with pytest.raises(ValueError, match="rebase"):
+        compare(base, _base())
+
+
+def test_median_of_runs():
+    runs = []
+    for v in (100.0, 500.0, 110.0):
+        t = _base()
+        t["rows"]["a/us_per_query"]["value"] = v
+        runs.append(t)
+    med = median_of(runs)
+    assert med["rows"]["a/us_per_query"]["value"] == 110.0  # outlier gone
+    assert med["runs"] == 3
+
+
+def test_normalise_bss_metrics_payload():
+    payload = {
+        "bench": "bss_metrics",
+        "metrics": {"l2": {
+            "range": {"exact": True, "dists_per_query": 2911.0,
+                      "us_per_query": 40.2, "tile_exclusion_rate": 0.0},
+            "knn": {"k": 10, "exact": True, "rounds": 5,
+                    "dists_per_query": 7127.0, "us_per_query": 132.8},
+        }},
+    }
+    rows = normalise_payload(payload)
+    assert rows["bss/l2/range/us_per_query"]["class"] == "time"
+    assert rows["bss/l2/knn/rounds"]["class"] == "work"
+    assert rows["bss/l2/range/exact"]["better"] == "higher"
+
+
+def test_normalise_serving_payload_positional_rates():
+    payload = {
+        "workload": {"sync_service_ms": 1.3},
+        "rates": [
+            {"async": {"p95_ms": 10.0, "goodput_rps": 400.0}},
+            {"async": {"p95_ms": 35.0, "goodput_rps": 1100.0}},
+            {"async": {"p95_ms": 15.0, "goodput_rps": 2200.0}},
+        ],
+    }
+    rows = normalise_payload(payload)
+    assert rows["serving/under/async_p95_ms"]["value"] == 10.0
+    assert rows["serving/overload/async_goodput_rps"]["better"] == "higher"
+    assert normalise_payload({"bench": "unknown_thing"}) == {}
+
+
+def test_collect_rejects_duplicate_rows(tmp_path):
+    payload = {"bench": "bss_incremental", "append": {"rows_per_s": 1.0}}
+    for name in ("BENCH_a.json", "BENCH_b.json"):
+        (tmp_path / name).write_text(json.dumps(payload))
+    with pytest.raises(ValueError, match="duplicate"):
+        collect(sorted(tmp_path.glob("BENCH_*.json")))
+
+
+def test_committed_baseline_is_a_valid_trajectory():
+    baseline = json.loads(BASELINE_PATH.read_text())
+    assert baseline["schema"] == TRAJECTORY_SCHEMA
+    assert baseline["rows"], "baseline must not be empty"
+    for name, r in baseline["rows"].items():
+        assert set(r) == {"value", "unit", "class", "better"}, name
+    # comparing the baseline to itself is clean by construction
+    assert failures(compare(baseline, baseline)) == []

@@ -47,6 +47,14 @@ def test_single_shard_mesh_and_delegation():
     assert ks["n_shards"] == 1
     for i in range(len(q)):
         assert set(ki[i].tolist()) == set(truth[i].tolist())
+    # shard telemetry rides the stats as functional outputs: one slot per
+    # shard, summing to the batch's exact-phase work (per_query_dists
+    # minus the n_pivots pivot evaluations each query always pays)
+    for st_ in (st, ks):
+        sd = np.asarray(st_["shard_dists"])
+        assert sd.shape == (1,) and np.asarray(st_["shard_blocks"]).shape == (1,)
+        exact = int(np.asarray(st_["per_query_dists"]).sum()) - len(q) * 8
+        assert int(sd.sum()) == exact
 
 
 def test_mesh_without_data_axis_rejected():
@@ -225,6 +233,49 @@ _EDGES = _COMMON + """
     print("SHARDED_EDGES_OK")
 """
 
+# Shard telemetry: the per-shard exact-phase work split (functional jit
+# outputs) must sum EXACTLY to the batch's counted exact-phase distance
+# evaluations on a real multi-device mesh, for range and kNN, and fold
+# into per-shard counters plus the max/mean imbalance gauge.
+_TELEMETRY = _COMMON + """
+    from repro.obs import MetricsRegistry, fold_engine_stats, shard_imbalance
+
+    NPIV = 8
+    data = space("l2", 723, 12, seed=700)
+    db, q = data[:700], data[700:]
+    idx = flat_index.build_bss("l2", db, n_pivots=NPIV, n_pairs=10,
+                               block=64, seed=1)
+    t = snap(pairwise_np("l2", q, db), 0.02)
+    mesh = Mesh(np.array(devs[:4]), ("data",))
+    sidx = ShardedBSSIndex(idx, mesh)
+
+    hits, st = sharded_query_batched(sidx, q, t, opts=JNP)
+    sd = np.asarray(st["shard_dists"]); sb = np.asarray(st["shard_blocks"])
+    assert sd.shape == (4,) and sb.shape == (4,)
+    exact_total = int(np.asarray(st["per_query_dists"]).sum()) - len(q) * NPIV
+    assert int(sd.sum()) == exact_total, (int(sd.sum()), exact_total)
+    assert (sd >= 0).all() and (sb >= 0).all() and int(sb.sum()) > 0
+
+    ki, kd, kst = sharded_knn_batched(sidx, q, 6, opts=JNP)
+    ksd = np.asarray(kst["shard_dists"])
+    k_total = int(np.asarray(kst["per_query_dists"]).sum()) - len(q) * NPIV
+    assert int(ksd.sum()) == k_total, (int(ksd.sum()), k_total)
+
+    reg = MetricsRegistry()
+    fold_engine_stats(reg, st)
+    snap_ = reg.snapshot()
+    c = snap_["counters"]
+    for i in range(4):
+        key = "shard/dists{engine=sharded,kind=range,shard=%d}" % i
+        assert c[key] == float(sd[i]), key
+        bkey = "shard/blocks{engine=sharded,kind=range,shard=%d}" % i
+        assert c[bkey] == float(sb[i]), bkey
+    g = snap_["gauges"]["shard/imbalance{engine=sharded,kind=range}"]
+    assert g == shard_imbalance(sd) and g >= 1.0
+    assert "shard/imbalance" in reg.render()
+    print("SHARDED_TELEMETRY_OK")
+"""
+
 # Serving integration: RetrievalServer(mesh=...) range + top_k equal the
 # meshless server and the float64 oracle.
 _SERVER = _COMMON + """
@@ -269,6 +320,13 @@ def test_sharded_pallas_interpret():
 def test_sharded_edge_cases():
     out = run_simulated_mesh(_EDGES, 8)
     assert "SHARDED_EDGES_OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+@pytest.mark.slow
+def test_sharded_shard_telemetry():
+    out = run_simulated_mesh(_TELEMETRY, 4)
+    assert "SHARDED_TELEMETRY_OK" in out.stdout, \
+        out.stdout + "\n" + out.stderr
 
 
 @pytest.mark.slow
